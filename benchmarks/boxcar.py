@@ -1,0 +1,39 @@
+"""Figs. 10–13: boxcar-window estimation (aliasing + Nelder–Mead fit).
+
+Reproduces the paper's three representative devices: GTX1080Ti-class
+(10/20), A100 (25/100) and RTX 3090 (100/100), reporting the estimate
+distribution like Fig. 13's violins.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import microbench, profiles
+from repro.core.sensor import OnboardSensor
+
+
+def run() -> None:
+    for name, truth_ms in (("v100", 10.0), ("a100", 25.0),
+                           ("rtx3090_instant", 100.0)):
+        prof = profiles.get(name)
+        s = OnboardSensor(prof, seed=21)
+        est, samples = microbench.estimate_boxcar_window(
+            s, prof.update_period_s, repetitions=12, seed=4)
+        emit(f"fig13_boxcar/{name}", 0.0,
+             f"est_ms={est*1e3:.1f};truth_ms={truth_ms};"
+             f"std_ms={float(np.std(samples))*1e3:.2f};n={len(samples)}")
+    us = timeit(lambda: microbench.estimate_boxcar_window(
+        OnboardSensor(profiles.get("a100"), seed=2), 0.1,
+        repetitions=2, seed=2), n=1)
+    emit("fig11_boxcar/runtime_2reps", us, "")
+    # headline: sampled fraction per device class (Fig. 14 summary)
+    for name in ("a100", "h100_instant", "v100", "rtx3090_instant",
+                 "gh200_gpu", "gh200_cpu"):
+        p = profiles.get(name)
+        emit(f"fig14_sampled_fraction/{name}", 0.0,
+             f"fraction={p.sampled_fraction:.2f}")
+
+
+if __name__ == "__main__":
+    run()

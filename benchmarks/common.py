@@ -1,0 +1,18 @@
+"""Shared benchmark utilities: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Iterable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn: Callable, n: int = 3) -> float:
+    fn()   # warmup
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6

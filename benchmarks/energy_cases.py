@@ -1,0 +1,54 @@
+"""Figs. 15–17: repetition count vs energy-measurement error for the three
+window/period classes (W==T, W>T, W<T), naive vs corrected."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import load as loads
+from repro.core import profiles
+from repro.core.calibrate import CalibrationRecord
+from repro.core.meter import (GoodPracticeConfig, Workload,
+                              measure_good_practice, measure_naive)
+from repro.core.sensor import OnboardSensor
+
+CASES = [
+    ("case1_100_100", "rtx3090_instant", 0.100, 0.25),
+    ("case2_1000_100", "rtx3090_average", 1.000, 1.25),
+    ("case3_25_100", "a100", 0.025, 0.25),
+]
+# short / medium / long loads: 25 %, 100 %, 800 % of the update period
+LOADS = [("short", 0.025), ("medium", 0.100), ("long", 0.800)]
+
+
+def run() -> None:
+    for case, prof_name, W, rise in CASES:
+        prof = profiles.get(prof_name)
+        calib = CalibrationRecord(
+            "bench", prof_name, prof.update_period_s, W,
+            "instant" if W <= prof.update_period_s else "linear", rise,
+            sampled_fraction=min(1.0, W / prof.update_period_s))
+        for load_name, dur in LOADS:
+            wl = Workload(load_name, loads.multi_phase_workload(
+                [(dur * 0.5, 235.0), (dur * 0.5, 150.0)]))
+            truth = wl.true_energy_j
+            naive_errs, gp_errs = [], []
+            for seed in range(4):
+                s = OnboardSensor(prof, seed=900 + seed)
+                naive_errs.append(
+                    (measure_naive(s, wl,
+                                   start_offset_s=0.3 + seed * 0.041)
+                     - truth) / truth)
+                s2 = OnboardSensor(prof, seed=900 + seed)
+                est = measure_good_practice(s2, wl, calib,
+                                            GoodPracticeConfig(n_trials=2),
+                                            seed=seed)
+                gp_errs.append(est.error_vs(truth))
+            emit(f"fig15to17_energy/{case}/{load_name}", 0.0,
+                 f"naive_err_pct={np.mean(np.abs(naive_errs))*100:.1f};"
+                 f"gp_err_pct={np.mean(np.abs(gp_errs))*100:.1f};"
+                 f"gp_std_pct={np.std(gp_errs)*100:.2f}")
+
+
+if __name__ == "__main__":
+    run()

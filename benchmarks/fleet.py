@@ -1,0 +1,31 @@
+"""Data-centre projection + fleet telemetry (the paper's $1M/yr headline
+and the 1/√N vs worst-case uncertainty scaling)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.ledger import EnergyLedger
+from repro.core.telemetry import FleetLedger, datacenter_projection
+
+
+def run() -> None:
+    proj = datacenter_projection(n_gpus=10_000, tdp_w=700.0, gain_tol=0.05)
+    emit("headline_datacenter/10k_h100", 0.0,
+         f"per_gpu_err_w={proj['per_gpu_err_w']:.0f};"
+         f"annual_err_usd={proj['annual_err_usd']:.0f}")
+
+    fleet = FleetLedger()
+    for i in range(256):
+        led = EnergyLedger(device_id=f"chip{i}")
+        for s in range(20):
+            led.append(s, s * 1.0, s + 1.0, 205.0, 200.0, 10.0)
+        fleet.register(led)
+    s = fleet.summary()
+    emit("fleet_telemetry/pod256", 0.0,
+         f"total_kwh={s.kwh:.4f};sigma_ind_pct="
+         f"{s.sigma_independent_j/s.total_j*100:.2f};sigma_wc_pct="
+         f"{s.sigma_worstcase_j/s.total_j*100:.2f};"
+         f"mean_power_w={s.mean_power_w:.0f}")
+
+
+if __name__ == "__main__":
+    run()

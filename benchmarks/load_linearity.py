@@ -1,0 +1,52 @@
+"""Fig. 5: benchmark-load duration is linear in chain length (R² ≈ 1.000).
+
+Runs the actual Pallas fma_chain kernel (XLA path on CPU; interpret-mode
+correctness is covered in tests) and fits duration vs iterations.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def run() -> None:
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096, 128), jnp.float32)
+
+    @jax.jit
+    def chain(x, n):
+        def body(_, v):
+            v = v * 2.0 + 2.0
+            return v * 0.5 - 1.0
+        return jax.lax.fori_loop(0, n, body, x)
+
+    ns = [256, 512, 1024, 2048, 4096]
+    times = []
+    for n in ns:
+        chain(x, n).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            chain(x, n).block_until_ready()
+        times.append((time.perf_counter() - t0) / 3)
+    coef = np.polyfit(ns, times, 1)
+    pred = np.polyval(coef, ns)
+    ss_res = float(np.sum((np.asarray(times) - pred) ** 2))
+    ss_tot = float(np.sum((np.asarray(times) - np.mean(times)) ** 2))
+    r2 = 1 - ss_res / ss_tot
+    emit("fig5_load_linearity/fit", times[-1] * 1e6,
+         f"r2={r2:.4f};slope_us_per_iter={coef[0]*1e6:.4f};"
+         f"iters={'/'.join(map(str, ns))}")
+
+    # amplitude control: fraction of active grid slots (paper: SM fraction)
+    from repro.core.load import amplitude_for_fraction
+    for frac in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0):
+        emit(f"fig8_amplitude/frac_{int(frac*100)}", 0.0,
+             f"watts={amplitude_for_fraction(frac):.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""§6 (GH200): the `instant` option reads the whole module — CPU activity
+bleeds into "GPU" power; the framework's scope guard + baseline
+subtraction recovers chip-level energy."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import load as loads
+from repro.core import profiles
+from repro.core.meter import ModuleScopeError, Workload, measure_naive
+from repro.core.sensor import OnboardSensor
+
+
+def run() -> None:
+    gpu_wl = Workload("gpu_burst", loads.workload_burst(0.500, 210.0))
+    cpu_tl = loads.workload_burst(0.500, 120.0, idle_w=80.0)
+
+    # chip-scope sensor: unaffected by host activity
+    s_chip = OnboardSensor(profiles.get("gh200_gpu"), seed=1)
+    e_chip = measure_naive(s_chip, gpu_wl)
+
+    # module-scope sensor with concurrent CPU load
+    s_mod = OnboardSensor(profiles.get("gh200_module_instant"), seed=1,
+                          host_timeline=cpu_tl.shift(0.3))
+    guarded = False
+    try:
+        measure_naive(s_mod, gpu_wl)
+    except ModuleScopeError:
+        guarded = True
+    e_mod = measure_naive(
+        OnboardSensor(profiles.get("gh200_module_instant"), seed=1,
+                      host_timeline=cpu_tl.shift(0.3)),
+        gpu_wl, host_baseline_w=0.0)
+    truth = gpu_wl.true_energy_j
+    emit("sec6_gh200/module_bleed", 0.0,
+         f"guard_raises={int(guarded)};chip_err_pct="
+         f"{(e_chip-truth)/truth*100:.1f};module_err_pct="
+         f"{(e_mod-truth)/truth*100:.1f}")
+    emit("sec6_gh200/sampled_fraction", 0.0,
+         f"gpu={profiles.get('gh200_gpu').sampled_fraction:.2f};"
+         f"cpu={profiles.get('gh200_cpu').sampled_fraction:.2f}")
+
+
+if __name__ == "__main__":
+    run()

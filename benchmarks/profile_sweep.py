@@ -1,0 +1,32 @@
+"""Fig. 14: full-catalog characterisation sweep — every sensor class from
+Fermi to GH200 (plus TPU-fleet classes) run through the complete
+micro-benchmark suite, reproducing the paper's summary table."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import microbench, profiles
+from repro.core.ground_truth import GroundTruthMeter
+from repro.core.sensor import OnboardSensor, SensorUnsupported
+
+
+def run() -> None:
+    for name in sorted(profiles.CATALOG):
+        prof = profiles.get(name)
+        s = OnboardSensor(prof, seed=17,
+                          host_timeline=None)
+        try:
+            res = microbench.characterise(s, GroundTruthMeter(seed=3),
+                                          boxcar_reps=4)
+        except SensorUnsupported:
+            emit(f"fig14_catalog/{name}", 0.0, "supported=0")
+            continue
+        win = f"{res.window_s*1e3:.0f}" if res.window_s else "NA"
+        emit(f"fig14_catalog/{name}", 0.0,
+             f"period_ms={res.update_period_s*1e3:.0f};window_ms={win};"
+             f"transient={res.transient.kind};"
+             f"sampled={res.sampled_fraction:.2f};"
+             f"gain={res.gain:.3f};scope={prof.scope}")
+
+
+if __name__ == "__main__":
+    run()

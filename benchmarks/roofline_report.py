@@ -1,0 +1,42 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by `python -m repro.launch.dryrun`)
+and emits one CSV row per (arch × shape × mesh) cell with the three terms,
+the bottleneck and the MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ARTIFACTS = os.environ.get("REPRO_DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(ARTIFACTS, "*.json")))
+    if not files:
+        emit("roofline/NO_ARTIFACTS", 0.0,
+             "run `python -m repro.launch.dryrun --mesh both` first")
+        return
+    for fn in files:
+        with open(fn) as f:
+            art = json.load(f)
+        if art.get("status") != "ok":
+            continue
+        r = art["roofline"]
+        step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             step_ms * 1e3,
+             f"comp_ms={r['compute_s']*1e3:.2f};mem_ms={r['memory_s']*1e3:.2f};"
+             f"coll_ms={r['collective_s']*1e3:.2f};bn={r['bottleneck']};"
+             f"useful={r['useful_ratio']:.3f};"
+             f"frac={r['roofline_fraction']:.4f};"
+             f"peak_gb={r['peak_memory_per_device']/1e9:.1f};"
+             f"fits={int(r['fits_hbm'])}")
+
+
+if __name__ == "__main__":
+    run()

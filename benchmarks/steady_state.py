@@ -1,0 +1,34 @@
+"""Fig. 8/9: steady-state gain/offset across devices — error is
+proportional (±5 %), not NVIDIA's flat ±5 W."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import microbench, profiles
+from repro.core.ground_truth import GroundTruthMeter
+from repro.core.sensor import OnboardSensor
+
+
+def run() -> None:
+    gains, offsets = [], []
+    prof = profiles.get("rtx3090_instant")
+    for card in range(5):       # the paper's 5× RTX 3090 population
+        s = OnboardSensor(prof, seed=100 + card)
+        meter = GroundTruthMeter(seed=card)
+        ss = microbench.estimate_steady_state(s, meter)
+        gains.append(ss.gain)
+        offsets.append(ss.offset_w)
+        emit(f"fig9_steady_state/rtx3090_{card}", 0.0,
+             f"gain={ss.gain:.4f};offset_w={ss.offset_w:.2f};r2={ss.r2:.5f};"
+             f"true_gain={s.true_gain:.4f}")
+    emit("fig9_steady_state/population", 0.0,
+         f"gain_spread={max(gains)-min(gains):.4f};"
+         f"within_5pct={int(all(abs(g-1)<0.05 for g in gains))}")
+    us = timeit(lambda: microbench.estimate_steady_state(
+        OnboardSensor(prof, seed=1), GroundTruthMeter(seed=1)), n=1)
+    emit("fig8_steady_state/runtime", us, "per_characterisation")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Fig. 7: the four transient-response classes."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timeit
+from repro.core import microbench, profiles
+from repro.core.sensor import OnboardSensor
+
+
+CASES = [
+    ("case1_instant_fastrise", "a100"),
+    ("case2_instant_slowload", "turing"),
+    ("case3_linear_1s", "rtx3090_average"),
+    ("case4_logarithmic", "kepler"),
+]
+
+
+def run() -> None:
+    for label, prof_name in CASES:
+        prof = profiles.get(prof_name)
+        s = OnboardSensor(prof, seed=3)
+        T = microbench.estimate_update_period(s)
+        tr = microbench.measure_transient(s, T)
+        us = timeit(lambda: microbench.measure_transient(
+            OnboardSensor(prof, seed=3), T), n=1)
+        emit(f"fig7_transient/{label}", us,
+             f"kind={tr.kind};rise_ms={tr.rise_time_s*1e3:.0f};"
+             f"delay_ms={tr.delay_s*1e3:.0f}")
+
+
+if __name__ == "__main__":
+    run()

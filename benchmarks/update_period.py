@@ -1,0 +1,28 @@
+"""Fig. 6: power-update-period histogram across the sensor catalog."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import microbench, profiles
+from repro.core.sensor import OnboardSensor
+
+
+def run() -> None:
+    for name in ("v100", "a100", "h100_instant", "turing",
+                 "rtx3090_instant", "kepler", "tpu_v5e_chip"):
+        prof = profiles.get(name)
+        ests = []
+        for seed in range(5):
+            s = OnboardSensor(prof, seed=seed)
+            ests.append(microbench.estimate_update_period(s))
+        med = float(np.median(ests))
+        us = timeit(lambda: microbench.estimate_update_period(
+            OnboardSensor(prof, seed=0)), n=1)
+        emit(f"fig6_update_period/{name}", us,
+             f"est_ms={med*1e3:.1f};truth_ms={prof.update_period_s*1e3:.1f};"
+             f"spread_ms={float(np.std(ests))*1e3:.2f}")
+
+
+if __name__ == "__main__":
+    run()

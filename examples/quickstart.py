@@ -1,0 +1,47 @@
+"""Quickstart: characterise a power sensor black-box, then measure a
+workload's energy the naive way and the paper's good-practice way.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (CalibrationStore, GoodPracticeConfig,
+                        GroundTruthMeter, OnboardSensor, Workload,
+                        measure_good_practice, measure_naive)
+from repro.core import load as loads
+from repro.core import profiles
+
+
+def main():
+    # 1. An A100-class sensor: 100 ms update period, but only a 25 ms
+    #    averaging window — 75 % of the runtime is never observed.
+    profile = profiles.get("a100")
+    sensor = OnboardSensor(profile, seed=42)
+    pmd = GroundTruthMeter(seed=7)          # external power meter
+
+    # 2. Characterise it black-box (the paper's micro-benchmarks).
+    store = CalibrationStore("/tmp/repro_calib")
+    calib = store.get_or_characterise("gpu0", sensor, pmd)
+    print(f"update period : {calib.update_period_s*1e3:6.1f} ms")
+    print(f"boxcar window : {calib.window_s*1e3:6.1f} ms")
+    print(f"sampled frac  : {calib.sampled_fraction:6.2f}")
+    print(f"gain / offset : {calib.gain:.4f} / {calib.offset_w:+.2f} W")
+
+    # 3. A bursty workload: 60 ms hot phase + 40 ms cool phase.
+    wl = Workload("bursty", loads.multi_phase_workload(
+        [(0.060, 230.0), (0.040, 140.0)]))
+    truth = wl.true_energy_j
+
+    # 4. Naive single-shot vs good practice.
+    sensor2 = OnboardSensor(profile, seed=43)
+    naive = measure_naive(sensor2, wl)
+    est = measure_good_practice(sensor2, wl, calib,
+                                GoodPracticeConfig(apply_calibration=True))
+    print(f"\ntruth          : {truth:8.2f} J/rep")
+    print(f"naive          : {naive:8.2f} J/rep ({(naive-truth)/truth:+.1%})")
+    print(f"good practice  : {est.joules_per_rep:8.2f} J/rep "
+          f"({est.error_vs(truth):+.1%})  ± {est.std_j:.2f} J")
+
+
+if __name__ == "__main__":
+    main()

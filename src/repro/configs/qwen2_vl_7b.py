@@ -1,0 +1,14 @@
+"""qwen2-vl-7b [arXiv:2409.12191]: M-RoPE; vision frontend is a STUB —
+input_specs() supplies precomputed patch embeddings (see brief)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18_944, vocab=152_064,
+    mrope=True, input_mode="embeds", tie_embeddings=False,
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=256)

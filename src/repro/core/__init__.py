@@ -1,0 +1,37 @@
+"""repro.core — the paper's contribution: part-time power measurement.
+
+Public API:
+
+    from repro.core import profiles, microbench, meter
+    sensor = OnboardSensor(profiles.get("a100"), seed=0)
+    calib  = CalibrationStore(".calib").get_or_characterise("dev0", sensor)
+    est    = meter.measure_good_practice(sensor, workload, calib)
+"""
+from repro.core.activity import ChipPowerModel, StepActivity, steps_timeline
+from repro.core.calibrate import CalibrationRecord, CalibrationStore
+from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
+                                     from_segments)
+from repro.core.ledger import EnergyLedger, LedgerEntry
+from repro.core.meter import (EnergyEstimate, GoodPracticeConfig,
+                              ModuleScopeError, Workload, compare_protocols,
+                              measure_good_practice, measure_naive)
+from repro.core.microbench import (CharacterisationResult, characterise,
+                                   estimate_boxcar_window,
+                                   estimate_steady_state,
+                                   estimate_update_period, measure_transient)
+from repro.core.sensor import OnboardSensor, SensorProfile, SensorUnsupported
+from repro.core.telemetry import (FleetLedger, FleetSummary,
+                                  datacenter_projection)
+
+__all__ = [
+    "ActivityTimeline", "GroundTruthMeter", "from_segments",
+    "OnboardSensor", "SensorProfile", "SensorUnsupported",
+    "CalibrationRecord", "CalibrationStore",
+    "CharacterisationResult", "characterise", "estimate_update_period",
+    "measure_transient", "estimate_steady_state", "estimate_boxcar_window",
+    "Workload", "GoodPracticeConfig", "EnergyEstimate", "ModuleScopeError",
+    "measure_naive", "measure_good_practice", "compare_protocols",
+    "EnergyLedger", "LedgerEntry", "FleetLedger", "FleetSummary",
+    "datacenter_projection",
+    "ChipPowerModel", "StepActivity", "steps_timeline",
+]

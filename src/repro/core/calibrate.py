@@ -1,0 +1,102 @@
+"""Per-device calibration records and a persistent store.
+
+The framework's stance (from the paper's conclusions): never trust a power
+sensor you have not characterised.  At job start the launcher runs (or
+loads a cached) characterisation per device class and threads the
+:class:`CalibrationRecord` into every meter and ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional
+
+from repro.common.logging import get_logger
+
+log = get_logger("calibrate")
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationRecord:
+    device_id: str
+    profile_name: str
+    update_period_s: float
+    window_s: Optional[float]          # None => logarithmic-transient class
+    transient_kind: str                # instant | linear | logarithmic
+    rise_time_s: float
+    gain: Optional[float] = None       # None when no ground-truth meter
+    offset_w: Optional[float] = None
+    r2: Optional[float] = None
+    sampled_fraction: float = 1.0
+    created_at: float = 0.0
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CalibrationRecord":
+        return cls(**json.loads(s))
+
+
+def record_from_characterisation(device_id: str, profile_name: str,
+                                 result) -> CalibrationRecord:
+    """Build a record from microbench.CharacterisationResult."""
+    return CalibrationRecord(
+        device_id=device_id,
+        profile_name=profile_name,
+        update_period_s=result.update_period_s,
+        window_s=result.window_s,
+        transient_kind=result.transient.kind,
+        rise_time_s=(result.transient.rise_time_s
+                     if result.transient.kind != "instant"
+                     else result.update_period_s * 2.5),
+        gain=result.gain,
+        offset_w=result.offset_w,
+        r2=result.r2,
+        sampled_fraction=result.sampled_fraction,
+        created_at=time.time(),
+    )
+
+
+class CalibrationStore:
+    """JSON-file-backed store, one file per device id."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._cache: Dict[str, CalibrationRecord] = {}
+
+    def _path(self, device_id: str) -> str:
+        safe = device_id.replace("/", "_")
+        return os.path.join(self.root, f"{safe}.json")
+
+    def get(self, device_id: str) -> Optional[CalibrationRecord]:
+        if device_id in self._cache:
+            return self._cache[device_id]
+        p = self._path(device_id)
+        if os.path.exists(p):
+            with open(p) as f:
+                rec = CalibrationRecord.from_json(f.read())
+            self._cache[device_id] = rec
+            return rec
+        return None
+
+    def put(self, rec: CalibrationRecord) -> None:
+        self._cache[rec.device_id] = rec
+        with open(self._path(rec.device_id), "w") as f:
+            f.write(rec.to_json())
+
+    def get_or_characterise(self, device_id: str, sensor, meter=None,
+                            profile_name: str = "") -> CalibrationRecord:
+        rec = self.get(device_id)
+        if rec is not None:
+            return rec
+        from repro.core.microbench import characterise
+        log.info("characterising sensor", device=device_id)
+        result = characterise(sensor, meter)
+        rec = record_from_characterisation(
+            device_id, profile_name or sensor.profile.name, result)
+        self.put(rec)
+        return rec

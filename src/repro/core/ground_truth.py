@@ -1,0 +1,191 @@
+"""Ground-truth power: activity timelines and the external-meter analogue.
+
+The paper scores nvidia-smi against an ElmorLabs PMD (shunt-resistor meter,
+5 kHz effective sampling, 12-bit ADC).  Here the physical truth is an
+:class:`ActivityTimeline` — a piecewise-constant power profile derived from
+either (a) a synthetic benchmark load (square wave / step / plateaus) or
+(b) the roofline activity model of a compiled training/serving step.
+:class:`GroundTruthMeter` plays the PMD role: a quantised, noisy, finite-
+rate sampling of the timeline, *plus* the exact analytic integral used for
+scoring (the paper's "ground truth" column).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.common.config import Config
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivityTimeline:
+    """Piecewise-constant power profile P(t).
+
+    ``edges`` has n+1 monotonically increasing entries (seconds);
+    ``powers`` has n entries (watts) — ``powers[i]`` holds on
+    ``[edges[i], edges[i+1])``.  Outside the covered range the profile is
+    ``idle_w``.
+    """
+
+    edges: np.ndarray
+    powers: np.ndarray
+    idle_w: float = 60.0
+
+    def __post_init__(self):
+        e = np.asarray(self.edges, dtype=np.float64)
+        p = np.asarray(self.powers, dtype=np.float64)
+        if e.ndim != 1 or p.ndim != 1 or e.shape[0] != p.shape[0] + 1:
+            raise ValueError(f"bad timeline shapes {e.shape} {p.shape}")
+        if np.any(np.diff(e) < -1e-12):
+            raise ValueError("edges must be non-decreasing")
+        object.__setattr__(self, "edges", e)
+        object.__setattr__(self, "powers", p)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def t_end(self) -> float:
+        return float(self.edges[-1])
+
+    @property
+    def t_start(self) -> float:
+        return float(self.edges[0])
+
+    def power_at(self, t: np.ndarray) -> np.ndarray:
+        """Vectorised P(t)."""
+        t = np.asarray(t, dtype=np.float64)
+        idx = np.searchsorted(self.edges, t, side="right") - 1
+        out = np.full(t.shape, self.idle_w, dtype=np.float64)
+        inside = (idx >= 0) & (idx < len(self.powers)) & (t < self.edges[-1])
+        out[inside] = self.powers[idx[inside]]
+        return out
+
+    def _cum_energy(self) -> np.ndarray:
+        seg = self.powers * np.diff(self.edges)
+        return np.concatenate([[0.0], np.cumsum(seg)])
+
+    def integral(self, t0: np.ndarray, t1: np.ndarray) -> np.ndarray:
+        """Exact ∫P dt over [t0, t1] (vectorised), idle outside coverage."""
+        t0 = np.asarray(t0, dtype=np.float64)
+        t1 = np.asarray(t1, dtype=np.float64)
+        cum = self._cum_energy()
+
+        def eval_I(t):
+            tc = np.clip(t, self.edges[0], self.edges[-1])
+            idx = np.clip(np.searchsorted(self.edges, tc, side="right") - 1,
+                          0, len(self.powers) - 1)
+            inner = cum[idx] + self.powers[idx] * (tc - self.edges[idx])
+            # idle contribution outside the covered range
+            before = np.minimum(t - self.edges[0], 0.0) * self.idle_w
+            after = np.maximum(t - self.edges[-1], 0.0) * self.idle_w
+            return inner + before + after
+
+        return eval_I(t1) - eval_I(t0)
+
+    def mean_power(self, t0: np.ndarray, t1: np.ndarray) -> np.ndarray:
+        t0 = np.asarray(t0, dtype=np.float64)
+        t1 = np.asarray(t1, dtype=np.float64)
+        dt = np.maximum(t1 - t0, 1e-12)
+        return self.integral(t0, t1) / dt
+
+    def energy(self, t0: float | None = None, t1: float | None = None) -> float:
+        """Analytic ground-truth energy in joules."""
+        if t0 is None:
+            t0 = self.t_start
+        if t1 is None:
+            t1 = self.t_end
+        return float(self.integral(np.asarray(t0), np.asarray(t1)))
+
+    # -- composition ------------------------------------------------------
+    def shift(self, dt: float) -> "ActivityTimeline":
+        return ActivityTimeline(self.edges + dt, self.powers, self.idle_w)
+
+    def with_idle(self, idle_w: float) -> "ActivityTimeline":
+        return ActivityTimeline(self.edges, self.powers, idle_w)
+
+    @staticmethod
+    def concat(parts: Sequence["ActivityTimeline"], gap_s: float = 0.0,
+               idle_w: float | None = None) -> "ActivityTimeline":
+        """Concatenate fragments back-to-back (each re-based to follow the
+        previous one), inserting ``gap_s`` of idle between them."""
+        if not parts:
+            raise ValueError("no parts")
+        idle = parts[0].idle_w if idle_w is None else idle_w
+        edges: List[float] = []
+        powers: List[float] = []
+        cursor = parts[0].t_start
+        for i, p in enumerate(parts):
+            dur = p.t_end - p.t_start
+            if i > 0 and gap_s > 0:
+                edges.append(cursor)
+                powers.append(idle)
+                cursor += gap_s
+            # rebase the fragment so it starts exactly at the cursor
+            seg_edges = p.edges + (cursor - p.t_start)
+            edges.extend(seg_edges[:-1].tolist())
+            powers.extend(p.powers.tolist())
+            cursor += dur
+        edges.append(cursor)
+        return ActivityTimeline(np.asarray(edges), np.asarray(powers), idle)
+
+    def repeat(self, n: int, gap_s: float = 0.0) -> "ActivityTimeline":
+        return ActivityTimeline.concat([self] * n, gap_s=gap_s)
+
+
+def from_segments(segments: Iterable[Tuple[float, float]],
+                  t0: float = 0.0, idle_w: float = 60.0) -> ActivityTimeline:
+    """Build a timeline from (duration_s, power_w) segments starting at t0."""
+    edges = [t0]
+    powers = []
+    for dur, watts in segments:
+        if dur < 0:
+            raise ValueError("negative segment duration")
+        powers.append(watts)
+        edges.append(edges[-1] + dur)
+    return ActivityTimeline(np.asarray(edges), np.asarray(powers), idle_w)
+
+
+class MeterConfig(Config):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class GroundTruthMeter:
+    """PMD analogue: finite-rate, quantised, noisy sampling of the truth.
+
+    Quantisation mirrors the PMD hardware: 12-bit ADC, 0–31 V
+    (7.568 mV/level) and 0–200 A (48.8 mA/level) at a 12 V rail.
+    """
+
+    sample_hz: float = 5000.0
+    volt_per_level: float = 0.007568
+    amp_per_level: float = 0.0488
+    rail_volts: float = 12.0
+    noise_w: float = 0.3
+    seed: int = 0
+
+    def trace(self, timeline: ActivityTimeline, t0: float | None = None,
+              t1: float | None = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Sampled (times, watts) like the PMD raw logger."""
+        if t0 is None:
+            t0 = timeline.t_start
+        if t1 is None:
+            t1 = timeline.t_end
+        n = max(2, int(round((t1 - t0) * self.sample_hz)))
+        ts = t0 + np.arange(n) / self.sample_hz
+        p = timeline.power_at(ts)
+        rng = np.random.default_rng(self.seed)
+        # quantise through the ADC model: volts exact-ish, amps coarse
+        volts = np.round(self.rail_volts / self.volt_per_level) * self.volt_per_level
+        amps = p / self.rail_volts
+        amps = np.round(amps / self.amp_per_level) * self.amp_per_level
+        watts = volts * amps + rng.normal(0.0, self.noise_w, size=n)
+        return ts, watts
+
+    def energy(self, timeline: ActivityTimeline, t0: float | None = None,
+               t1: float | None = None) -> float:
+        """Energy integrated from the sampled trace (what the paper's PMD
+        reports); close to but not exactly the analytic truth."""
+        ts, watts = self.trace(timeline, t0, t1)
+        return float(np.trapezoid(watts, ts))

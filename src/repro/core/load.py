@@ -1,0 +1,79 @@
+"""Benchmark-load generators (the paper's §3.4, in timeline form).
+
+The paper's load is a square wave: the high state is a data-dependent FMA
+chain whose duration is linear in chain length and whose amplitude is set
+by the fraction of SMs activated; the low state is a timed sleep.  Here the
+same loads are expressed as :class:`ActivityTimeline` fragments.  The *live*
+counterpart — actually executing the FMA chain as a Pallas TPU kernel and
+fitting the duration/iterations line (Fig. 5) — lives in
+``repro.kernels.fma_chain`` + ``benchmarks/load_linearity.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ground_truth import ActivityTimeline, from_segments
+
+
+def amplitude_for_fraction(fraction: float, idle_w: float = 60.0,
+                           peak_w: float = 250.0) -> float:
+    """Power drawn when ``fraction`` of the compute units run the FMA chain.
+
+    Fig. 8 shows roughly equally-spaced plateaus for 20/40/60/80/100 % of
+    SMs — i.e. near-linear — with idle further away (lower p-state).  We
+    model the p-state gap with a small activation floor.
+    """
+    if fraction <= 0.0:
+        return idle_w
+    floor = 0.15 * (peak_w - idle_w)
+    return idle_w + floor + (peak_w - idle_w - floor) * float(fraction)
+
+
+def square_wave(period_s: float, n_cycles: int, p_high: float,
+                p_low: float = 60.0, duty: float = 0.5, t0: float = 0.0,
+                idle_w: float = 60.0,
+                period_jitter_s: float = 0.0, seed: int = 0) -> ActivityTimeline:
+    """High/low square wave; jitter models the imperfect kernel-length
+    control that produced the paper's aliasing discovery (§4.3)."""
+    rng = np.random.default_rng(seed)
+    segs = []
+    for _ in range(n_cycles):
+        jit = rng.uniform(-period_jitter_s, period_jitter_s) if period_jitter_s else 0.0
+        high = max(1e-4, period_s * duty + jit)
+        low = max(1e-4, period_s * (1 - duty))
+        segs.append((high, p_high))
+        segs.append((low, p_low))
+    return from_segments(segs, t0=t0, idle_w=idle_w)
+
+
+def step(t_on: float, duration_s: float, p_high: float,
+         p_low: float = 60.0, idle_w: float = 60.0,
+         tail_s: float = 1.0) -> ActivityTimeline:
+    """Single step for transient-response probing (paper uses 6 s)."""
+    return from_segments(
+        [(t_on, p_low), (duration_s, p_high), (tail_s, p_low)],
+        t0=0.0, idle_w=idle_w)
+
+
+def plateaus(levels_w: list[float], dwell_s: float = 4.0,
+             idle_w: float = 60.0, gap_s: float = 1.0) -> ActivityTimeline:
+    """Steady plateaus for steady-state gain/offset regression (Fig. 8)."""
+    segs = []
+    for w in levels_w:
+        segs.append((dwell_s, w))
+        segs.append((gap_s, idle_w))
+    return from_segments(segs, idle_w=idle_w)
+
+
+def workload_burst(duration_s: float, p_active: float,
+                   idle_w: float = 60.0) -> ActivityTimeline:
+    """One repetition of a real workload modelled as a constant-power
+    burst (the paper's per-kernel execution window)."""
+    return from_segments([(duration_s, p_active)], idle_w=idle_w)
+
+
+def multi_phase_workload(phases: list[tuple[float, float]],
+                         idle_w: float = 60.0) -> ActivityTimeline:
+    """A workload with several internal phases (e.g. compute-bound matmul
+    then memory-bound softmax) — (duration_s, watts) list."""
+    return from_segments(phases, idle_w=idle_w)

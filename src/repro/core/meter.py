@@ -1,0 +1,215 @@
+"""Energy measurement protocols: naive vs the paper's good practice (§5).
+
+Naive (what the surveyed literature does): run the workload once, integrate
+the sensor readings over the execution window, trust the result.
+
+Good practice (§5.1, steps 1–3):
+  1. ≥32 repetitions or ≥5 s total; if the averaging window is a fraction
+     of the update period (A100/H100-style part-time sampling), insert 8
+     evenly-spaced controlled delays of one window-length to phase-shift
+     activity across the unsampled portion.
+  2. 4 separate trials with randomised inter-trial delay.
+  3. Discard repetitions inside the rise time; shift the sensor series to
+     re-synchronise with device activity; (optionally) invert the
+     calibrated gain/offset transform.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.calibrate import CalibrationRecord
+from repro.core.ground_truth import ActivityTimeline
+from repro.core.sensor import OnboardSensor
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One repetition of a measurable workload."""
+
+    name: str
+    timeline: ActivityTimeline        # fragment starting at t=0
+
+    @property
+    def duration_s(self) -> float:
+        return self.timeline.t_end - self.timeline.t_start
+
+    @property
+    def true_energy_j(self) -> float:
+        """Analytic per-repetition ground truth."""
+        return self.timeline.energy()
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodPracticeConfig:
+    min_reps: int = 32
+    min_total_s: float = 5.0
+    n_phase_shifts: int = 8
+    n_trials: int = 4
+    discard_rise: bool = True
+    time_shift: bool = True
+    apply_calibration: bool = False
+    poll_period_s: float = 0.001
+    max_reps: int = 4096
+
+
+@dataclasses.dataclass
+class EnergyEstimate:
+    joules_per_rep: float
+    std_j: float
+    n_trials: int
+    n_reps: int
+    trial_values: List[float]
+
+    def error_vs(self, truth_j: float) -> float:
+        return (self.joules_per_rep - truth_j) / truth_j
+
+
+class ModuleScopeError(RuntimeError):
+    """Raised when a module-scope sensor (GH200 `instant`, §6) would be
+    attributed to chip-level energy without a host baseline."""
+
+
+def _integrate_readings(ts: np.ndarray, vals: np.ndarray,
+                        t0: float, t1: float) -> float:
+    """Step-integrate the polled reading series over [t0, t1]."""
+    sel = (ts >= t0) & (ts <= t1)
+    if not np.any(sel):
+        return 0.0
+    t = ts[sel]
+    v = vals[sel]
+    dt = np.diff(np.concatenate([t, [t1]]))
+    return float(np.sum(v * dt))
+
+
+def _check_scope(sensor: OnboardSensor, host_baseline_w: Optional[float]) -> float:
+    if sensor.profile.scope == "module" and host_baseline_w is None:
+        raise ModuleScopeError(
+            f"profile '{sensor.profile.name}' measures the whole module "
+            "(GPU+CPU+DRAM); supply host_baseline_w to subtract, or use a "
+            "chip-scope profile")
+    return host_baseline_w or 0.0
+
+
+def measure_naive(sensor: OnboardSensor, workload: Workload,
+                  start_offset_s: float = 0.3,
+                  host_baseline_w: Optional[float] = None,
+                  poll_period_s: float = 0.001) -> float:
+    """Single run; integrate sensor power over the execution window only."""
+    baseline = _check_scope(sensor, host_baseline_w)
+    tl = workload.timeline.shift(start_offset_s - workload.timeline.t_start)
+    sensor.attach(tl, t_end=tl.t_end + 1.0)
+    ts, vals = sensor.poll(0.0, tl.t_end + 0.5, period_s=poll_period_s)
+    vals = vals - baseline
+    return _integrate_readings(ts, vals, start_offset_s,
+                               start_offset_s + workload.duration_s)
+
+
+def measure_good_practice(sensor: OnboardSensor, workload: Workload,
+                          calib: CalibrationRecord,
+                          cfg: GoodPracticeConfig = GoodPracticeConfig(),
+                          host_baseline_w: Optional[float] = None,
+                          seed: int = 0) -> EnergyEstimate:
+    """The paper's protocol; returns a per-repetition energy estimate."""
+    baseline = _check_scope(sensor, host_baseline_w)
+    rng = np.random.default_rng(seed)
+    dur = workload.duration_s
+    reps = max(cfg.min_reps, int(np.ceil(cfg.min_total_s / max(dur, 1e-6))))
+    reps = min(reps, cfg.max_reps)
+
+    part_time = (calib.sampled_fraction < 0.999)
+    W = calib.window_s if calib.window_s else calib.update_period_s
+    shifts = cfg.n_phase_shifts if part_time else 0
+
+    trial_values: List[float] = []
+    for trial in range(cfg.n_trials):
+        start = 0.3 + float(rng.uniform(0.0, 1.0))      # randomised delay
+        # build the repetition train with evenly spaced W-length delays
+        if shifts > 0:
+            group = max(1, reps // shifts)
+            parts = []
+            done = 0
+            while done < reps:
+                n = min(group, reps - done)
+                parts.append(workload.timeline.repeat(n))
+                done += n
+            train = ActivityTimeline.concat(parts, gap_s=W)
+        else:
+            train = workload.timeline.repeat(reps)
+        train = train.shift(start - train.t_start)
+        sensor.attach(train, t_end=train.t_end + 2.0)
+        ts, vals = sensor.poll(0.0, train.t_end + 1.0,
+                               period_s=cfg.poll_period_s)
+        vals = vals - baseline
+        if cfg.apply_calibration and calib.gain:
+            vals = (vals - (calib.offset_w or 0.0)) / calib.gain
+        if cfg.time_shift:
+            ts = ts - W                 # reading at t covers [t-W, t]
+
+        # discard repetitions inside the rise time
+        rise = calib.rise_time_s if (cfg.discard_rise and
+                                     np.isfinite(calib.rise_time_s)) else 0.0
+        n_skip = int(np.ceil(rise / max(dur, 1e-6)))
+        n_skip = min(n_skip, reps - 1)
+        # locate kept-rep span inside the train (account for inserted gaps)
+        kept = reps - n_skip
+        t_begin = start + _train_offset(n_skip, dur, shifts, reps, W)
+        t_end = start + _train_offset(reps, dur, shifts, reps, W)
+        e = _integrate_readings(ts, vals, t_begin, t_end)
+        # subtract the idle energy of the inserted gaps inside the span
+        gaps_inside = _gaps_between(n_skip, reps, shifts, reps)
+        e -= gaps_inside * W * workload.timeline.idle_w
+        trial_values.append(e / kept)
+
+    arr = np.asarray(trial_values)
+    return EnergyEstimate(float(np.mean(arr)), float(np.std(arr)),
+                          cfg.n_trials, reps, trial_values)
+
+
+def _n_gaps_before(rep_idx: int, shifts: int, reps: int) -> int:
+    """Number of inserted W-gaps before the start of repetition ``rep_idx``.
+
+    A gap follows every complete group of ``reps // shifts`` repetitions,
+    with no gap after the final repetition.
+    """
+    if shifts <= 0:
+        return 0
+    group = max(1, reps // shifts)
+    return min(rep_idx // group, (reps - 1) // group)
+
+
+def _train_offset(rep_idx: int, dur: float, shifts: int, reps: int,
+                  W: float) -> float:
+    """Wall-clock offset of the start of repetition ``rep_idx`` (or, for
+    ``rep_idx == reps``, the end of the train)."""
+    return rep_idx * dur + _n_gaps_before(rep_idx, shifts, reps) * W
+
+
+def _gaps_between(i0: int, i1: int, shifts: int, reps: int) -> int:
+    """Inserted gaps lying between the start of rep i0 and end of rep i1-1."""
+    return (_n_gaps_before(i1, shifts, reps)
+            - _n_gaps_before(i0, shifts, reps))
+
+
+def compare_protocols(sensor: OnboardSensor, workload: Workload,
+                      calib: CalibrationRecord,
+                      cfg: GoodPracticeConfig = GoodPracticeConfig(),
+                      seed: int = 0,
+                      host_baseline_w: Optional[float] = None) -> dict:
+    """Fig. 18: naive error vs good-practice error for one workload."""
+    truth = workload.true_energy_j
+    naive = measure_naive(sensor, workload, host_baseline_w=host_baseline_w,
+                          start_offset_s=0.3 + (seed % 17) * 0.037)
+    gp = measure_good_practice(sensor, workload, calib, cfg, seed=seed,
+                               host_baseline_w=host_baseline_w)
+    return {
+        "workload": workload.name,
+        "truth_j": truth,
+        "naive_j": naive,
+        "naive_err": (naive - truth) / truth,
+        "gp_j": gp.joules_per_rep,
+        "gp_err": gp.error_vs(truth),
+        "gp_std_j": gp.std_j,
+    }

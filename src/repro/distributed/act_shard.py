@@ -1,0 +1,111 @@
+"""Contextual activation-sharding constraints.
+
+GSPMD left to its own devices reshards *activations* across the FSDP axis
+(103 GB/device of per-layer all-reduces on llama/olmo train cells — see
+EXPERIMENTS.md §Perf iteration 1) instead of gathering the far smaller
+weight shards.  Pinning the canonical activation layouts with
+``with_sharding_constraint`` flips the partitioner to the intended
+ZeRO-3 + Megatron pattern.
+
+The context is set by the launcher/dry-run (inside `with mesh:`); when no
+context is set (CPU unit tests, single device) every call is a no-op, so
+model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: Optional[dict] = None
+
+
+def set_context(batch_axes: Tuple[str, ...], tp_axis: str,
+                tp_size: int, batch_size: int = 1,
+                fsdp_axis: str = "", fsdp_size: int = 1,
+                mode: str = "train") -> None:
+    global _CTX
+    _CTX = {"batch": tuple(batch_axes), "tp": tp_axis, "tp_size": tp_size,
+            "batch_size": batch_size, "fsdp": fsdp_axis,
+            "fsdp_size": fsdp_size, "mode": mode}
+
+
+def batch_groups() -> int:
+    """Product of batch-axis sizes (1 when unset): the MoE grouped
+    dispatch builds one capacity slice per batch shard so scatter/gather
+    never cross data shards."""
+    return _CTX["batch_size"] if _CTX else 1
+
+
+def clear_context() -> None:
+    global _CTX
+    _CTX = None
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Tuple[str, ...], tp_axis: str,
+                        tp_size: int, batch_size: int = 1,
+                        fsdp_axis: str = "", fsdp_size: int = 1,
+                        mode: str = "train"):
+    set_context(batch_axes, tp_axis, tp_size, batch_size, fsdp_axis,
+                fsdp_size, mode)
+    try:
+        yield
+    finally:
+        clear_context()
+
+
+def _tp_if(dim: int):
+    if _CTX is None or not _CTX["tp"]:
+        return None
+    return _CTX["tp"] if dim % _CTX["tp_size"] == 0 else None
+
+
+def _group_if(dim: int):
+    if _CTX is None or not _CTX["batch"]:
+        return None
+    return _CTX["batch"] if dim % _CTX["batch_size"] == 0 else None
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Pin a canonical activation layout.
+
+    kinds: 'bsd' [B,S,D] — batch-sharded, D replicated (residual stream)
+           'bsf' [B,S,F] — MLP hidden, F over tp
+           'bshe' [B,S,H,e] — attention heads over tp
+           'bsv' [B,S,V] — logits, vocab over tp
+    """
+    if _CTX is None:
+        return x
+    b = _CTX["batch"] or None
+    if kind == "bsd":
+        if _CTX["mode"] == "decode":
+            # decode: keep the residual stream FEATURE-sharded over the
+            # fsdp axis so weight shards stay stationary (x is ~MBs; the
+            # measured alternative gathered 218 MB/layer of weights)
+            fa = _CTX["fsdp"] if (_CTX["fsdp"] and
+                                  x.shape[-1] % _CTX["fsdp_size"] == 0) \
+                else None
+            spec = P(None, None, fa)
+        else:
+            spec = P(b, None, None)
+    elif kind == "bsf":
+        spec = P(b, None, _tp_if(x.shape[-1]))
+    elif kind == "bshe":
+        spec = P(b, None, _tp_if(x.shape[-2]), None)
+    elif kind == "bsv":
+        spec = P(b, None, _tp_if(x.shape[-1]))
+    elif kind == "gecd":           # MoE buffer [G, E_pad, C_g, D]
+        spec = P(_group_if(x.shape[0]), None, None, None)
+    elif kind == "gecf":           # MoE hidden [G, E_pad, C_g, F]
+        spec = P(_group_if(x.shape[0]), None, None, _tp_if(x.shape[-1]))
+    elif kind == "gtd":            # grouped tokens [G, T_g, D]
+        spec = P(_group_if(x.shape[0]), None, None)
+    else:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:       # outside mesh context: leave unconstrained
+        return x

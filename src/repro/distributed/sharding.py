@@ -1,0 +1,220 @@
+"""Name-based sharding rules (MaxText-style) with divisibility awareness.
+
+Axes:
+  * batch axes  — ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  * fsdp axis   — "data": parameters are additionally sharded over the data
+                  axis (ZeRO-3 style) on their non-TP dimension
+  * tp axis     — "model": attention heads / FFN hidden / experts / vocab
+
+A dimension is only sharded when its size is divisible by the axis size —
+otherwise GSPMD would silently pad (e.g. recurrentgemma's single KV head
+over a 16-way model axis would replicate 16×).  The skipped-sharding
+decisions are recorded so the dry-run report can surface them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.tree import path_str
+
+# rule table: basename regex -> per-trailing-dim roles
+# roles: "fsdp" | "tp" | "batch" | None
+_PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"embed$", ("tp", "fsdp")),
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"(x_)?wq$", ("fsdp", "tp", None)),
+    (r"(x_)?wk$", ("fsdp", "tp", None)),
+    (r"(x_)?wv$", ("fsdp", "tp", None)),
+    (r"(x_)?wo$", ("tp", None, "fsdp")),
+    (r"w_gate$", ("fsdp", "tp")),
+    (r"w_up$", ("fsdp", "tp")),
+    (r"w_down$", ("tp", "fsdp")),
+    (r"shared_gate$", ("fsdp", "tp")),
+    (r"shared_up$", ("fsdp", "tp")),
+    (r"shared_down$", ("tp", "fsdp")),
+    (r"router$", ("fsdp", None)),
+    (r"w_rec$", ("fsdp", "tp")),
+    (r"w_a$", ("fsdp", "tp")),
+    (r"w_x$", ("fsdp", "tp")),
+    (r"w_out$", ("tp", "fsdp")),
+    (r"lam$", ("tp",)),
+    (r"conv$", (None, "tp")),
+    (r"w_if$", ("fsdp", None)),
+    (r"w_og$", ("fsdp", "tp")),
+    (r"[wr]_[zifo]$", ("fsdp", "tp")),
+    (r"(ln1|ln2|ln_x|final_norm|enc_norm)$", (None,)),
+]
+
+# MoE expert-stacked tensors: expert dim replicated, D/F sharded like the
+# dense MLP (weights are gathered once per layer; the expert-parallel
+# alternative pushed 34 GB/layer of token traffic — §Perf iteration M2)
+_MOE_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"w_gate$", (None, "fsdp", "tp")),
+    (r"w_up$", (None, "fsdp", "tp")),
+    (r"w_down$", (None, "tp", "fsdp")),
+]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    fsdp_axis: str = "data"
+    tp_axis: str = "model"
+    # layout "default": FSDP over data + TP over model (the right choice
+    # for >5B models).  layout "fsdp_only": BOTH mesh axes act as
+    # data/FSDP — for small models where 16-way TP only buys per-layer
+    # activation all-reduces (measured 8× collective reduction on olmo-1b;
+    # §Perf iteration O2).  --layout auto picks by active param count.
+    layout: str = "default"
+    # decode layout: activations/inputs replicated over the batch axes so
+    # weight shards stay stationary (a single token's activations are ~MBs;
+    # gathering 100s-of-GB weight shards per token was the measured
+    # pathology — §Perf iteration D1). KV caches keep batch sharding.
+    replicate_batch: bool = False
+
+    def __post_init__(self):
+        names = self.mesh.axis_names
+        self.axis_sizes = dict(zip(names, self.mesh.devices.shape))
+        if self.layout == "fsdp_only":
+            all_batch = tuple(names)          # every axis is a batch axis
+            self._fsdp_axes: Tuple[str, ...] = tuple(names)
+            self._tp_axes: Tuple[str, ...] = ()
+        else:
+            all_batch = tuple(a for a in ("pod", "data") if a in names)
+            self._fsdp_axes = (self.fsdp_axis,) if self.fsdp_axis in names \
+                else ()
+            self._tp_axes = (self.tp_axis,) if self.tp_axis in names else ()
+        self.cache_batch_axes: Tuple[str, ...] = all_batch
+        self.batch_axes: Tuple[str, ...] = () if self.replicate_batch \
+            else all_batch
+        self.skipped: List[str] = []
+
+    def _role_axis(self, role: Optional[str]):
+        if role == "fsdp":
+            return self._fsdp_axes or None
+        if role == "tp":
+            return self._tp_axes or None
+        return None
+
+    def _apply(self, roles: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+               path: str) -> P:
+        n_lead = len(shape) - len(roles)
+        spec: List[Any] = [None] * n_lead
+        used = set()
+        for dim, role in zip(shape[n_lead:], roles):
+            axes = self._role_axis(role)
+            if axes is not None:
+                size = int(np.prod([self.axis_sizes[a] for a in axes]))
+            if (axes is not None and axes not in used
+                    and dim % size == 0):
+                spec.append(axes if len(axes) > 1 else axes[0])
+                used.add(axes)
+            else:
+                if axes is not None:
+                    self.skipped.append(
+                        f"{path}: dim {dim} % {axes}({size}) != 0")
+                spec.append(None)
+        return P(*spec)
+
+    def param_pspec(self, path: str, shape: Tuple[int, ...]) -> P:
+        base = path.split(".")[-1]
+        rules = _MOE_RULES + _PARAM_RULES if ".moe." in f".{path}." \
+            else _PARAM_RULES
+        for pat, roles in rules:
+            if re.search(pat, base) and len(shape) >= len(roles):
+                return self._apply(roles, shape, path)
+        return P()
+
+    def batch_pspec(self, shape: Tuple[int, ...]) -> P:
+        """Shard the leading (batch) dim over all batch axes."""
+        if not self.batch_axes:
+            return P(*([None] * len(shape)))
+        total = int(np.prod([self.axis_sizes[a] for a in self.batch_axes]))
+        if shape and shape[0] % total == 0:
+            return P(self.batch_axes, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    def input_pspec(self, name: str, shape: Tuple[int, ...]) -> P:
+        if name == "positions3":          # [3, B, S]
+            spec = self.batch_pspec(shape[1:])
+            return P(None, *spec)
+        if name == "pos":
+            return P(None)
+        return self.batch_pspec(shape)
+
+    def cache_pspec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """Decode-state sharding: batch dim + head/channel dim over tp."""
+        base = path.split(".")[-1]
+        # stacked-layer leading dim possible; find batch dim by name
+        if base in ("k", "v") or base in ("self_k", "self_v",
+                                          "cross_k", "cross_v"):
+            # [..., B, T, Hkv, hd]; when the KV heads don't divide the tp
+            # axis (GQA/MQA), shard the SEQUENCE dim instead — decode
+            # attention then runs flash-decoding style (partial softmax
+            # over T shards; the cross-shard reductions are tiny scalars),
+            # and the cache never round-trips through a reshard.
+            n_lead = len(shape) - 4
+            spec: List[Any] = [None] * n_lead
+            spec.append(self._batch_axes_if(shape[n_lead]))
+            head_ax = self._tp_if(shape[n_lead + 2])
+            if head_ax is not None:
+                spec.extend([None, head_ax, None])
+            else:
+                spec.extend([self._tp_if(shape[n_lead + 1]), None, None])
+            return P(*spec)
+        if base == "enc_out":
+            return P(self._batch_axes_if(shape[0]), None, None)
+        if base in ("h", "c", "n", "m", "S", "conv"):
+            # recurrent state: [..., B, channels...] — batch then tp on last
+            n_lead = len(shape) - 2 if base != "S" else len(shape) - 4
+            n_lead = max(n_lead, 0)
+            spec = [None] * n_lead
+            if len(shape) > n_lead:
+                spec.append(self._batch_axes_if(shape[n_lead]))
+            rest = len(shape) - len(spec)
+            for i in range(rest):
+                if i == rest - 1 and base not in ("S",):
+                    spec.append(self._tp_if(shape[len(spec)]))
+                else:
+                    spec.append(None)
+            return P(*spec)
+        return P(*([None] * len(shape)))
+
+    def _batch_axes_if(self, dim: int):
+        axes = self.cache_batch_axes
+        total = int(np.prod([self.axis_sizes[a] for a in axes]))
+        return axes if axes and total and dim % total == 0 else None
+
+    def _tp_if(self, dim: int):
+        if not self._tp_axes:
+            return None
+        ax = self._tp_axes[0]
+        return ax if dim % self.axis_sizes[ax] == 0 else None
+
+
+def tree_pspecs(rules: ShardingRules, tree: Any, kind: str) -> Any:
+    """PartitionSpec tree for a (params|cache|inputs) spec tree."""
+    def per_leaf(path, leaf):
+        p = path_str(path)
+        shape = tuple(leaf.shape)
+        if kind == "params":
+            return rules.param_pspec(p, shape)
+        if kind == "cache":
+            return rules.cache_pspec(p, shape)
+        if kind == "inputs":
+            return rules.input_pspec(p.split(".")[-1], shape)
+        raise ValueError(kind)
+    return jax.tree_util.tree_map_with_path(per_leaf, tree)
+
+
+def tree_shardings(rules: ShardingRules, tree: Any, kind: str) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(rules.mesh, p),
+        tree_pspecs(rules, tree, kind),
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,149 @@
+"""Flash attention forward kernel (Pallas TPU).
+
+Grid (B, Hkv, nq, nk) with the k axis innermost: VMEM scratch carries the
+online-softmax state (m, l, acc) across k steps for a fixed q block, and
+the output block is written on the last k step.  Q blocks are
+(block_q, G·head_dim) where G = Hq // Hkv so GQA head groups share their
+KV block straight from VMEM (no HBM re-reads per q head).
+
+Supports causal masking, sliding windows (gemma2 local / recurrentgemma)
+and gemma2 logit soft-capping.  MXU alignment: block_q and block_k are
+multiples of 128; head_dim pads to 128 lanes outside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, seq_q: int, seq_k: int,
+                  causal: bool, window: int, softcap: float, scale: float,
+                  n_k_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked blocks (causal upper triangle / outside window)
+    needed = True
+    if causal:
+        needed = (ki * block_k) <= (qi * block_q + block_q - 1)
+    run = needed if isinstance(needed, bool) else needed
+
+    @pl.when(run if isinstance(run, bool) else run)
+    def _compute():
+        q = q_ref[0, 0]                       # [bq, G, d]
+        k = k_ref[0, 0]                       # [bk, d]
+        v = v_ref[0, 0]                       # [bk, d]
+        bq, G, d = q.shape
+        s = jax.lax.dot_general(
+            q.reshape(bq * G, d), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # [bq*G, bk]
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window > 0:
+            mask = mask & (k_pos > q_pos - window)
+        maskg = jnp.repeat(mask, G, axis=0) if G > 1 else mask
+        s = jnp.where(maskg, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(maskg, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_prev - m_safe))
+        l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)             # [bq*G, d]
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-20)
+        bqG, d = out.shape
+        o_ref[0, 0] = out.reshape(o_ref.shape[2], o_ref.shape[3],
+                                  d).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0,
+                    block_q: int = 256, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q [B,S,Hq,D]; k/v [B,T,Hkv,D]; Hq = G·Hkv. Returns [B,S,Hq,D]."""
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    block_q = min(block_q, max(1, S))
+    block_k = min(block_k, max(1, T))
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_k) * block_k
+    nq, nk = Sp // block_q, Tp // block_k
+
+    # layout: [B, Hkv, S, G, D] so a q block is contiguous per (b, hkv)
+    qr = jnp.moveaxis(q.reshape(B, S, Hkv, G, D), 1, 2)
+    kr = jnp.moveaxis(k, 1, 2)      # [B,Hkv,T,D]
+    vr = jnp.moveaxis(v, 1, 2)
+    if Sp != S:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    if Tp != T:
+        kr = jnp.pad(kr, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_q=S, seq_k=T,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+        n_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, G, D),
+                         lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, G, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sp, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    out = jnp.moveaxis(out, 2, 1)[:, :S]          # [B,S,Hkv,G,D]
+    return out.reshape(B, S, Hq, D)

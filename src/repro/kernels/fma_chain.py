@@ -1,0 +1,65 @@
+"""The paper's benchmark-load kernel (Listing 1), adapted to TPU.
+
+CUDA original: each thread runs a data-dependent chain of FMA pairs
+``x = x*2+2; x = x/2-1`` (algebraically the identity, so the compiler
+cannot drop it without breaking the dependence chain); duration is linear
+in ``niter`` (Fig. 5, R²=1.000) and amplitude is set by the fraction of
+SMs launched.
+
+TPU adaptation (DESIGN.md §2): the unit of occupancy is not an SM but the
+VPU lane grid.  The kernel holds an (8·rows, 128) f32 block in VMEM and
+runs the same dependent FMA chain with ``jax.lax.fori_loop``; *duration*
+is ``niter`` (linear — each iteration is 2 dependent VPU ops on the whole
+block), *amplitude* is the fraction of grid slots doing work (``active``
+mask per grid step — idle slots copy through), mirroring the paper's
+``nblocks = SM_count × PERCENT``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fma_chain_kernel(active_ref, x_ref, o_ref, *, niter: int):
+    """One grid slot: dependent FMA chain over the whole VMEM block."""
+    x = x_ref[...]
+    is_active = active_ref[0] > 0
+
+    def body(_, v):
+        v = v * 2.0 + 2.0          # FMA 1 (dependent)
+        v = v * 0.5 - 1.0          # FMA 2 (dependent, inverts FMA 1)
+        return v
+
+    burned = jax.lax.fori_loop(0, niter, body, x)
+    o_ref[...] = jnp.where(is_active, burned, x)
+
+
+def fma_chain(x: jax.Array, niter: int, active_fraction: float = 1.0,
+              block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x [N, 128] f32. Returns x unchanged (the chain is the identity);
+    the point is the work: 2·niter dependent VPU ops per element.
+
+    ``active_fraction`` enables only that fraction of grid slots —
+    the TPU analogue of launching a fraction of SMs.
+    """
+    n, lanes = x.shape
+    assert lanes == 128, "benchmark load operates on 128-lane rows"
+    assert n % block_rows == 0, (n, block_rows)
+    grid = n // block_rows
+    n_active = max(1, int(round(grid * active_fraction)))
+    active = (jnp.arange(grid, dtype=jnp.int32) < n_active).astype(jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_fma_chain_kernel, niter=niter),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(active, x)

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (kernels validated in
+interpret mode per the brief) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import fma_chain as _fma
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("niter", "active_fraction",
+                                             "block_rows", "interpret"))
+def fma_chain(x, niter: int, active_fraction: float = 1.0,
+              block_rows: int = 256, interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _fma.fma_chain(x, niter, active_fraction, block_rows, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 256,
+                    block_k: int = 512, interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=it)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def rglru_scan(a, u, block_d: int = 512, chunk: int = 256,
+               interpret: bool | None = None):
+    it = _default_interpret() if interpret is None else interpret
+    return _rg.rglru_scan(a, u, block_d=block_d, chunk=chunk, interpret=it)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (tested with assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import blocked_attention
+from repro.models.recurrent import rglru_scan_ref  # noqa: F401  (re-export)
+
+
+def fma_chain_ref(x: jax.Array, niter: int,
+                  active_fraction: float = 1.0) -> jax.Array:
+    """The FMA chain is algebraically the identity: (x·2+2)/2 − 1 = x.
+
+    In exact arithmetic the kernel returns its input for any chain length
+    or active fraction; in f32 the operations are also exact for
+    well-scaled inputs (×2, +2, ×0.5, −1 are all exact in binary fp).
+    """
+    del niter, active_fraction
+    return x
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """Oracle: the model-layer blocked attention (itself validated against
+    a direct softmax for small shapes in tests)."""
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+
+
+def attention_direct_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Small-shape direct softmax attention (quadratic, materialised)."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bshgd,bthd->bshgt", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bshgt,bthd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

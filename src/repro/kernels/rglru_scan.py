@@ -1,0 +1,66 @@
+"""RG-LRU linear-recurrence kernel (Pallas TPU).
+
+h_t = a_t ⊙ h_{t-1} + u_t — elementwise over channels, sequential over
+time.  TPU adaptation: the recurrence is VPU-bound (no MXU), so the
+kernel tiles (batch×channel) across the grid and walks time in VMEM
+chunks; the carry h lives in a VMEM scratch register across sequential
+grid steps.  Within a chunk the time loop is a ``fori_loop`` over rows of
+the (chunk, block_d) VMEM block — 8-sublane×128-lane vector ops.
+
+Grid: (B, nd, nt) with time innermost (sequential; carry in scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, u_ref, o_ref, h_scr, *, chunk: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(t, h):
+        a_t = a_ref[0, t, :]
+        u_t = u_ref[0, t, :]
+        h = a_t * h + u_t
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[0, :])
+    h_scr[0, :] = h
+
+
+def rglru_scan(a: jax.Array, u: jax.Array, *, block_d: int = 512,
+               chunk: int = 256, interpret: bool = False) -> jax.Array:
+    """a, u [B, S, D] → h [B, S, D] with h_t = a_t h_{t-1} + u_t."""
+    B, S, D = a.shape
+    block_d = min(block_d, D)
+    chunk = min(chunk, S)
+    assert D % block_d == 0, (D, block_d)
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        # pad with a=1, u=0 (identity steps) at the end
+        a = jnp.pad(a, ((0, 0), (0, Sp - S), (0, 0)), constant_values=1.0)
+        u = jnp.pad(u, ((0, 0), (0, Sp - S), (0, 0)))
+    nd, nt = D // block_d, Sp // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=(B, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, d, t: (b, t, d)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, D), u.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), u.astype(jnp.float32))
+    return out[:, :S]

@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+                           ).strip()
+
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+#
+# MUST be run as its own process (`python -m repro.launch.dryrun ...`): the
+# XLA_FLAGS line above executes before any jax import, giving the CPU host
+# 512 placeholder devices so the production meshes build.
+#
+# Per cell it produces: compiled.memory_analysis() (fits?),
+# compiled.cost_analysis() (FLOPs/bytes), parsed collective bytes, and the
+# three-term roofline — written as JSON artifacts consumed by
+# EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline_report.py.
+
+import argparse                      # noqa: E402
+import json                          # noqa: E402
+import sys                           # noqa: E402
+import time                          # noqa: E402
+import traceback                     # noqa: E402
+
+import jax                           # noqa: E402
+import numpy as np                   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import (SHAPES, ShapeCell, cell_applicable,  # noqa: E402
+                                get_shape)
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.act_shard import activation_sharding  # noqa: E402
+from repro.distributed.sharding import ShardingRules, tree_shardings  # noqa: E402
+from repro.launch import roofline as roofline_mod  # noqa: E402
+from repro.launch.mesh import (make_mesh, make_production_mesh,  # noqa: E402
+                               n_chips, require_devices)
+from repro.models import api, transformer  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.train.step import (TrainConfig, make_decode_step,  # noqa: E402
+                              make_train_step)
+
+
+def pick_layout(cfg, shape, n_devices: int) -> str:
+    """auto layout: small models don't benefit from 16-way TP for
+    train/prefill — both axes go to data/FSDP (§Perf iteration O2) — but
+    only when the global batch divides the full device count (otherwise
+    the batch can't shard that wide and GSPMD degenerates)."""
+    if shape.mode == "decode":
+        return "default"
+    if shape.global_batch % n_devices != 0:
+        return "default"
+    active = (transformer.active_param_count(cfg) if not cfg.encdec
+              else cfg.d_model * cfg.d_model * 12 * cfg.n_layers)
+    return "fsdp_only" if active < 4e9 else "default"
+
+
+def lower_cell(cfg, shape: ShapeCell, mesh, *, reduced: bool = False,
+               constrain_acts: bool = True, layout: str = "auto"):
+    """Lower + compile one (arch × shape) cell on the given mesh.
+
+    Returns (compiled, hlo_text, lower_s, compile_s).
+    """
+    if layout == "auto":
+        layout = pick_layout(cfg, shape, n_chips(mesh))
+    rules = ShardingRules(mesh, layout=layout)
+    bsz = int(np.prod([rules.axis_sizes[a] for a in rules.batch_axes])) \
+        if rules.batch_axes else 1
+    tp_size = (rules.axis_sizes[rules.tp_axis]
+               if rules.layout == "default" else 1)
+    ctx = (activation_sharding(rules.batch_axes,
+                               rules.tp_axis if rules.layout == "default"
+                               else "", tp_size, batch_size=bsz)
+           if constrain_acts else _nullctx())
+    pspecs = api.param_specs(cfg)
+    params_sh = tree_shardings(rules, pspecs, "params")
+    inputs = api.input_specs(cfg, shape)
+    inputs_sh = tree_shardings(rules, inputs, "inputs")
+    repl = NamedSharding(mesh, P())
+
+    if shape.mode == "train":
+        remat_policy = os.environ.get("REPRO_REMAT_POLICY", "full")
+        tcfg = TrainConfig(remat=True, remat_policy=remat_policy)
+        opt_specs = adamw.state_specs(pspecs)
+        # count replicated; mu/nu shard like params (ZeRO-3)
+        opt_sh = adamw.AdamWState(
+            count=repl,
+            mu=tree_shardings(rules, pspecs, "params"),
+            nu=tree_shardings(rules, pspecs, "params"))
+        step = make_train_step(cfg, tcfg)
+        jitted = jax.jit(step,
+                         in_shardings=(params_sh, opt_sh, inputs_sh),
+                         out_shardings=(params_sh, opt_sh, repl))
+        with mesh, ctx:
+            t0 = time.perf_counter()
+            lowered = jitted.lower(pspecs, opt_specs, inputs)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+    else:
+        # prefill lowers the forward pass; decode lowers serve_step
+        if shape.mode == "prefill":
+            def fwd(params, batch):
+                logits, aux = api.forward(params, cfg, batch, remat=True)
+                return logits
+            batch_ok = shape.global_batch % int(
+                np.prod([rules.axis_sizes[a]
+                         for a in rules.batch_axes])) == 0
+            out_sh = NamedSharding(
+                mesh, P(rules.batch_axes if batch_ok else None, None,
+                        rules._tp_if(cfg.vocab)))
+            jitted = jax.jit(fwd, in_shardings=(params_sh, inputs_sh),
+                             out_shardings=out_sh)
+            args = (pspecs, inputs)
+        else:
+            # decode layout: weights stationary, batch activations
+            # replicated (ShardingRules.replicate_batch docstring)
+            rules_dec = ShardingRules(mesh, replicate_batch=True)
+            ctx = (activation_sharding(
+                rules_dec.batch_axes, rules_dec.tp_axis,
+                rules_dec.axis_sizes[rules_dec.tp_axis], batch_size=1,
+                fsdp_axis=rules_dec.fsdp_axis,
+                fsdp_size=rules_dec.axis_sizes[rules_dec.fsdp_axis],
+                mode="decode")
+                if constrain_acts else _nullctx())
+            inputs_sh = tree_shardings(rules_dec, inputs, "inputs")
+            cache = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = tree_shardings(rules, cache, "cache")
+            step = make_decode_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, cache_sh, inputs_sh),
+                             out_shardings=(repl, cache_sh))
+            args = (pspecs, cache, inputs)
+        with mesh, ctx:
+            t0 = time.perf_counter()
+            lowered = jitted.lower(*args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+
+    hlo_text = compiled.as_text()
+    return compiled, hlo_text, (t1 - t0), (t2 - t1)
+
+
+import contextlib
+
+
+def _nullctx():
+    return contextlib.nullcontext()
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
+             reduced: bool, outdir: str | None):
+    cfg = get_config(arch_id, reduced=reduced)
+    shape = get_shape(shape_name)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        print(f"SKIP  {arch_id:24s} {shape_name:12s} {mesh_name:10s} {reason}")
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": reason}
+    try:
+        compiled, hlo_text, lower_s, compile_s = lower_cell(
+            cfg, shape, mesh, reduced=reduced)
+    except Exception as e:  # noqa: BLE001 — report, continue sweep
+        traceback.print_exc()
+        print(f"FAIL  {arch_id:24s} {shape_name:12s} {mesh_name}: {e}")
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "status": "fail", "error": str(e)[:500]}
+
+    chips = n_chips(mesh)
+    active = (transformer.active_param_count(cfg) if not cfg.encdec
+              else _encdec_active(cfg))
+    total = transformer.param_count(cfg) if not cfg.encdec else \
+        sum(int(np.prod(x.shape))
+            for x in jax.tree_util.tree_leaves(api.param_specs(cfg)))
+    mf = roofline_mod.model_flops_for(cfg, shape, active)
+    report = roofline_mod.analyze(compiled, cfg, shape, mesh_name, chips,
+                                  mf, hlo_text=hlo_text,
+                                  total_params=total, active_params=active)
+    mem = compiled.memory_analysis()
+    print(f"OK    {roofline_mod.format_report(report)} "
+          f"lower={lower_s:5.1f}s compile={compile_s:6.1f}s")
+    result = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+              "status": "ok", "lower_s": lower_s, "compile_s": compile_s,
+              "roofline": report.to_dict(),
+              "memory_analysis": _mem_dict(mem)}
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        fn = os.path.join(outdir,
+                          f"{arch_id}__{shape_name}__{mesh_name}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def _encdec_active(cfg) -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(api.param_specs(cfg)):
+        total += int(np.prod(s.shape))
+    emb = cfg.vocab * cfg.d_model
+    return total - emb
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both", "tiny"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="use reduced configs (CI smoke of the dry-run path)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    arch_ids = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shape_names = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        require_devices(256)
+        meshes.append((make_production_mesh(multi_pod=False), "pod16x16"))
+    if args.mesh in ("multi", "both"):
+        require_devices(512)
+        meshes.append((make_production_mesh(multi_pod=True), "pod2x16x16"))
+    if args.mesh == "tiny":
+        meshes.append((make_mesh((2, 2), ("data", "model")), "tiny2x2"))
+
+    results = []
+    for mesh, mesh_name in meshes:
+        for arch_id in arch_ids:
+            for shape_name in shape_names:
+                results.append(run_cell(arch_id, shape_name, mesh,
+                                        mesh_name, args.reduced, args.out))
+    n_fail = sum(1 for r in results if r["status"] == "fail")
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skip")
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,196 @@
+"""Post-optimisation HLO analysis: collective bytes + loop trip counts.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+third term comes from parsing ``compiled.as_text()``: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction contributes its operand bytes; instructions inside a while
+body (the layer scan) are scaled by the loop trip count, recovered from
+the loop-bound constant in the while condition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# header lines look like `%name (args...) -> type {` — args may contain
+# nested parens (tuple types), so anchor on the trailing `-> ... {`
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of one HLO type expression (handles tuples by summing)."""
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and "{" in line:
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Loop bound = the largest scalar-int constant in the condition."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+
+    # computation -> trip multiplier (while bodies run trip_count times)
+    multiplier: Dict[str, float] = {name: 1.0 for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                for target in (body, cond):
+                    if target in multiplier:
+                        multiplier[target] = max(multiplier[target],
+                                                 float(trips) * multiplier[name])
+
+    bytes_by_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        mult = multiplier.get(name, 1.0)
+        for line in lines:
+            ls = line.strip()
+            m = _INSTR_RE.match(ls)
+            if not m:
+                continue
+            rest = m.group(2)
+            for kind in _COLLECTIVES:
+                # plain or async-start only; `-done` would double-count
+                km = re.match(rf"(.+?)\s{re.escape(kind)}(-start)?\(", rest)
+                if km:
+                    b = _type_bytes(km.group(1))
+                    if km.group(2):          # -start type is (in, out) tuple
+                        b /= 2.0
+                    bytes_by_kind[kind] += b * mult
+                    count_by_kind[kind] += int(mult)
+                    break
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+# ---------------------------------------------------------------------------
+# Dot-FLOPs with loop trip counts (XLA cost_analysis counts a while body
+# once; matmul FLOPs are what MFU accounting uses anyway)
+# ---------------------------------------------------------------------------
+
+_DOT_RE = re.compile(
+    r"^(.+?)\s+dot\(([^)]*)\).*?lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_of(type_str: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return "", ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def hlo_dot_flops(hlo_text: str) -> float:
+    """Σ over dot instructions of 2·prod(out_shape)·prod(K dims),
+    with while-body instructions scaled by recovered trip counts."""
+    comps = _split_computations(hlo_text)
+
+    multiplier: Dict[str, float] = {name: 1.0 for name in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                for target in (body, cond):
+                    if target in multiplier:
+                        multiplier[target] = max(
+                            multiplier[target],
+                            float(trips) * multiplier[name])
+
+    total = 0.0
+    for name, lines in comps.items():
+        mult = multiplier.get(name, 1.0)
+        # local name -> type map (defs precede uses)
+        types: Dict[str, str] = {}
+        for line in lines:
+            m = _INSTR_RE.match(line.strip())
+            if m:
+                types[m.group(1)] = m.group(2)
+        for line in lines:
+            m = _INSTR_RE.match(line.strip())
+            if not m:
+                continue
+            dm = _DOT_RE.match(m.group(2))
+            if not dm:
+                continue
+            out_t, operands, lhs_cd = dm.group(1), dm.group(2), dm.group(3)
+            _, out_shape = _shape_of(out_t)
+            lhs_name = operands.split(",")[0].strip().lstrip("%")
+            lhs_t = types.get(lhs_name, "")
+            _, lhs_shape = _shape_of(lhs_t)
+            k = 1
+            for d in lhs_cd.split(","):
+                if d and lhs_shape:
+                    idx = int(d)
+                    if idx < len(lhs_shape):
+                        k *= lhs_shape[idx]
+            flops = 2.0 * float(np.prod(out_shape)) * float(k) if out_shape \
+                else 0.0
+            total += flops * mult
+    return total
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,42 @@
+"""Production mesh construction (see brief: MULTI-POD DRY-RUN §1).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the real single device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Optional[Sequence[str]] = None):
+    """Arbitrary mesh for tests (e.g. (2,2) on 4 forced host devices)."""
+    shape = tuple(shape)
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):] if len(shape) <= 3 \
+            else tuple(f"ax{i}" for i in range(len(shape)))
+    return jax.make_mesh(shape, tuple(axes))
+
+
+def n_chips(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+def require_devices(n: int) -> None:
+    have = jax.device_count()
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but the backend exposes {have}. "
+            "The dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<n> before "
+            "any jax import (see launch/dryrun.py).")

@@ -1,0 +1,189 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e, per brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Methodology (full discussion in EXPERIMENTS.md §Roofline):
+  * FLOPs — XLA's ``cost_analysis()`` counts a while-loop body ONCE, so a
+    depth-L layer scan under-reports by ~L×.  We therefore parse the
+    post-optimisation HLO and sum dot FLOPs with recovered trip counts
+    (launch/hlo.py: hlo_dot_flops); raw cost_analysis numbers are kept in
+    the artifact for reference.  Dot-only FLOPs are the MFU convention.
+  * HBM bytes — the CPU-backend compile reports "bytes accessed" for ops
+    that a TPU backend would keep fused in VMEM (e.g. the blocked-
+    attention score tiles), so raw HLO bytes badly overstate HBM traffic.
+    We report BOTH: the raw number and an analytic traffic model
+    (params/opt/activation-checkpoint/KV/logits traffic); the bottleneck
+    uses the analytic term.
+  * collective bytes — parsed from HLO with while-body scaling;
+    async -start/-done pairs counted once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch import hlo as hlo_mod
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+HBM_PER_CHIP = 16e9         # v5e HBM capacity
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-device measurements
+    cost_flops_per_device: float
+    cost_bytes_per_device: float
+    dot_flops_per_device: float
+    coll_bytes_per_device: float
+    analytic_bytes_per_device: float
+    peak_memory_per_device: float
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    memory_raw_s: float
+    collective_s: float
+    bottleneck: str
+    # usefulness
+    model_flops: float
+    hlo_global_flops: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float     # useful-compute time / bottleneck step time
+    fits_hbm: bool
+    note: str = ""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(cfg: ArchConfig, shape: ShapeCell,
+                    active_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference); N_active for MoE."""
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active_params * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active_params * tokens
+    return 2.0 * active_params * shape.global_batch   # decode: 1 tok/seq
+
+
+def analytic_traffic(cfg: ArchConfig, shape: ShapeCell, chips: int,
+                     total_params: int, active_params: int) -> float:
+    """Modelled HBM bytes per device per step (documented in EXPERIMENTS):
+
+    train:   gathered weights read fwd+bwd (2×N_active·2B per token-batch
+             pass, amortised across the batch → per device: 2·2·N_active /
+             data_shards is pessimistic; we charge full gathered reads) +
+             optimizer shard traffic (m, v f32 read+write + grad f32 +
+             param rw ≈ 20·N_total/chips) + activation checkpoints
+             (L × tokens_local × d × 2B × 2) + logits (tokens_local ×
+             V/tp × 4B × 2).
+    prefill: gathered weights once + activations fwd + KV writes.
+    decode:  weight shard read (N_active·2B/chips... sharded weights stay
+             resident; every chip reads its shard) + KV/state cache read.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    V, D, L = cfg.vocab, cfg.d_model, cfg.n_layers
+    # mesh split heuristics match ShardingRules defaults
+    tp = 16 if chips >= 256 else max(1, int(np.sqrt(chips)))
+    dp = chips // tp
+    tokens_local = max(1, (B * S) // dp) if shape.mode != "decode" else \
+        max(1, B // dp)
+
+    if shape.mode == "train":
+        w = 2 * active_params * 2.0                  # fwd+bwd gathered reads
+        opt = 20.0 * total_params / chips            # f32 m,v,grad,param rw
+        act = L * tokens_local * D * 2.0 * 2.0       # ckpt save+restore
+        logits = tokens_local * (V // tp) * 4.0 * 2.0
+        return w + opt + act + logits
+    if shape.mode == "prefill":
+        w = active_params * 2.0
+        act = L * tokens_local * D * 2.0
+        kv = L * tokens_local * cfg.n_kv_heads * cfg.head_dim * 2 * 2.0
+        return w + act + kv
+    # decode
+    w = total_params * 2.0 / chips
+    kv_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    kv = (L * tokens_local * kv_len * cfg.n_kv_heads * cfg.head_dim
+          * 2 * 2.0 / tp)
+    logits = tokens_local * (V // tp) * 4.0
+    return w + kv + logits
+
+
+def analyze(compiled, cfg: ArchConfig, shape: ShapeCell, mesh_name: str,
+            chips: int, model_flops: float,
+            hlo_text: Optional[str] = None,
+            total_params: Optional[int] = None,
+            active_params: Optional[int] = None) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    cost_flops = float(cost.get("flops", 0.0))
+    cost_bytes = float(cost.get("bytes accessed", 0.0))
+
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes"):
+            peak += float(getattr(mem, attr, 0) or 0)
+        peak -= float(getattr(mem, "alias_size_in_bytes", 0) or 0)
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = hlo_mod.collective_bytes(text)
+    coll_dev = coll.total_bytes
+    dot_flops_dev = hlo_mod.hlo_dot_flops(text)
+
+    tot = total_params if total_params is not None else 0
+    act = active_params if active_params is not None else tot
+    analytic_dev = analytic_traffic(cfg, shape, chips, tot or act, act)
+
+    hlo_global = dot_flops_dev * chips
+    compute_s = hlo_global / (chips * PEAK_FLOPS)
+    memory_s = analytic_dev / HBM_BW
+    memory_raw_s = cost_bytes / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values()) or 1e-12
+    useful = model_flops / hlo_global if hlo_global > 0 else 0.0
+    useful_compute_s = model_flops / (chips * PEAK_FLOPS)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        cost_flops_per_device=cost_flops, cost_bytes_per_device=cost_bytes,
+        dot_flops_per_device=dot_flops_dev,
+        coll_bytes_per_device=coll_dev,
+        analytic_bytes_per_device=analytic_dev,
+        peak_memory_per_device=peak,
+        compute_s=compute_s, memory_s=memory_s, memory_raw_s=memory_raw_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops, hlo_global_flops=hlo_global,
+        useful_ratio=useful,
+        roofline_fraction=useful_compute_s / step_time,
+        fits_hbm=peak <= HBM_PER_CHIP,
+    )
+
+
+def format_report(r: RooflineReport) -> str:
+    return (f"{r.arch:22s} {r.shape:12s} {r.mesh:10s} "
+            f"comp={r.compute_s*1e3:9.3f}ms mem={r.memory_s*1e3:9.3f}ms "
+            f"coll={r.collective_s*1e3:9.3f}ms -> {r.bottleneck:10s} "
+            f"useful={r.useful_ratio:6.3f} frac={r.roofline_fraction:6.3f} "
+            f"peakmem={r.peak_memory_per_device/1e9:7.2f}GB "
+            f"{'FITS' if r.fits_hbm else 'OVER'}")

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+On a real fleet this process runs per host under the cluster scheduler
+(GKE/xmanager); jax.distributed handles cross-host init. On the CPU CI
+image it drives the same code path single-host with a reduced config:
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 50 --ckpt-dir /tmp/ck
+
+Fault tolerance: re-running the same command after a kill resumes from
+the latest complete checkpoint (exact data + optimizer + energy-ledger
+state). Energy telemetry: every run logs naive and corrected J/step from
+the calibrated sensor model (the paper's contribution, applied).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import ShapeCell, get_shape
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, run_training
+from repro.train.step import TrainConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--sensor", default="tpu_v5e_chip")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    shape = get_shape(args.shape) if args.shape else ShapeCell(
+        "cli", args.seq_len, args.batch, "train")
+    tcfg = TrainConfig(
+        microbatches=args.microbatches,
+        compress_grads=args.compress_grads,
+        optim=AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps))
+    lcfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      sensor_profile=args.sensor)
+    out = run_training(cfg, shape, tcfg, lcfg,
+                       ckpt_dir=args.ckpt_dir or None)
+    print("final_loss:", out["final_loss"])
+    print("stragglers:", out["stragglers"])
+    print("energy:", out["energy"])
+
+
+if __name__ == "__main__":
+    main()

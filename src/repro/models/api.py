@@ -1,0 +1,122 @@
+"""Unified model API: dispatches decoder-only vs encoder-decoder, and
+builds abstract input specs for every (arch × shape) dry-run cell."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    return encdec.param_specs(cfg) if cfg.encdec else \
+        transformer.param_specs(cfg)
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Params:
+    if not cfg.encdec:
+        return transformer.init_params(rng, cfg)
+    specs = encdec.param_specs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for key, (path, s) in zip(keys, flat):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        leaves.append(transformer._init_leaf(key, name, s))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            use_pallas: bool = False, remat: bool = True,
+            remat_policy: str = "full"):
+    if cfg.encdec:
+        return encdec.lm_loss(params, cfg, batch)
+    return transformer.lm_loss(params, cfg, batch, use_pallas, remat,
+                               remat_policy=remat_policy)
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            **kw):
+    if cfg.encdec:
+        return encdec.forward(params, cfg, batch)
+    return transformer.forward(params, cfg, batch, **kw)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                batch: Dict[str, jax.Array]):
+    if cfg.encdec:
+        return encdec.decode_step(params, cfg, cache, batch)
+    return transformer.decode_step(params, cfg, cache, batch)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    if cfg.encdec:
+        # encoder side sees the same seq budget; decode grows up to max_seq
+        return encdec.cache_specs(cfg, batch, src_len=max_seq,
+                                  max_tgt=max_seq)
+    return transformer.cache_specs(cfg, batch, max_seq)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  cache_specs(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (ShapeDtypeStruct) per shape cell — dry-run inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """Stand-ins for every model input of the given cell (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.param_dtype)
+
+    if shape.mode in ("train", "prefill"):
+        if cfg.encdec:
+            return {"src_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.input_mode == "embeds":
+            batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+                     "labels": jax.ShapeDtypeStruct((B, S), i32)}
+            if cfg.mrope:
+                batch["positions3"] = jax.ShapeDtypeStruct((3, B, S), i32)
+            return batch
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    # decode: one new token against a seq_len-deep cache
+    if cfg.encdec:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                 "pos": jax.ShapeDtypeStruct((1,), i32)}
+        return batch
+    if cfg.input_mode == "embeds":
+        batch = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt),
+                 "pos": jax.ShapeDtypeStruct((1,), i32)}
+        if cfg.mrope:
+            batch["positions3"] = jax.ShapeDtypeStruct((3, B, 1), i32)
+        return batch
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((1,), i32)}
+
+
+def concrete_inputs(rng: jax.Array, cfg: ArchConfig,
+                    shape: ShapeCell) -> Dict[str, jax.Array]:
+    """Real random inputs matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            rng, sub = jax.random.split(rng)
+            hi = cfg.vocab if k in ("tokens", "labels") else max(shape.seq_len, 2)
+            out[k] = jax.random.randint(sub, s.shape, 0, hi, jnp.int32)
+        else:
+            rng, sub = jax.random.split(rng)
+            out[k] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    if "pos" in out:
+        out["pos"] = jnp.asarray([shape.seq_len - 1], jnp.int32)
+    return out

@@ -1,0 +1,228 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a stub per the brief: ``src_embeds`` are precomputed
+frame embeddings.  Encoder = bidirectional self-attention stack; decoder =
+causal self-attention + cross-attention.  Both stacks scan over layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (apply_norm, apply_rope, blocked_attention,
+                                 decode_attention, gated_mlp)
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _attn_proj_specs(cfg: ArchConfig, prefix: str) -> Dict[str, Any]:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = _dt(cfg)
+    return {
+        f"{prefix}wq": jax.ShapeDtypeStruct((D, Hq, hd), dt),
+        f"{prefix}wk": jax.ShapeDtypeStruct((D, Hkv, hd), dt),
+        f"{prefix}wv": jax.ShapeDtypeStruct((D, Hkv, hd), dt),
+        f"{prefix}wo": jax.ShapeDtypeStruct((Hq, hd, D), dt),
+    }
+
+
+def _mlp_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    dt = _dt(cfg)
+    return {"w_gate": jax.ShapeDtypeStruct((D, F), dt),
+            "w_up": jax.ShapeDtypeStruct((D, F), dt),
+            "w_down": jax.ShapeDtypeStruct((F, D), dt)}
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    s = _attn_proj_specs(cfg, "")
+    s["mlp"] = _mlp_specs(cfg)
+    s["ln1"] = jax.ShapeDtypeStruct((cfg.d_model,), dt)
+    s["ln2"] = jax.ShapeDtypeStruct((cfg.d_model,), dt)
+    return s
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    s = _attn_proj_specs(cfg, "")
+    s.update(_attn_proj_specs(cfg, "x_"))
+    s["mlp"] = _mlp_specs(cfg)
+    for k in ("ln1", "ln_x", "ln2"):
+        s[k] = jax.ShapeDtypeStruct((cfg.d_model,), dt)
+    return s
+
+
+def _stack(tree, n):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    dt = _dt(cfg)
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt),
+        "enc": _stack(_enc_layer_specs(cfg), cfg.n_enc_layers),
+        "dec": _stack(_dec_layer_specs(cfg), cfg.n_dec_layers),
+        "enc_norm": jax.ShapeDtypeStruct((cfg.d_model,), dt),
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), dt),
+    }
+
+
+def _proj(p, prefix, h):
+    q = jnp.einsum("bsd,dhe->bshe", h, p[f"{prefix}wq"])
+    k = jnp.einsum("bsd,dhe->bshe", h, p[f"{prefix}wk"])
+    v = jnp.einsum("bsd,dhe->bshe", h, p[f"{prefix}wv"])
+    return q, k, v
+
+
+def encode(params: Params, cfg: ArchConfig, src_embeds: jax.Array) -> jax.Array:
+    x = src_embeds.astype(_dt(cfg))
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+
+    def body(x, p):
+        h = apply_norm(cfg.norm_kind, x, p["ln1"])
+        q, k, v = _proj(p, "", h)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        att = blocked_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bshe,hed->bsd", att, p["wo"])
+        h2 = apply_norm(cfg.norm_kind, x, p["ln2"])
+        x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], act=cfg.act)
+        return x, None
+
+    body_ck = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_ck, x, params["enc"])
+    return apply_norm(cfg.norm_kind, x, params["enc_norm"])
+
+
+def _dec_layer(cfg: ArchConfig, p: Params, x: jax.Array, enc_out: jax.Array,
+               pos: jax.Array) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p["ln1"])
+    q, k, v = _proj(p, "", h)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    att = blocked_attention(q, k, v, causal=True)
+    x = x + jnp.einsum("bshe,hed->bsd", att, p["wo"])
+
+    hx = apply_norm(cfg.norm_kind, x, p["ln_x"])
+    qx = jnp.einsum("bsd,dhe->bshe", hx, p["x_wq"])
+    kx = jnp.einsum("bsd,dhe->bshe", enc_out, p["x_wk"])
+    vx = jnp.einsum("bsd,dhe->bshe", enc_out, p["x_wv"])
+    attx = blocked_attention(qx, kx, vx, causal=False)
+    x = x + jnp.einsum("bshe,hed->bsd", attx, p["x_wo"])
+
+    h2 = apply_norm(cfg.norm_kind, x, p["ln2"])
+    return x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                         p["mlp"]["w_down"], act=cfg.act)
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, jax.Array]:
+    """batch: src_embeds [B,Ss,D], tokens [B,St] → logits [B,St,V]."""
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+
+    def body(x, p):
+        return _dec_layer(cfg, p, x, enc_out, pos), None
+
+    body_ck = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_ck, x, params["dec"])
+    x = apply_norm(cfg.norm_kind, x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, batch)
+    lb = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - gold)
+    return loss, {"loss": loss, "aux": aux}
+
+
+# -- decoding ----------------------------------------------------------------
+
+def cache_specs(cfg: ArchConfig, batch: int, src_len: int,
+                max_tgt: int) -> Params:
+    dt = _dt(cfg)
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_dec_layers
+    return {
+        "enc_out": jax.ShapeDtypeStruct((batch, src_len, cfg.d_model), dt),
+        "self_k": jax.ShapeDtypeStruct((L, batch, max_tgt, Hkv, hd), dt),
+        "self_v": jax.ShapeDtypeStruct((L, batch, max_tgt, Hkv, hd), dt),
+        "cross_k": jax.ShapeDtypeStruct((L, batch, src_len, Hkv, hd), dt),
+        "cross_v": jax.ShapeDtypeStruct((L, batch, src_len, Hkv, hd), dt),
+    }
+
+
+def init_cache_from_encoder(params: Params, cfg: ArchConfig,
+                            src_embeds: jax.Array, max_tgt: int) -> Params:
+    enc_out = encode(params, cfg, src_embeds)
+    B, Ss = enc_out.shape[0], enc_out.shape[1]
+    kx = jnp.einsum("bsd,ldhe->lbshe", enc_out,
+                    params["dec"]["x_wk"])
+    vx = jnp.einsum("bsd,ldhe->lbshe", enc_out,
+                    params["dec"]["x_wv"])
+    dt = _dt(cfg)
+    L = cfg.n_dec_layers
+    z = jnp.zeros((L, B, max_tgt, cfg.n_kv_heads, cfg.head_dim), dt)
+    return {"enc_out": enc_out, "self_k": z, "self_v": z,
+            "cross_k": kx.astype(dt), "cross_v": vx.astype(dt)}
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Params]:
+    """tokens [B,1], pos [1] → (logits [B,1,V], cache)."""
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pos = batch["pos"].astype(jnp.int32)
+    B = x.shape[0]
+    Tmax = cache["self_k"].shape[2]
+    cache_len = jnp.minimum(pos[0] + 1, Tmax) * jnp.ones((B,), jnp.int32)
+    src_len = cache["cross_k"].shape[2] * jnp.ones((B,), jnp.int32)
+
+    def body(x, xs):
+        p, sk, sv, ck, cv = xs
+        h = apply_norm(cfg.norm_kind, x, p["ln1"])
+        q, k, v = _proj(p, "", h)
+        q = apply_rope(q, pos[None], cfg.rope_theta)
+        k = apply_rope(k, pos[None], cfg.rope_theta)
+        slot = pos[0] % Tmax
+        sk = jax.lax.dynamic_update_slice(sk, k, (0, slot, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v, (0, slot, 0, 0))
+        att = decode_attention(q, sk, sv, cache_len)
+        x = x + jnp.einsum("bshe,hed->bsd", att, p["wo"])
+        hx = apply_norm(cfg.norm_kind, x, p["ln_x"])
+        qx = jnp.einsum("bsd,dhe->bshe", hx, p["x_wq"])
+        attx = decode_attention(qx, ck, cv, src_len)
+        x = x + jnp.einsum("bshe,hed->bsd", attx, p["x_wo"])
+        h2 = apply_norm(cfg.norm_kind, x, p["ln2"])
+        x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], act=cfg.act)
+        return x, (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = apply_norm(cfg.norm_kind, x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=jnp.float32)
+    cache = dict(cache, self_k=new_sk, self_v=new_sv)
+    return logits, cache

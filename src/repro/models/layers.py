@@ -1,0 +1,257 @@
+"""Shared neural-net layers: norms, RoPE / M-RoPE, MLPs, attention.
+
+Pure-functional JAX: every layer is (param-spec builder, apply fn).
+Attention is a memory-efficient double-blocked online-softmax
+implementation (flash-style in pure jnp/lax) so 32k–512k contexts lower
+without materialising S×T score matrices; the Pallas TPU kernel in
+``repro.kernels.flash_attention`` is a drop-in fast path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.act_shard import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: Optional[jax.Array],
+            eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def layernorm_nonparam(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style non-parametric LayerNorm (no scale, no bias)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def apply_norm(kind: str, x: jax.Array,
+               scale: Optional[jax.Array]) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale)
+    if kind == "nonparam_ln":
+        return layernorm_nonparam(x)
+    if kind == "layernorm":
+        # parametric LN with scale only (bias-free, llama-era convention)
+        y = layernorm_nonparam(x)
+        if scale is not None:
+            y = y * (1.0 + scale.astype(y.dtype))
+        return y
+    raise ValueError(f"unknown norm kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + 3-axis M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    freqs = rope_frequencies(x.shape[-1], theta)              # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, D/2]
+    ang = ang[..., None, :]                                   # [..., S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                sections: tuple[int, int, int] = (1, 1, 2),
+                theta: float = 10_000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the head-dim frequency bands are split
+    across (temporal, height, width) position axes.
+
+    x [B, S, H, D]; positions3 [3, B, S].
+    ``sections`` are relative proportions of the D/2 frequency bands.
+    """
+    half = x.shape[-1] // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sizes[0] - sizes[1]
+    freqs = rope_frequencies(x.shape[-1], theta)              # [D/2]
+    # per-frequency-band position selection
+    band = jnp.concatenate([
+        jnp.full((sizes[0],), 0, dtype=jnp.int32),
+        jnp.full((sizes[1],), 1, dtype=jnp.int32),
+        jnp.full((sizes[2],), 2, dtype=jnp.int32)])           # [D/2]
+    # pos3 [3,B,S] -> select per band: [B,S,D/2]
+    pos_sel = jnp.take(positions3, band, axis=0)              # [D/2? no]
+    # positions3 indexed on axis 0 by band -> [D/2, B, S]; move axis
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                    # [B, S, D/2]
+    ang = pos_sel.astype(jnp.float32) * freqs                 # [B, S, D/2]
+    ang = ang[..., None, :]                                   # [B, S, 1, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def gated_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """SwiGLU/GeGLU block: (act(x·Wg) ⊙ x·Wu)·Wd."""
+    g = constrain(jnp.einsum("bsd,df->bsf", x, w_gate), "bsf")
+    u = constrain(jnp.einsum("bsd,df->bsf", x, w_up), "bsf")
+    if act == "silu":
+        g = jax.nn.silu(g)
+    elif act == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        raise ValueError(act)
+    return constrain(jnp.einsum("bsf,fd->bsd", g * u, w_down), "bsd")
+
+
+# ---------------------------------------------------------------------------
+# Blocked online-softmax attention (train/prefill path)
+# ---------------------------------------------------------------------------
+
+def _softcap(s: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(s / cap) if cap > 0.0 else s
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q_offset: int | jax.Array = 0,
+                      causal: bool = True,
+                      window: int = 0,
+                      softcap: float = 0.0,
+                      block_q: int = 512,
+                      block_k: int = 1024) -> jax.Array:
+    """Memory-efficient attention.
+
+    q [B,S,Hq,D], k/v [B,T,Hkv,D] with Hq = G·Hkv (GQA).
+    ``window`` > 0 => sliding-window (local) attention of that width.
+    ``softcap`` > 0 => gemma2-style logit soft-capping.
+    Never materialises more than [B, block_q, Hq, block_k] scores.
+    """
+    B, S, Hq, Dh = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = Dh ** -0.5
+    out_dtype = q.dtype
+
+    block_q = min(block_q, max(S, 1))
+    block_k = min(block_k, max(T, 1))
+
+    qp = _pad_axis(q, 1, block_q)
+    kp = _pad_axis(k, 1, block_k)
+    vp = _pad_axis(v, 1, block_k)
+    Sp, Tp = qp.shape[1], kp.shape[1]
+    nq, nk = Sp // block_q, Tp // block_k
+
+    qb = qp.reshape(B, nq, block_q, Hkv, G, Dh)
+    kb = kp.reshape(B, nk, block_k, Hkv, Dh)
+    vb = vp.reshape(B, nk, block_k, Hkv, Dh)
+    kb = jnp.moveaxis(kb, 1, 0)      # [nk, B, bk, Hkv, D]
+    vb = jnp.moveaxis(vb, 1, 0)
+
+    q_pos_base = jnp.asarray(q_offset, jnp.int32)
+
+    def one_q_block(args):
+        qi, qblk = args                      # qblk [B,bq,Hkv,G,D]
+        q_pos = q_pos_base + qi * block_q + jnp.arange(block_q, dtype=jnp.int32)
+        valid_q = (qi * block_q + jnp.arange(block_q)) < S
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            k_pos = ki * block_k + jnp.arange(block_k, dtype=jnp.int32)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            mask = (k_pos[None, :] <= q_pos[:, None]) if causal else \
+                jnp.ones((block_q, block_k), bool)
+            if window > 0:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            mask = mask & (k_pos[None, :] < T)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (m_new == NEG_INF)
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+            alpha = jnp.where(m <= NEG_INF / 2, 0.0,
+                              jnp.exp(m - m_safe))
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, block_q, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, block_q, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, block_q, Hkv, G, Dh), jnp.float32)
+        ks = jnp.arange(nk, dtype=jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, kb, vb))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        out = out * valid_q[None, :, None, None, None]
+        return out.astype(out_dtype)     # [B,bq,Hkv,G,D]
+
+    qis = jnp.arange(nq, dtype=jnp.int32)
+    outs = jax.lax.map(one_q_block,
+                       (qis, jnp.moveaxis(qb, 1, 0)))     # [nq,B,bq,Hkv,G,D]
+    outs = jnp.moveaxis(outs, 0, 1).reshape(B, Sp, Hq, Dh)
+    return outs[:, :S]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *,
+                     window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """Single-position attention against a KV cache.
+
+    q [B,1,Hq,D]; caches [B,T,Hkv,D]; cache_len: number of valid entries
+    (new token already written at cache_len-1).
+    """
+    B, _, Hq, Dh = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    s = _softcap(s, softcap)
+    k_pos = jnp.arange(T, dtype=jnp.int32)
+    mask = k_pos[None, :] < cache_len.reshape(-1, 1)
+    if window > 0:
+        mask = mask & (k_pos[None, :] >= cache_len.reshape(-1, 1) - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts layer with capacity-based scatter dispatch.
+
+Design notes (roofline-driven):
+  * the common one-hot einsum dispatch builds a [tokens, experts, capacity]
+    tensor — O(T·E·C) memory, hopeless at 1M tokens.  We instead compute
+    per-assignment capacity positions with a cumsum over a [T·k, E]
+    one-hot (cheap), scatter token activations into an [E_pad, C, D]
+    buffer, run the expert FFNs as one batched einsum (the MXU-friendly
+    form), and scatter back weighted by router probabilities.
+  * the expert dim is PADDED to a multiple of 16 (``cfg.expert_pad_to``)
+    so it shards cleanly over the model axis — without this, GSPMD
+    replicates the whole expert compute on every device (measured 16×
+    FLOPs blowup on qwen2-moe; EXPERIMENTS.md §Perf iteration M1).
+    Dummy experts receive no tokens and contribute zero gradient.
+  * capacity is rounded up to a multiple of 512 so the capacity dim can
+    shard over the batch axes.
+  * activation-sharding constraints pin [E,C,*] layouts (expert dim over
+    tp, capacity over batch); the scatter/gather then lowers to the
+    expected all-to-all-style redistribution instead of dense fallbacks.
+
+Supports shared experts (Qwen2-MoE: 4 shared + 60 routed top-4) and an
+auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_shard import batch_groups, constrain
+from repro.models.layers import gated_mlp
+
+CAPACITY_ROUND = 512
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def moe_ffn(x: jax.Array, params: dict, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, act: str = "silu") -> MoEOutput:
+    """x [B,S,D]; params: router [D,E], w_gate/w_up [E_pad,D,F],
+    w_down [E_pad,F,D], optional shared_{gate,up,down}."""
+    B, S, D = x.shape
+    E, k = n_experts, top_k
+    Ep = params["w_gate"].shape[0]
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [T,E]
+    topw, topi = jax.lax.top_k(probs, k)                         # [T,k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), 0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * router_mean)
+
+    # GROUP-LOCAL dispatch: one capacity slice per batch shard (G groups)
+    # so the scatter/gather never cross data shards — the only cross-device
+    # traffic left is the expert-output partial-sum over the model axis.
+    #
+    # The buffer fill and the return path are G-batched take_along_axis
+    # gathers (GSPMD partitions those shard-locally); the only scatter is
+    # int32 token-ids into the slot table (~MBs even if replicated).
+    # Dropped (over-capacity) assignments write to a trash slot so they
+    # can never clobber a live slot.
+    G = batch_groups()
+    if T % G != 0:
+        G = 1
+    Tg = T // G
+    cap_g = int(max(1, (k * Tg * capacity_factor) // Ep))
+    cap_g = -(-cap_g // 128) * 128
+    n_slots = Ep * cap_g
+
+    flat_e = topi.reshape(G, Tg * k)                             # [G,Tgk]
+    onehot = jax.nn.one_hot(flat_e, Ep, dtype=jnp.int32)         # [G,Tgk,Ep]
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - onehot)             # before me
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None],
+                              axis=2)[..., 0]                    # [G,Tgk]
+    keep = pos < cap_g
+    lin = flat_e * cap_g + jnp.minimum(pos, cap_g - 1)           # [G,Tgk]
+    lin_w = jnp.where(keep, lin, n_slots)                        # trash slot
+    g_rows = jnp.arange(G, dtype=jnp.int32)[:, None]
+
+    tok_ids = jnp.broadcast_to(jnp.arange(Tg * k, dtype=jnp.int32),
+                               (G, Tg * k))
+    slot_tok = jnp.full((G, n_slots + 1), Tg * k, jnp.int32)     # sentinel
+    slot_tok = slot_tok.at[g_rows, lin_w].set(tok_ids, mode="drop")
+    slot_tok = slot_tok[:, :n_slots]
+    slot_valid = slot_tok < Tg * k
+
+    xe = jnp.repeat(xt.reshape(G, Tg, D), k, axis=1)             # [G,Tgk,D]
+    xe = constrain(xe, "gtd")
+    buf = jnp.take_along_axis(
+        xe, jnp.minimum(slot_tok, Tg * k - 1)[..., None], axis=1)
+    buf = jnp.where(slot_valid[..., None], buf, 0)
+    buf = constrain(buf.reshape(G, Ep, cap_g, D), "gecd")
+
+    # expert FFNs as batched einsums over [G, Ep, C_g, *]
+    g = constrain(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]),
+                  "gecf")
+    u = constrain(jnp.einsum("gecd,edf->gecf", buf, params["w_up"]),
+                  "gecf")
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    ye = jnp.einsum("gecf,efd->gecd", g * u, params["w_down"])
+    ye = constrain(ye, "gecd")
+
+    # return path: G-batched gather, weight by router prob
+    back = jnp.take_along_axis(ye.reshape(G, n_slots, D),
+                               lin[..., None], axis=1)           # [G,Tgk,D]
+    back = jnp.where(keep[..., None], back, 0)
+    w = topw.reshape(G, Tg * k, 1).astype(back.dtype)
+    y = jnp.sum((back * w).reshape(G, Tg, k, D), axis=2).reshape(T, D)
+
+    if "shared_gate" in params:
+        y = y + gated_mlp(x, params["shared_gate"], params["shared_up"],
+                          params["shared_down"], act=act).reshape(T, D)
+
+    return MoEOutput(y.reshape(B, S, D), aux.astype(jnp.float32))

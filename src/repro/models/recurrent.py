@@ -1,0 +1,272 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (Griffin/RecurrentGemma),
+mLSTM and sLSTM (xLSTM).
+
+All three are sub-quadratic — these are the architectures that run the
+``long_500k`` shape cell.  Training uses parallel forms (associative scan
+for RG-LRU, chunked gated-linear-attention for mLSTM, time scan for
+sLSTM); decoding carries O(1) recurrent state.
+
+The jnp reference oracles for the Pallas `rglru_scan` kernel call
+:func:`rglru_scan_ref` here, keeping kernel and model in lockstep.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+SQRT_EPS = 1e-6
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width-K), used by Griffin + mLSTM blocks
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """x [B,S,D], kernel [K,D] depthwise causal convolution."""
+    K = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :] * kernel[i]
+    return out
+
+
+def causal_conv1d_step(x_t: jax.Array, buf: jax.Array,
+                       kernel: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x_t [B,D]; buf [B,K-1,D] (previous inputs)."""
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)     # [B,K,D]
+    y = jnp.einsum("bkd,kd->bd", window, kernel)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru_gates(x: jax.Array, params: dict) -> Tuple[jax.Array, jax.Array]:
+    """a_t (decay) and gated input for the linear recurrence.
+
+    r_t = sigmoid(x W_a), i_t = sigmoid(x W_x),
+    a_t = exp(-c * softplus(Lambda) * r_t),
+    u_t = sqrt(1 - a_t^2) * (i_t * x_t).
+    """
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x, params["w_a"]))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x, params["w_x"]))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), SQRT_EPS)) * (i * x)
+    return a, u
+
+
+def rglru_scan_ref(a: jax.Array, u: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """Linear recurrence h_t = a_t*h_{t-1} + u_t via associative scan.
+
+    a,u [B,S,D]; h0 [B,D] optional initial state. Returns h [B,S,D].
+    This is also the jnp oracle for kernels/rglru_scan.
+    """
+    if h0 is not None:
+        # fold the initial state into the first step
+        u = u.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    af = a.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (af, uf), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_block(x: jax.Array, params: dict,
+                use_pallas: bool = False) -> jax.Array:
+    """Griffin recurrent block: gate branch ⊙ (conv → RG-LRU) branch."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_gate"]))
+    rec = jnp.einsum("bsd,de->bse", x, params["w_rec"])
+    rec = causal_conv1d(rec, params["conv"])
+    a, u = rglru_gates(rec, params)
+    if use_pallas:
+        from repro.kernels.ops import rglru_scan
+        h = rglru_scan(a, u)
+    else:
+        h = rglru_scan_ref(a, u)
+    return jnp.einsum("bse,ed->bsd", h * gate, params["w_out"])
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array        # [B, Dr]
+    conv: jax.Array     # [B, K-1, Dr]
+
+
+def rglru_block_step(x_t: jax.Array, state: RGLRUState,
+                     params: dict) -> Tuple[jax.Array, RGLRUState]:
+    """Decode step. x_t [B,D]."""
+    gate = jax.nn.gelu(jnp.einsum("bd,de->be", x_t, params["w_gate"]))
+    rec = jnp.einsum("bd,de->be", x_t, params["w_rec"])
+    rec, conv = causal_conv1d_step(rec, state.conv, params["conv"])
+    a, u = rglru_gates(rec, params)
+    h = a * state.h + u
+    y = jnp.einsum("be,ed->bd", h * gate, params["w_out"])
+    return y, RGLRUState(h, conv)
+
+
+def rglru_init_state(batch: int, d_rec: int, conv_k: int,
+                     dtype=jnp.float32) -> RGLRUState:
+    return RGLRUState(jnp.zeros((batch, d_rec), dtype),
+                      jnp.zeros((batch, conv_k - 1, d_rec), dtype))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) — chunked gated-linear-attention form
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
+                   log_f: jax.Array, log_i: jax.Array,
+                   chunk: int = 128) -> jax.Array:
+    """Chunk-parallel mLSTM.
+
+    q,k,v [B,S,H,D]; log_f/log_i [B,S,H] (log forget / input gates).
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ; y_t = C_t q_t / max(|n_t.q_t|,1).
+    O(S·chunk) time, O(1) state between chunks.
+    """
+    B, S, H, D = q.shape
+    pad = (-S) % chunk
+    if pad:
+        q, k, v = (jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for x in (q, k, v))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e9)
+    Sp = q.shape[1]
+    n_chunks = Sp // chunk
+
+    def rs(x, d):
+        return jnp.moveaxis(x.reshape(B, n_chunks, chunk, H, *d), 1, 0)
+
+    qc, kc, vc = rs(q, (D,)), rs(k, (D,)), rs(v, (D,))       # [N,B,c,H,D]
+    fc, ic = rs(log_f, ()), rs(log_i, ())                    # [N,B,c,H]
+    scale = D ** -0.5
+
+    def chunk_step(carry, xs):
+        S_state, n_state, m_state = carry    # [B,H,D,D], [B,H,D], [B,H]
+        qq, kk, vv, lf, li = xs
+        cf = jnp.cumsum(lf, axis=1)                          # [B,c,H]
+        total_f = cf[:, -1]                                  # [B,H]
+        # stabiliser: running max of (cf - li-ish) terms
+        m_intra = jnp.max(li - cf, axis=1)                   # [B,H] (for state)
+        m_new = jnp.maximum(m_state + total_f, m_intra + total_f)
+
+        # intra-chunk: A[t,s] = q_t.k_s * exp(cf_t - cf_s + li_s - (cf_t + m_rel))
+        # use per-row stabilisation via m_row
+        qk = jnp.einsum("bthd,bshd->bhts", qq, kk,
+                        preferred_element_type=jnp.float32) * scale
+        dmat = cf[:, :, None, :] - cf[:, None, :, :] + li[:, None, :, :]
+        dmat = jnp.moveaxis(dmat, 3, 1)                      # [B,H,t,s]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(causal[None, None], dmat, -1e30)
+        # inter contribution decay: exp(cf_t + m_prev_rel)
+        inter_log = jnp.moveaxis(cf, 2, 1) + m_state[..., None]   # [B,H,t]
+        m_row = jnp.maximum(jnp.max(dmat, axis=-1), inter_log)
+        w_intra = jnp.exp(dmat - m_row[..., None])
+        w_inter = jnp.exp(inter_log - m_row)
+        y_intra = jnp.einsum("bhts,bhts,bshd->bthd",
+                             jnp.where(causal[None, None], 1.0, 0.0),
+                             w_intra * qk, vv.astype(jnp.float32))
+        y_inter = jnp.einsum("bthd,bhde,bht->bthe", qq.astype(jnp.float32),
+                             S_state, w_inter) * scale
+        n_intra = jnp.einsum("bhts,bshd->bthd", w_intra * qk * 0 + w_intra,
+                             kk.astype(jnp.float32)) * scale
+        n_row = jnp.einsum("bthd,bthd->bth", qq.astype(jnp.float32),
+                           n_intra) + jnp.einsum(
+            "bthd,bhd,bht->bth", qq.astype(jnp.float32), n_state, w_inter) * scale
+        denom = jnp.maximum(jnp.abs(n_row), jnp.exp(-m_row.transpose(0, 2, 1)))
+        y = (y_intra + y_inter) / denom[..., None]
+
+        # state update (relative to m_new)
+        decay_state = jnp.exp(m_state + total_f - m_new)     # [B,H]
+        w_tok = jnp.exp((total_f[:, None] - cf) + li - m_new[:, None])  # [B,c,H]
+        S_new = (S_state * decay_state[..., None, None]
+                 + jnp.einsum("bshd,bsh,bshe->bhde", kk.astype(jnp.float32),
+                              w_tok, vv.astype(jnp.float32)))
+        n_new = (n_state * decay_state[..., None]
+                 + jnp.einsum("bshd,bsh->bhd", kk.astype(jnp.float32), w_tok))
+        return (S_new, n_new, m_new), y.astype(q.dtype)
+
+    S0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, (S0, n0, m0), (qc, kc, vc, fc, ic))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, D)
+    return y[:, :S]
+
+
+class MLSTMState(NamedTuple):
+    S: jax.Array   # [B,H,D,D]
+    n: jax.Array   # [B,H,D]
+    m: jax.Array   # [B,H]
+
+
+def mlstm_step(q, k, v, log_f, log_i, state: MLSTMState
+               ) -> Tuple[jax.Array, MLSTMState]:
+    """Decode step; q,k,v [B,H,D]; gates [B,H]."""
+    D = q.shape[-1]
+    scale = D ** -0.5
+    m_new = jnp.maximum(state.m + log_f, log_i)
+    decay = jnp.exp(state.m + log_f - m_new)
+    inw = jnp.exp(log_i - m_new)
+    S_new = (state.S * decay[..., None, None]
+             + jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                          v.astype(jnp.float32)) * inw[..., None, None])
+    n_new = state.n * decay[..., None] + k.astype(jnp.float32) * inw[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), S_new) * scale
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32),
+                             n_new)) * scale
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return y.astype(q.dtype), MLSTMState(S_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exponential gating) — sequential
+# ---------------------------------------------------------------------------
+
+def slstm_seq(x: jax.Array, params: dict,
+              state: tuple | None = None) -> Tuple[jax.Array, tuple]:
+    """x [B,S,D]. Sequential scan (the sLSTM recurrence is not
+    parallelisable: gates depend on h_{t-1} through R)."""
+    B, S, D = x.shape
+    wz, wi, wf, wo = (params[k] for k in ("w_z", "w_i", "w_f", "w_o"))
+    rz, ri, rf, ro = (params[k] for k in ("r_z", "r_i", "r_f", "r_o"))
+
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z + 1e-6, z, z)   # c, n, h, m
+
+    def step(carry, x_t):
+        c, n, h, m = carry
+        xf = x_t.astype(jnp.float32)
+        zt = jnp.tanh(xf @ wz + h @ rz)
+        it = xf @ wi + h @ ri
+        ft = xf @ wf + h @ rf
+        ot = jax.nn.sigmoid(xf @ wo + h @ ro)
+        m_new = jnp.maximum(ft + m, it)
+        i_e = jnp.exp(it - m_new)
+        f_e = jnp.exp(ft + m - m_new)
+        c_new = f_e * c + i_e * zt
+        n_new = f_e * n + i_e
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), final
+
+
+def slstm_init_state(batch: int, d: int) -> tuple:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z + 1e-6, z, z)

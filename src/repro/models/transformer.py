@@ -1,0 +1,705 @@
+"""Decoder-only LM supporting every assigned block family.
+
+Layers are grouped into *pattern periods* (one repetition of
+``cfg.block_pattern``) with parameters stacked over periods; the forward
+pass is a single ``lax.scan`` over periods so HLO size is O(1) in depth —
+required to compile llama3-405b × 512 devices on a CPU host.  A remainder
+prefix (e.g. recurrentgemma's 38 = 12·3 + 2) becomes a second, smaller
+scan group.
+
+Three entry points per architecture:
+  * :func:`forward`      — full-sequence logits (+ MoE aux loss): train path
+  * :func:`prefill`      — forward that also fills the decode cache
+  * :func:`decode_step`  — one token against the cache: serve path
+
+Caches for local-attention layers are ring buffers of the window size, so
+recurrentgemma's 500k-token decode carries O(window) state, not O(seq).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import recurrent as rec
+from repro.models.layers import (apply_mrope, apply_norm, apply_rope,
+                                 blocked_attention, decode_attention,
+                                 gated_mlp)
+from repro.models.moe import moe_ffn
+from repro.distributed.act_shard import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _norm_has_scale(cfg: ArchConfig) -> bool:
+    return cfg.norm_kind in ("rmsnorm", "layernorm")
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ArchConfig, moe: bool) -> Dict[str, Any]:
+    D, Hq, Hkv, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim, cfg.d_ff)
+    dt = _dtype(cfg)
+    s: Dict[str, Any] = {
+        "wq": jax.ShapeDtypeStruct((D, Hq, hd), dt),
+        "wk": jax.ShapeDtypeStruct((D, Hkv, hd), dt),
+        "wv": jax.ShapeDtypeStruct((D, Hkv, hd), dt),
+        "wo": jax.ShapeDtypeStruct((Hq, hd, D), dt),
+    }
+    if _norm_has_scale(cfg):
+        s["ln1"] = jax.ShapeDtypeStruct((D,), dt)
+        s["ln2"] = jax.ShapeDtypeStruct((D,), dt)
+    if moe:
+        E, Fm = cfg.n_experts, cfg.moe_d_ff or F
+        Ep = cfg.n_experts_padded      # dummy experts receive no tokens
+        s["moe"] = {
+            "router": jax.ShapeDtypeStruct((D, E), dt),
+            "w_gate": jax.ShapeDtypeStruct((Ep, D, Fm), dt),
+            "w_up": jax.ShapeDtypeStruct((Ep, D, Fm), dt),
+            "w_down": jax.ShapeDtypeStruct((Ep, Fm, D), dt),
+        }
+        if cfg.n_shared_experts > 0:
+            Fs = Fm * cfg.n_shared_experts
+            s["moe"]["shared_gate"] = jax.ShapeDtypeStruct((D, Fs), dt)
+            s["moe"]["shared_up"] = jax.ShapeDtypeStruct((D, Fs), dt)
+            s["moe"]["shared_down"] = jax.ShapeDtypeStruct((Fs, D), dt)
+    elif F > 0:
+        s["mlp"] = {
+            "w_gate": jax.ShapeDtypeStruct((D, F), dt),
+            "w_up": jax.ShapeDtypeStruct((D, F), dt),
+            "w_down": jax.ShapeDtypeStruct((F, D), dt),
+        }
+    return s
+
+
+def _rglru_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    D, Dr, K, F = cfg.d_model, cfg.d_rec_actual, cfg.conv_width, cfg.d_ff
+    dt = _dtype(cfg)
+    s = {
+        "w_gate": jax.ShapeDtypeStruct((D, Dr), dt),
+        "w_rec": jax.ShapeDtypeStruct((D, Dr), dt),
+        "conv": jax.ShapeDtypeStruct((K, Dr), dt),
+        "w_a": jax.ShapeDtypeStruct((Dr, Dr), dt),
+        "w_x": jax.ShapeDtypeStruct((Dr, Dr), dt),
+        "lam": jax.ShapeDtypeStruct((Dr,), jnp.float32),
+        "w_out": jax.ShapeDtypeStruct((Dr, D), dt),
+    }
+    if _norm_has_scale(cfg):
+        s["ln1"] = jax.ShapeDtypeStruct((D,), dt)
+        s["ln2"] = jax.ShapeDtypeStruct((D,), dt)
+    if F > 0:
+        s["mlp"] = {
+            "w_gate": jax.ShapeDtypeStruct((D, F), dt),
+            "w_up": jax.ShapeDtypeStruct((D, F), dt),
+            "w_down": jax.ShapeDtypeStruct((F, D), dt),
+        }
+    return s
+
+
+def _mlstm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    s = {
+        "wq": jax.ShapeDtypeStruct((D, H, hd), dt),
+        "wk": jax.ShapeDtypeStruct((D, H, hd), dt),
+        "wv": jax.ShapeDtypeStruct((D, H, hd), dt),
+        "w_if": jax.ShapeDtypeStruct((D, 2 * H), jnp.float32),
+        "w_og": jax.ShapeDtypeStruct((D, D), dt),
+        "w_out": jax.ShapeDtypeStruct((H, hd, D), dt),
+    }
+    if _norm_has_scale(cfg):
+        s["ln1"] = jax.ShapeDtypeStruct((D,), dt)
+    return s
+
+
+def _slstm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    dt = jnp.float32  # recurrent weights stay fp32 for stability
+    s = {k: jax.ShapeDtypeStruct((D, D), dt)
+         for k in ("w_z", "w_i", "w_f", "w_o", "r_z", "r_i", "r_f", "r_o")}
+    if _norm_has_scale(cfg):
+        s["ln1"] = jax.ShapeDtypeStruct((cfg.d_model,), _dtype(cfg))
+    return s
+
+
+def _block_specs(cfg: ArchConfig, kind: str) -> Dict[str, Any]:
+    if kind in ("attn", "attn_local", "attn_global"):
+        return _attn_specs(cfg, moe=cfg.family == "moe")
+    if kind == "rglru":
+        return _rglru_specs(cfg)
+    if kind == "mlstm":
+        return _mlstm_specs(cfg)
+    if kind == "slstm":
+        return _slstm_specs(cfg)
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _stack_specs(specs: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), specs)
+
+
+def group_layout(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_full_periods, n_remainder_layers)."""
+    per = len(cfg.block_pattern)
+    return cfg.n_layers // per, cfg.n_layers % per
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    n_per, n_rem = group_layout(cfg)
+    specs: Params = {
+        "embed": jax.ShapeDtypeStruct((V, D), dt),
+    }
+    blocks = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        blocks[f"p{i}_{kind}"] = _stack_specs(_block_specs(cfg, kind), n_per)
+    specs["blocks"] = blocks
+    if n_rem:
+        specs["rem"] = {
+            f"r{i}_{cfg.block_pattern[i]}": _block_specs(
+                cfg, cfg.block_pattern[i])
+            for i in range(n_rem)}
+    if _norm_has_scale(cfg):
+        specs["final_norm"] = jax.ShapeDtypeStruct((D,), dt)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = jax.ShapeDtypeStruct((D, V), dt)
+    return specs
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Params:
+    """Real initialisation (smoke tests / example training runs)."""
+    specs = param_specs(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(rng, len(flat))
+    leaves = []
+    for key, (path, s) in zip(keys, flat):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        leaves.append(_init_leaf(key, name, s))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _init_leaf(key: jax.Array, name: str, s: jax.ShapeDtypeStruct):
+    if name.endswith("lam"):
+        # RG-LRU: a = exp(-c softplus(lam)) in (0.9, 0.999) at r=0.5 paths
+        a = jax.random.uniform(key, s.shape, jnp.float32, 0.9, 0.999)
+        sp = -jnp.log(a) / rec.RGLRU_C * 2.0
+        return jnp.log(jnp.expm1(jnp.maximum(sp, 1e-6)))
+    if "ln" in name.split("/")[-1] or name.endswith("final_norm"):
+        return jnp.zeros(s.shape, s.dtype)
+    if name.endswith("conv"):
+        return (jax.random.normal(key, s.shape, jnp.float32) * 0.1
+                ).astype(s.dtype)
+    fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+    if len(s.shape) >= 3:
+        fan_in = int(np.prod(s.shape[:-1])) // (s.shape[0] if len(s.shape) == 4 else 1)
+        fan_in = max(fan_in, 1)
+    std = 0.02 if "embed" in name else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree_util.tree_leaves(param_specs(cfg)))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE counts top-k + shared experts only);
+    used for MODEL_FLOPS = 6·N_active·D in the roofline."""
+    total = 0
+    for path, s in jax.tree_util.tree_flatten_with_path(param_specs(cfg))[0]:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        n = int(np.prod(s.shape))
+        if "/moe/" in name or name.startswith("moe"):
+            if any(k in name for k in ("w_gate", "w_up", "w_down")) \
+                    and "shared" not in name:
+                n = n * cfg.top_k // max(cfg.n_experts_padded, 1)
+        if "embed" in name or "lm_head" in name:
+            continue  # 6ND convention excludes embeddings
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Block applications (train/prefill path)
+# ---------------------------------------------------------------------------
+
+def _window_for(cfg: ArchConfig, kind: str) -> int:
+    if kind == "attn_global":
+        return 0
+    if kind in ("attn_local", "attn"):
+        return cfg.sliding_window
+    return 0
+
+
+def _project_qkv(p: Params, h: jax.Array):
+    q = constrain(jnp.einsum("bsd,dhe->bshe", h, p["wq"]), "bshe")
+    k = constrain(jnp.einsum("bsd,dhe->bshe", h, p["wk"]), "bshe")
+    v = constrain(jnp.einsum("bsd,dhe->bshe", h, p["wv"]), "bshe")
+    return q, k, v
+
+
+def _apply_attn_block(cfg: ArchConfig, kind: str, p: Params, x: jax.Array,
+                      pos: jax.Array, pos3: Optional[jax.Array],
+                      ) -> Tuple[jax.Array, jax.Array, Tuple]:
+    """Returns (x_out, aux_loss, (k, v)) — k/v exposed for prefill caching."""
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    q, k, v = _project_qkv(p, h)
+    if cfg.mrope and pos3 is not None:
+        q = apply_mrope(q, pos3, theta=cfg.rope_theta)
+        k = apply_mrope(k, pos3, theta=cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, theta=cfg.rope_theta)
+    att = blocked_attention(q, k, v, causal=True,
+                            window=_window_for(cfg, kind),
+                            softcap=cfg.attn_softcap)
+    x = constrain(x + jnp.einsum("bshe,hed->bsd", att, p["wo"]), "bsd")
+
+    h2 = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        y, aux = moe_ffn(h2, p["moe"], n_experts=cfg.n_experts,
+                         top_k=cfg.top_k,
+                         capacity_factor=cfg.capacity_factor, act=cfg.act)
+        x = x + y
+    elif "mlp" in p:
+        x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], act=cfg.act)
+    return x, aux, (k, v)
+
+
+def _apply_rglru_block(cfg: ArchConfig, p: Params, x: jax.Array,
+                       use_pallas: bool) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    x = x + rec.rglru_block(h, p, use_pallas=use_pallas).astype(x.dtype)
+    if "mlp" in p:
+        h2 = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+        x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], act=cfg.act)
+    return x
+
+
+def _apply_mlstm_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    q, k, v = _project_qkv(p, h)
+    gates = jnp.einsum("bsd,dg->bsg", h.astype(jnp.float32), p["w_if"])
+    log_i, log_f = jnp.split(gates, 2, axis=-1)       # [B,S,H]
+    log_f = jax.nn.log_sigmoid(log_f)
+    y = rec.mlstm_parallel(q, k, v, log_f, log_i, chunk=cfg.mlstm_chunk)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", h, p["w_og"]))
+    out = jnp.einsum("bshe,hed->bsd", y, p["w_out"])
+    return x + (out * og).astype(x.dtype)
+
+
+def _apply_slstm_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    y, _ = rec.slstm_seq(h, p)
+    return x + y.astype(x.dtype)
+
+
+def apply_block(cfg: ArchConfig, kind: str, p: Params, x: jax.Array,
+                pos: jax.Array, pos3: Optional[jax.Array],
+                use_pallas: bool = False) -> Tuple[jax.Array, jax.Array]:
+    if kind.startswith("attn"):
+        x, aux, _ = _apply_attn_block(cfg, kind, p, x, pos, pos3)
+        return x, aux
+    if kind == "rglru":
+        return _apply_rglru_block(cfg, p, x, use_pallas), jnp.zeros((), jnp.float32)
+    if kind == "mlstm":
+        return _apply_mlstm_block(cfg, p, x), jnp.zeros((), jnp.float32)
+    if kind == "slstm":
+        return _apply_slstm_block(cfg, p, x), jnp.zeros((), jnp.float32)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) path
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = constrain(x, "bsd")
+    S = x.shape[1]
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    pos3 = batch.get("positions3")
+    return x, pos, pos3
+
+
+def unembed(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(cfg.norm_kind, x, params.get("final_norm"))
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return constrain(logits, "bsv")
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            use_pallas: bool = False,
+            remat: bool = True,
+            remat_policy: str = "full") -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. Returns (logits [B,S,V] f32, aux_loss)."""
+    x, pos, pos3 = embed_inputs(params, cfg, batch)
+    n_per, n_rem = group_layout(cfg)
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for i, kind in enumerate(cfg.block_pattern):
+            x, a = apply_block(cfg, kind, period_params[f"p{i}_{kind}"],
+                               x, pos, pos3, use_pallas)
+            aux = aux + a
+        return (x, aux), None
+
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if remat_policy == "dots"
+              else jax.checkpoint_policies.nothing_saveable)
+    body = jax.checkpoint(period_body, policy=policy) \
+        if remat else period_body
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_per > 0:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"])
+    else:
+        aux = aux0
+    if n_rem:
+        for i in range(n_rem):
+            kind = cfg.block_pattern[i]
+            x, a = apply_block(cfg, kind, params["rem"][f"r{i}_{kind}"],
+                               x, pos, pos3, use_pallas)
+            aux = aux + a
+    return unembed(params, cfg, x), aux
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            use_pallas: bool = False, remat: bool = True,
+            aux_weight: float = 0.01,
+            remat_policy: str = "full") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ MoE aux). Labels default to shifted
+    tokens; `embeds` inputs must supply explicit labels."""
+    logits, aux = forward(params, cfg, batch, use_pallas, remat,
+                          remat_policy)
+    if "labels" in batch:
+        labels = batch["labels"]
+        valid = labels >= 0
+        labels = jnp.maximum(labels, 0)
+        lg, lb = logits, labels
+    else:
+        lg = logits[:, :-1]
+        lb = batch["tokens"][:, 1:]
+        valid = jnp.ones_like(lb, dtype=bool)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, lb[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+def _cache_len_for(cfg: ArchConfig, kind: str, max_seq: int) -> int:
+    w = _window_for(cfg, kind)
+    return min(max_seq, w) if w > 0 else max_seq
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    """Abstract decode-state tree (ShapeDtypeStructs)."""
+    dt = _dtype(cfg)
+    n_per, n_rem = group_layout(cfg)
+
+    def block_cache(kind: str) -> Dict[str, Any]:
+        if kind.startswith("attn"):
+            L = _cache_len_for(cfg, kind, max_seq)
+            return {
+                "k": jax.ShapeDtypeStruct((batch, L, cfg.n_kv_heads,
+                                           cfg.head_dim), dt),
+                "v": jax.ShapeDtypeStruct((batch, L, cfg.n_kv_heads,
+                                           cfg.head_dim), dt),
+            }
+        if kind == "rglru":
+            Dr, K = cfg.d_rec_actual, cfg.conv_width
+            return {"h": jax.ShapeDtypeStruct((batch, Dr), jnp.float32),
+                    "conv": jax.ShapeDtypeStruct((batch, K - 1, Dr), dt)}
+        if kind == "mlstm":
+            H, hd = cfg.n_heads, cfg.head_dim
+            return {"S": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+                    "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+                    "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+                    }
+        if kind == "slstm":
+            D = cfg.d_model
+            return {k: jax.ShapeDtypeStruct((batch, D), jnp.float32)
+                    for k in ("c", "n", "h", "m")}
+        raise ValueError(kind)
+
+    def stack(tree, n):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+    cache: Params = {"blocks": {
+        f"p{i}_{kind}": stack(block_cache(kind), n_per)
+        for i, kind in enumerate(cfg.block_pattern)}}
+    if n_rem:
+        cache["rem"] = {f"r{i}_{cfg.block_pattern[i]}":
+                        block_cache(cfg.block_pattern[i])
+                        for i in range(n_rem)}
+    return cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  cache_specs(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _decode_attn(cfg: ArchConfig, kind: str, p: Params, c: Params,
+                 x: jax.Array, pos: jax.Array,
+                 pos3: Optional[jax.Array]) -> Tuple[jax.Array, Params]:
+    """x [B,1,D]; ring-buffer cache write + masked attention."""
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    q, k, v = _project_qkv(p, h)
+    if cfg.mrope and pos3 is not None:
+        q = apply_mrope(q, pos3, theta=cfg.rope_theta)
+        k = apply_mrope(k, pos3, theta=cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos[None, :], theta=cfg.rope_theta)
+        k = apply_rope(k, pos[None, :], theta=cfg.rope_theta)
+    L = c["k"].shape[1]
+    slot = (pos[0] % L).astype(jnp.int32)
+    kc = jax.lax.dynamic_update_slice(c["k"], k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(c["v"], v, (0, slot, 0, 0))
+    cache_len = jnp.minimum(pos[0] + 1, L)
+    att = decode_attention(q, kc, vc,
+                           cache_len * jnp.ones((x.shape[0],), jnp.int32),
+                           softcap=cfg.attn_softcap)
+    x = x + jnp.einsum("bshe,hed->bsd", att, p["wo"])
+    h2 = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+    if "moe" in p:
+        y, _ = moe_ffn(h2, p["moe"], n_experts=cfg.n_experts,
+                       top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor, act=cfg.act)
+        x = x + y
+    elif "mlp" in p:
+        x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], act=cfg.act)
+    return x, {"k": kc, "v": vc}
+
+
+def _decode_rglru(cfg: ArchConfig, p: Params, c: Params,
+                  x: jax.Array) -> Tuple[jax.Array, Params]:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    y, st = rec.rglru_block_step(h[:, 0], rec.RGLRUState(c["h"], c["conv"]), p)
+    x = x + y[:, None, :].astype(x.dtype)
+    if "mlp" in p:
+        h2 = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+        x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                          p["mlp"]["w_down"], act=cfg.act)
+    return x, {"h": st.h, "conv": st.conv}
+
+
+def _decode_mlstm(cfg: ArchConfig, p: Params, c: Params,
+                  x: jax.Array) -> Tuple[jax.Array, Params]:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    q = jnp.einsum("bd,dhe->bhe", h[:, 0], p["wq"])
+    k = jnp.einsum("bd,dhe->bhe", h[:, 0], p["wk"])
+    v = jnp.einsum("bd,dhe->bhe", h[:, 0], p["wv"])
+    gates = jnp.einsum("bd,dg->bg", h[:, 0].astype(jnp.float32), p["w_if"])
+    log_i, log_f = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(log_f)
+    y, st = rec.mlstm_step(q, k, v, log_f, log_i,
+                           rec.MLSTMState(c["S"], c["n"], c["m"]))
+    og = jax.nn.sigmoid(jnp.einsum("bd,de->be", h[:, 0], p["w_og"]))
+    out = jnp.einsum("bhe,hed->bd", y, p["w_out"]) * og
+    return x + out[:, None, :].astype(x.dtype), {"S": st.S, "n": st.n, "m": st.m}
+
+
+def _decode_slstm(cfg: ArchConfig, p: Params, c: Params,
+                  x: jax.Array) -> Tuple[jax.Array, Params]:
+    h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+    y, (cn, nn, hn, mn) = rec.slstm_seq(h[:, :1],
+                                        p, state=(c["c"], c["n"],
+                                                  c["h"], c["m"]))
+    return x + y.astype(x.dtype), {"c": cn, "n": nn, "h": hn, "m": mn}
+
+
+def _decode_block(cfg: ArchConfig, kind: str, p: Params, c: Params,
+                  x: jax.Array, pos: jax.Array,
+                  pos3: Optional[jax.Array]) -> Tuple[jax.Array, Params]:
+    if kind.startswith("attn"):
+        return _decode_attn(cfg, kind, p, c, x, pos, pos3)
+    if kind == "rglru":
+        return _decode_rglru(cfg, p, c, x)
+    if kind == "mlstm":
+        return _decode_mlstm(cfg, p, c, x)
+    if kind == "slstm":
+        return _decode_slstm(cfg, p, c, x)
+    raise ValueError(kind)
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step. batch: tokens [B,1] (or embeds [B,1,D]),
+    pos [1] int32 (current absolute position), optional positions3 [3,B,1].
+    Returns (logits [B,1,V], new cache)."""
+    x, _, pos3 = embed_inputs(params, cfg, batch)
+    pos = batch["pos"].astype(jnp.int32)           # [1]
+    n_per, n_rem = group_layout(cfg)
+
+    def period_body(x, xs):
+        period_params, period_cache = xs
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"p{i}_{kind}"
+            x, nc = _decode_block(cfg, kind, period_params[key],
+                                  period_cache[key], x, pos, pos3)
+            new_cache[key] = nc
+        return x, new_cache
+
+    if n_per > 0:
+        x, new_blocks = jax.lax.scan(period_body, x,
+                                     (params["blocks"], cache["blocks"]))
+    else:
+        new_blocks = cache["blocks"]
+    new_cache: Params = {"blocks": new_blocks}
+    if n_rem:
+        new_cache["rem"] = {}
+        for i in range(n_rem):
+            kind = cfg.block_pattern[i]
+            key = f"r{i}_{kind}"
+            x, nc = _decode_block(cfg, kind, params["rem"][key],
+                                  cache["rem"][key], x, pos, pos3)
+            new_cache["rem"][key] = nc
+    logits = unembed(params, cfg, x)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + cache fill (used by the serving engine)
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            max_seq: int, use_pallas: bool = False
+            ) -> Tuple[jax.Array, Params]:
+    """Process a prompt of length S; returns (logits [B,S,V], filled cache).
+
+    The cache is sized ``max_seq`` (ring-buffered for local attention).
+    Implemented as the train-path forward with per-block state capture;
+    recurrent blocks re-run their scan to obtain final state (cheap
+    relative to the projections; acceptable for the serving path).
+    """
+    x, pos, pos3 = embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    n_per, n_rem = group_layout(cfg)
+
+    def capture_attn(kind: str, p: Params, x: jax.Array):
+        x2, _, (k, v) = _apply_attn_block(cfg, kind, p, x, pos, pos3)
+        L = _cache_len_for(cfg, kind, max_seq)
+        dt = _dtype(cfg)
+        kc = jnp.zeros((B, L, cfg.n_kv_heads, cfg.head_dim), dt)
+        vc = jnp.zeros((B, L, cfg.n_kv_heads, cfg.head_dim), dt)
+        if S >= L:
+            # ring buffer holds the last L positions, aligned to slot pos%L
+            tail_k, tail_v = k[:, S - L:], v[:, S - L:]
+            roll = (S % L)
+            kc = jnp.roll(tail_k, roll, axis=1)
+            vc = jnp.roll(tail_v, roll, axis=1)
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        return x2, {"k": kc, "v": vc}
+
+    def capture_block(kind: str, p: Params, x: jax.Array):
+        if kind.startswith("attn"):
+            return capture_attn(kind, p, x)
+        h = apply_norm(cfg.norm_kind, x, p.get("ln1"))
+        if kind == "rglru":
+            gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, p["w_gate"]))
+            r = jnp.einsum("bsd,de->bse", h, p["w_rec"])
+            rc = rec.causal_conv1d(r, p["conv"])
+            a, u = rec.rglru_gates(rc, p)
+            hs = rec.rglru_scan_ref(a, u)
+            y = jnp.einsum("bse,ed->bsd", hs * gate, p["w_out"])
+            x = x + y.astype(x.dtype)
+            if "mlp" in p:
+                h2 = apply_norm(cfg.norm_kind, x, p.get("ln2"))
+                x = x + gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                                  p["mlp"]["w_down"], act=cfg.act)
+            K = cfg.conv_width
+            conv_state = jnp.moveaxis(
+                jnp.stack([r[:, S - K + 1 + i] for i in range(K - 1)], 0), 0, 1)
+            return x, {"h": hs[:, -1].astype(jnp.float32), "conv": conv_state}
+        if kind == "mlstm":
+            x2 = _apply_mlstm_block(cfg, p, x)
+            # recompute final state sequentially over chunked scan
+            q, k, v = _project_qkv(p, h)
+            gates = jnp.einsum("bsd,dg->bsg", h.astype(jnp.float32), p["w_if"])
+            log_i, log_f = jnp.split(gates, 2, axis=-1)
+            log_f = jax.nn.log_sigmoid(log_f)
+            st = rec.MLSTMState(
+                jnp.zeros((B, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+                jnp.zeros((B, cfg.n_heads, cfg.head_dim), jnp.float32),
+                jnp.zeros((B, cfg.n_heads), jnp.float32))
+
+            def step(s, t):
+                _, s2 = rec.mlstm_step(q[:, t], k[:, t], v[:, t],
+                                       log_f[:, t], log_i[:, t], s)
+                return s2, None
+            st, _ = jax.lax.scan(step, st, jnp.arange(S))
+            return x2, {"S": st.S, "n": st.n, "m": st.m}
+        if kind == "slstm":
+            y, (cn, nn, hn, mn) = rec.slstm_seq(h, p)
+            return x + y, {"c": cn, "n": nn, "h": hn, "m": mn}
+        raise ValueError(kind)
+
+    def period_body(x, period_params):
+        caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"p{i}_{kind}"
+            x, c = capture_block(kind, period_params[key], x)
+            caches[key] = c
+        return x, caches
+
+    if n_per > 0:
+        x, blocks_cache = jax.lax.scan(period_body, x, params["blocks"])
+    else:
+        blocks_cache = {}
+    cache: Params = {"blocks": blocks_cache}
+    if n_rem:
+        cache["rem"] = {}
+        for i in range(n_rem):
+            kind = cfg.block_pattern[i]
+            key = f"r{i}_{kind}"
+            x, c = capture_block(kind, params["rem"][key], x)
+            cache["rem"][key] = c
+    return unembed(params, cfg, x), cache

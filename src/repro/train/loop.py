@@ -1,0 +1,189 @@
+"""Fault-tolerant training loop with first-class energy accounting.
+
+Production behaviours implemented (and exercised by tests):
+  * checkpoint/restart — async sharded checkpoints every N steps; on
+    (re)start the loop resumes from the latest complete checkpoint with
+    exact data-iterator and energy-ledger state;
+  * straggler mitigation — per-step wall time is tracked against a rolling
+    median; steps slower than ``straggler_factor``× median increment a
+    counter and emit advisories (on a real fleet this feeds the hot-spare
+    swap; here the hook is the part that matters);
+  * energy telemetry (the paper's contribution) — each step's activity
+    extends a simulated ground-truth power timeline; an OnboardSensor
+    samples it part-time, and the ledger records BOTH the naive sensor
+    integral and the good-practice-corrected energy with uncertainty, so
+    runs report calibrated J/step (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.common.config import Config
+from repro.common.logging import get_logger
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core import profiles
+from repro.core.activity import ChipPowerModel, StepActivity, steps_timeline
+from repro.core.calibrate import CalibrationRecord
+from repro.core.ledger import EnergyLedger
+from repro.core.sensor import OnboardSensor
+from repro.data.pipeline import LoaderState, SyntheticTokens
+from repro.models import api
+from repro.optim import adamw
+from repro.train.step import TrainConfig, make_train_step
+
+log = get_logger("train")
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig(Config):
+    total_steps: int = 50
+    ckpt_every: int = 20
+    log_every: int = 10
+    straggler_factor: float = 2.0
+    sensor_profile: str = "tpu_v5e_chip"
+    sensor_seed: int = 0
+    power_idle_w: float = 65.0
+    power_peak_w: float = 250.0
+
+
+@dataclasses.dataclass
+class StragglerStats:
+    times: list = dataclasses.field(default_factory=list)
+    n_stragglers: int = 0
+
+    def record(self, dt: float, factor: float) -> bool:
+        med = float(np.median(self.times)) if self.times else dt
+        self.times.append(dt)
+        if len(self.times) > 200:
+            self.times.pop(0)
+        is_straggler = len(self.times) > 5 and dt > factor * med
+        if is_straggler:
+            self.n_stragglers += 1
+        return is_straggler
+
+
+class EnergyMonitor:
+    """Per-run sensor simulation + naive/corrected ledger entries."""
+
+    def __init__(self, lcfg: LoopConfig, device_id: str = "dev0"):
+        self.profile = profiles.get(lcfg.sensor_profile)
+        self.sensor = OnboardSensor(self.profile, seed=lcfg.sensor_seed)
+        self.model = ChipPowerModel(idle_w=lcfg.power_idle_w,
+                                    peak_w=lcfg.power_peak_w)
+        self.ledger = EnergyLedger(device_id=device_id)
+        self.calib = CalibrationRecord(
+            device_id=device_id, profile_name=self.profile.name,
+            update_period_s=self.profile.update_period_s,
+            window_s=self.profile.window_s,
+            transient_kind="instant",
+            rise_time_s=2.5 * self.profile.update_period_s,
+            sampled_fraction=self.profile.sampled_fraction)
+        self.t = 0.0
+
+    def record_step(self, step: int, wall_s: float, util: float) -> None:
+        act = StepActivity(compute_s=wall_s * util, memory_s=wall_s * 0.6,
+                           collective_s=wall_s * 0.3)
+        # one-step timeline at current simulated clock
+        tl = steps_timeline(
+            dataclasses.replace(act, compute_s=wall_s * util,
+                                memory_s=min(wall_s, act.memory_s),
+                                collective_s=min(wall_s, act.collective_s)),
+            1, self.model, t0=self.t)
+        self.sensor.attach(tl, t_end=self.t + wall_s + 1.0,
+                           t_start=self.t)
+        ts, vals = self.sensor.poll(self.t, self.t + wall_s, period_s=0.005)
+        naive = float(np.sum(vals) * 0.005)
+        truth = tl.energy(self.t, self.t + wall_s)
+        # corrected estimate: time-shift + window-coverage correction
+        W = self.profile.window_s or self.profile.update_period_s
+        ts2, vals2 = self.sensor.poll(self.t, self.t + wall_s + W, 0.005)
+        corrected = float(np.sum(vals2[ts2 - W >= self.t]) * 0.005)
+        sigma = 0.05 * corrected
+        self.ledger.append(step, self.t, self.t + wall_s, naive,
+                           corrected, sigma)
+        self.t += wall_s
+        del truth
+
+    def state(self) -> str:
+        return self.ledger.to_json()
+
+    def load_state(self, s: str) -> None:
+        self.ledger = EnergyLedger.from_json(s)
+        if self.ledger.entries:
+            self.t = self.ledger.entries[-1].t1
+
+
+def run_training(cfg: ArchConfig, shape: ShapeCell, tcfg: TrainConfig,
+                 lcfg: LoopConfig, ckpt_dir: Optional[str] = None,
+                 seed: int = 0) -> Dict[str, Any]:
+    """Single-host training driver (examples + integration tests).
+
+    The distributed launcher (launch/train.py) wraps this with mesh
+    creation and sharding constraints; on one CPU device it runs as-is.
+    """
+    from repro.ckpt.checkpoint import CheckpointManager
+
+    rng = jax.random.PRNGKey(seed)
+    params = api.init_params(rng, cfg)
+    opt_state = adamw.init(params)
+    loader = SyntheticTokens(cfg, shape, seed=seed)
+    monitor = EnergyMonitor(lcfg)
+    stats = StragglerStats()
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+
+    start_step = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        s = mgr.latest_step()
+        specs = {"params": jax.tree_util.tree_map(
+                     lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+                 "opt": jax.tree_util.tree_map(
+                     lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                     opt_state)}
+        restored, extras = mgr.restore(s, specs)
+        params = restored["params"]
+        opt_state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(opt_state),
+            jax.tree_util.tree_leaves(restored["opt"]))
+        loader.state = LoaderState.from_dict(extras["loader"])
+        monitor.load_state(extras["ledger"])
+        start_step = s
+        log.info("resumed", step=s)
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    history = []
+    it = iter(loader)
+    # skip batches consumed before resume is unnecessary: loader.state.step
+    # already points at the next batch (pure function of step).
+    for step in range(start_step, lcfg.total_steps):
+        batch_np = next(it)
+        batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        straggler = stats.record(dt, lcfg.straggler_factor)
+        monitor.record_step(step, dt, util=0.5)
+        if straggler:
+            log.warn("straggler step", step=step, dt=f"{dt:.3f}s")
+        if step % lcfg.log_every == 0:
+            log.info("step", step=step, loss=f"{float(metrics['loss']):.4f}",
+                     dt=f"{dt*1e3:.1f}ms")
+        history.append(float(metrics["loss"]))
+        if mgr is not None and (step + 1) % lcfg.ckpt_every == 0:
+            mgr.save_async(step + 1, {"params": params, "opt": opt_state},
+                           extras={"loader": loader.state.to_dict(),
+                                   "ledger": monitor.state()})
+    if mgr is not None:
+        mgr.wait()
+    return {
+        "losses": history,
+        "final_loss": history[-1] if history else float("nan"),
+        "stragglers": stats.n_stragglers,
+        "energy": monitor.ledger.summary(),
+        "params": params,
+    }

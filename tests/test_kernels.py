@@ -1,0 +1,154 @@
+"""Per-kernel interpret-mode validation vs pure-jnp oracles, with
+shape/dtype sweeps (per brief)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.fma_chain import fma_chain
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+
+
+# ---------------------------------------------------------------------------
+# fma_chain — the paper's benchmark load (Listing 1 / Fig. 5)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,niter,frac", [
+    (256, 3, 1.0), (512, 10, 0.5), (1024, 1, 0.25), (256, 0, 1.0),
+])
+def test_fma_chain_identity(rows, niter, frac):
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, 128), jnp.float32)
+    y = fma_chain(x, niter, frac, block_rows=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.fma_chain_ref(x, niter)),
+                               atol=1e-6)
+
+
+def test_fma_chain_wall_time_linear():
+    """Fig. 5: duration is linear in chain length (R² ≈ 1). On CPU the
+    interpret-mode overhead dominates at small n, so we check the jit'd
+    XLA path monotonically and fit R² over larger iteration counts."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048, 128), jnp.float32)
+
+    @jax.jit
+    def run(x, n):
+        def body(_, v):
+            v = v * 2.0 + 2.0
+            return v * 0.5 - 1.0
+        return jax.lax.fori_loop(0, n, body, x)
+
+    ns = [200, 400, 800, 1600]
+    times = []
+    for n in ns:
+        run(x, n).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            run(x, n).block_until_ready()
+        times.append((time.perf_counter() - t0) / 3)
+    a = np.polyfit(ns, times, 1)
+    pred = np.polyval(a, ns)
+    ss_res = np.sum((np.asarray(times) - pred) ** 2)
+    ss_tot = np.sum((np.asarray(times) - np.mean(times)) ** 2)
+    r2 = 1 - ss_res / ss_tot
+    assert r2 > 0.97
+    assert a[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,T,Hq,Hkv,D,kw", [
+    (64, 64, 4, 4, 32, dict(causal=True)),
+    (100, 100, 4, 2, 32, dict(causal=True)),          # GQA + ragged
+    (64, 64, 8, 1, 16, dict(causal=True)),            # MQA
+    (64, 64, 4, 2, 32, dict(causal=False)),
+    (96, 96, 2, 2, 32, dict(causal=True, window=17)),
+    (64, 64, 2, 2, 32, dict(causal=True, softcap=20.0)),
+    (32, 128, 2, 2, 32, dict(causal=False)),          # cross-attn shape
+])
+def test_flash_attention_vs_direct(S, T, Hq, Hkv, D, kw):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (2, S, Hq, D), jnp.float32)
+    k = jax.random.normal(k2, (2, T, Hkv, D), jnp.float32)
+    v = jax.random.normal(k3, (2, T, Hkv, D), jnp.float32)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True,
+                          **kw)
+    want = ref.attention_direct_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (1, 64, 4, 32), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (1, 64, 2, 32), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (1, 64, 2, 32), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = ref.attention_direct_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.integers(8, 70), Hkv=st.sampled_from([1, 2]),
+       G=st.sampled_from([1, 2, 4]), blk=st.sampled_from([16, 32]))
+def test_flash_attention_property(S, Hkv, G, blk):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(k1, (1, S, Hkv * G, 16), jnp.float32)
+    k = jax.random.normal(k2, (1, S, Hkv, 16), jnp.float32)
+    v = jax.random.normal(k3, (1, S, Hkv, 16), jnp.float32)
+    out = flash_attention(q, k, v, block_q=blk, block_k=blk, interpret=True)
+    want = ref.attention_direct_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D,bd,ck", [
+    (1, 64, 256, 128, 16), (2, 100, 512, 256, 32), (3, 17, 128, 128, 8),
+])
+def test_rglru_scan_vs_ref(B, S, D, bd, ck):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    a = jax.nn.sigmoid(jax.random.normal(k1, (B, S, D), jnp.float32))
+    u = jax.random.normal(k2, (B, S, D), jnp.float32)
+    h = rglru_scan(a, u, block_d=bd, chunk=ck, interpret=True)
+    want = ref.rglru_scan_ref(a, u)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.integers(2, 50), seed=st.integers(0, 99))
+def test_rglru_scan_property(S, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.nn.sigmoid(jax.random.normal(k1, (2, S, 128), jnp.float32))
+    u = jax.random.normal(k2, (2, S, 128), jnp.float32)
+    h = rglru_scan(a, u, block_d=128, chunk=16, interpret=True)
+    # sequential truth
+    hs = []
+    hh = np.zeros((2, 128), np.float32)
+    an, un = np.asarray(a), np.asarray(u)
+    for t in range(S):
+        hh = an[:, t] * hh + un[:, t]
+        hs.append(hh.copy())
+    want = np.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h), want, rtol=3e-5, atol=3e-5)
+
+
+def test_ops_wrappers_jit():
+    """ops.py wrappers are jit-compiled and pick interpret mode on CPU."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 128), jnp.float32)
+    y = ops.fma_chain(x, niter=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)

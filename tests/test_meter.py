@@ -1,0 +1,148 @@
+"""Energy-measurement protocol tests: naive vs good practice (paper §5).
+
+The quantitative claims validated here:
+  * naive single-shot error on part-time sensors is large and erratic
+    (paper: up to ~70 %, avg 39 %);
+  * the good-practice protocol brings it to ~5 % (gain-error floor) with
+    small spread (paper: 4.89 % avg, std ≈ 0.25 %);
+  * calibration (gain/offset inversion) removes the remaining bias down to
+    the time-domain floor;
+  * module-scope sensors (GH200 `instant`) are refused without a host
+    baseline (paper §6).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load as loads
+from repro.core import profiles
+from repro.core.calibrate import CalibrationRecord
+from repro.core.ground_truth import GroundTruthMeter
+from repro.core.meter import (GoodPracticeConfig, ModuleScopeError, Workload,
+                              compare_protocols, measure_good_practice,
+                              measure_naive)
+from repro.core.microbench import estimate_steady_state
+from repro.core.sensor import OnboardSensor
+
+
+def _calib(profile_name: str, gain=None, offset=None) -> CalibrationRecord:
+    p = profiles.get(profile_name)
+    W = p.window_s
+    return CalibrationRecord(
+        device_id="d0", profile_name=profile_name,
+        update_period_s=p.update_period_s, window_s=W,
+        transient_kind="instant" if (W or 0) <= p.update_period_s else "linear",
+        rise_time_s=0.25 if (W or 0) <= 0.1 else 1.25,
+        gain=gain, offset_w=offset,
+        sampled_fraction=p.sampled_fraction)
+
+
+BURST = Workload("burst100ms", loads.workload_burst(0.100, 210.0))
+
+
+@pytest.mark.parametrize("profile", ["a100", "rtx3090_instant",
+                                     "rtx3090_average"])
+def test_good_practice_beats_naive(profile):
+    calib = _calib(profile)
+    naive_errs, gp_errs = [], []
+    for seed in range(5):
+        s = OnboardSensor(profiles.get(profile), seed=300 + seed)
+        r = compare_protocols(s, BURST, calib, GoodPracticeConfig(),
+                              seed=seed)
+        naive_errs.append(abs(r["naive_err"]))
+        gp_errs.append(abs(r["gp_err"]))
+    assert np.mean(gp_errs) < np.mean(naive_errs)
+    assert np.mean(gp_errs) < 0.12       # ~gain floor + protocol residue
+    # mirrors Fig. 18: naive errors are large on these stress loads
+    assert np.mean(naive_errs) > 0.15
+
+
+def test_error_reduction_magnitude_case3():
+    """A100 (25/100): the paper reduces error by ~35 points on average."""
+    calib = _calib("a100")
+    reductions = []
+    for seed in range(6):
+        s = OnboardSensor(profiles.get("a100"), seed=400 + seed)
+        r = compare_protocols(s, BURST, calib, GoodPracticeConfig(),
+                              seed=seed)
+        reductions.append(abs(r["naive_err"]) - abs(r["gp_err"]))
+    assert np.mean(reductions) > 0.10
+
+
+def test_phase_shift_delays_reduce_error():
+    """Case 3's fix: a 100 ms-period workload with internal structure
+    aligned to the 100 ms update period exposes only one fixed 25 ms slice
+    to the A100's window — without phase shifts the estimate depends on
+    which slice (paper: std up to 30 %); 8 controlled delays of W expose
+    every slice and collapse the error."""
+    calib = _calib("a100")
+    # one repetition = 50 ms hot (240 W) + 50 ms cool (120 W)
+    wl = Workload("structured100ms", loads.multi_phase_workload(
+        [(0.050, 240.0), (0.050, 120.0)]))
+
+    def errors(n_shifts):
+        errs = []
+        for seed in range(8):
+            s = OnboardSensor(profiles.get("a100"), seed=500 + seed)
+            est = measure_good_practice(
+                s, wl, calib,
+                GoodPracticeConfig(n_phase_shifts=n_shifts, n_trials=2),
+                seed=seed)
+            errs.append(est.error_vs(wl.true_energy_j))
+        return np.asarray(errs)
+
+    e0, e8 = errors(0), errors(8)
+    # without shifts the window samples a fixed slice → biased & spread out
+    assert np.abs(e8).mean() < np.abs(e0).mean()
+    assert np.abs(e8).mean() < 0.10
+
+
+def test_calibration_removes_gain_bias():
+    prof = profiles.get("rtx3090_instant")
+    s = OnboardSensor(prof, seed=77)
+    meter = GroundTruthMeter(seed=8)
+    ss = estimate_steady_state(s, meter)
+    calib_plain = _calib("rtx3090_instant")
+    calib_gain = _calib("rtx3090_instant", gain=ss.gain, offset=ss.offset_w)
+    wl = Workload("burst", loads.workload_burst(0.200, 230.0))
+    est_plain = measure_good_practice(s, wl, calib_plain,
+                                      GoodPracticeConfig(), seed=3)
+    est_cal = measure_good_practice(
+        s, wl, calib_gain, GoodPracticeConfig(apply_calibration=True), seed=3)
+    truth = wl.true_energy_j
+    assert abs(est_cal.error_vs(truth)) <= abs(est_plain.error_vs(truth)) + 0.01
+
+
+def test_module_scope_guard():
+    """GH200 `instant` measures GPU+CPU+DRAM (paper §6): refuse to
+    attribute it to chip energy without a host baseline."""
+    s = OnboardSensor(profiles.get("gh200_module_instant"), seed=1)
+    with pytest.raises(ModuleScopeError):
+        measure_naive(s, BURST)
+    # with a baseline it runs
+    s2 = OnboardSensor(profiles.get("gh200_module_instant"), seed=1)
+    e = measure_naive(s2, BURST, host_baseline_w=0.0)
+    assert np.isfinite(e)
+
+
+@settings(max_examples=6, deadline=None)
+@given(dur=st.sampled_from([0.025, 0.1, 0.8]), seed=st.integers(0, 50))
+def test_good_practice_error_bounded_across_durations(dur, seed):
+    """Paper §5.1 tests short/medium/long loads (25 %, 100 %, 800 % of the
+    update period); the protocol holds across all of them."""
+    calib = _calib("a100")
+    wl = Workload("wl", loads.workload_burst(dur, 200.0))
+    s = OnboardSensor(profiles.get("a100"), seed=seed)
+    est = measure_good_practice(s, wl, calib, GoodPracticeConfig(),
+                                seed=seed)
+    assert abs(est.error_vs(wl.true_energy_j)) < 0.15
+
+
+def test_estimate_has_uncertainty_and_trials():
+    calib = _calib("a100")
+    s = OnboardSensor(profiles.get("a100"), seed=2)
+    est = measure_good_practice(s, BURST, calib, GoodPracticeConfig(),
+                                seed=0)
+    assert est.n_trials == 4
+    assert len(est.trial_values) == 4
+    assert est.std_j >= 0.0

@@ -1,0 +1,142 @@
+"""Closed-loop validation: black-box estimators recover hidden sensor
+parameters (the paper's §4 experiments as property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import microbench, profiles
+from repro.core.ground_truth import GroundTruthMeter
+from repro.core.sensor import OnboardSensor, SensorProfile, SensorUnsupported
+
+
+# ---------------------------------------------------------------------------
+# 4.1 update period
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile,expect", [
+    ("a100", 0.100), ("v100", 0.020), ("turing", 0.100),
+    ("rtx3090_instant", 0.100),
+])
+def test_update_period_catalog(profile, expect):
+    s = OnboardSensor(profiles.get(profile), seed=7)
+    T = microbench.estimate_update_period(s)
+    assert T == pytest.approx(expect, rel=0.15)
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.sampled_from([0.015, 0.02, 0.05, 0.1, 0.2]),
+       seed=st.integers(0, 1000))
+def test_update_period_property(T, seed):
+    prof = SensorProfile("x", update_period_s=T, window_s=T / 4)
+    s = OnboardSensor(prof, seed=seed)
+    est = microbench.estimate_update_period(s)
+    assert est == pytest.approx(T, rel=0.2)
+
+
+# ---------------------------------------------------------------------------
+# 4.2 transient response
+# ---------------------------------------------------------------------------
+
+def test_transient_instant():
+    s = OnboardSensor(profiles.get("a100"), seed=3)
+    tr = microbench.measure_transient(s, 0.100)
+    assert tr.kind == "instant"
+    assert tr.delay_s < 0.25
+
+
+def test_transient_linear_1s():
+    s = OnboardSensor(profiles.get("rtx3090_average"), seed=3)
+    tr = microbench.measure_transient(s, 0.100)
+    assert tr.kind == "linear"
+    assert 0.6 < tr.rise_time_s < 1.2
+
+
+def test_transient_logarithmic():
+    s = OnboardSensor(profiles.get("kepler"), seed=3)
+    tr = microbench.measure_transient(s, 0.015)
+    assert tr.kind == "logarithmic"
+
+
+def test_fermi_unsupported():
+    s = OnboardSensor(profiles.get("fermi1"), seed=0)
+    with pytest.raises(SensorUnsupported):
+        microbench.estimate_update_period(s)
+
+
+# ---------------------------------------------------------------------------
+# 4.2 steady-state gain/offset
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_steady_state_recovers_gain_offset(seed):
+    prof = profiles.get("rtx3090_instant")
+    s = OnboardSensor(prof, seed=seed)
+    meter = GroundTruthMeter(seed=seed + 1)
+    ss = microbench.estimate_steady_state(s, meter)
+    assert ss.gain == pytest.approx(s.true_gain, abs=0.01)
+    assert ss.offset_w == pytest.approx(s.true_offset, abs=2.5)
+    assert ss.r2 > 0.999     # the paper's "near perfect linear" (Fig. 8)
+
+
+def test_gain_error_is_proportional_not_flat():
+    """The paper's key correction of NVIDIA's spec: error grows with power
+    (±5 %), it is not a flat ±5 W."""
+    prof = SensorProfile("g", 0.1, 0.1, gain_tol=0.05, offset_tol_w=0.5,
+                         noise_w=0.0)
+    s = OnboardSensor(prof, seed=12)
+    meter = GroundTruthMeter(seed=3, noise_w=0.0)
+    ss = microbench.estimate_steady_state(s, meter)
+    lo, hi = 100.0, 400.0
+    err_lo = (ss.gain - 1) * lo + ss.offset_w
+    err_hi = (ss.gain - 1) * hi + ss.offset_w
+    # proportional: hi-power error ≈ 4× lo-power error (same sign)
+    assert abs(err_hi) > 2.0 * abs(err_lo)
+
+
+# ---------------------------------------------------------------------------
+# 4.3 boxcar window
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile,W", [
+    ("a100", 0.025),            # 25/100: the part-time headline case
+    ("rtx3090_instant", 0.100),  # 100/100
+    ("v100", 0.010),            # 10/20
+])
+def test_boxcar_window_catalog(profile, W):
+    prof = profiles.get(profile)
+    s = OnboardSensor(prof, seed=5)
+    est, samples = microbench.estimate_boxcar_window(
+        s, prof.update_period_s, repetitions=8, seed=11)
+    assert est == pytest.approx(W, rel=0.3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(frac=st.sampled_from([0.25, 0.5, 1.0]), seed=st.integers(0, 100))
+def test_boxcar_window_property(frac, seed):
+    T = 0.1
+    prof = SensorProfile("x", T, T * frac)
+    s = OnboardSensor(prof, seed=seed)
+    est, _ = microbench.estimate_boxcar_window(s, T, repetitions=6,
+                                               seed=seed)
+    assert est == pytest.approx(T * frac, rel=0.35)
+
+
+# ---------------------------------------------------------------------------
+# full characterisation
+# ---------------------------------------------------------------------------
+
+def test_characterise_a100_sampled_fraction():
+    """The headline finding: A100/H100 sample only 25 % of runtime."""
+    s = OnboardSensor(profiles.get("a100"), seed=9)
+    meter = GroundTruthMeter(seed=2)
+    res = microbench.characterise(s, meter, boxcar_reps=6)
+    assert res.update_period_s == pytest.approx(0.100, rel=0.1)
+    assert res.sampled_fraction == pytest.approx(0.25, rel=0.35)
+    assert res.gain == pytest.approx(s.true_gain, abs=0.015)
+
+
+def test_characterise_volta_half_time():
+    s = OnboardSensor(profiles.get("v100"), seed=9)
+    res = microbench.characterise(s, boxcar_reps=6)
+    assert res.sampled_fraction == pytest.approx(0.5, rel=0.35)

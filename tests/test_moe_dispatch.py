@@ -1,0 +1,131 @@
+"""MoE grouped inverse-map dispatch correctness (§Perf iterations M1–M4).
+
+The dispatch rewrite is the framework's hottest perf fix — these tests pin
+its semantics: group-local dispatch ≡ ungrouped when capacity is ample,
+dropped tokens never clobber live slots, padded experts receive nothing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import act_shard
+from repro.models.moe import moe_ffn
+
+
+def _params(rng, D, F, E_pad, shared=False):
+    ks = jax.random.split(rng, 7)
+    p = {
+        "router": jax.random.normal(ks[0], (D, 8), jnp.float32) * 0.3,
+        "w_gate": jax.random.normal(ks[1], (E_pad, D, F), jnp.float32) * 0.1,
+        "w_up": jax.random.normal(ks[2], (E_pad, D, F), jnp.float32) * 0.1,
+        "w_down": jax.random.normal(ks[3], (E_pad, F, D), jnp.float32) * 0.1,
+    }
+    if shared:
+        p["shared_gate"] = jax.random.normal(ks[4], (D, F), jnp.float32) * 0.1
+        p["shared_up"] = jax.random.normal(ks[5], (D, F), jnp.float32) * 0.1
+        p["shared_down"] = jax.random.normal(ks[6], (F, D), jnp.float32) * 0.1
+    return p
+
+
+def _ref_moe(x, p, E, k):
+    """Dense oracle: every token through its top-k experts, no capacity."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D).astype(jnp.float32)
+    probs = jax.nn.softmax(xt @ p["router"], axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / topw.sum(-1, keepdims=True)
+    y = jnp.zeros((T, D), jnp.float32)
+    for slot in range(k):
+        e = topi[:, slot]
+        wg = p["w_gate"][e]      # [T,D,F]
+        wu = p["w_up"][e]
+        wd = p["w_down"][e]
+        g = jax.nn.silu(jnp.einsum("td,tdf->tf", xt, wg))
+        u = jnp.einsum("td,tdf->tf", xt, wu)
+        y = y + topw[:, slot:slot + 1] * jnp.einsum("tf,tfd->td", g * u, wd)
+    return y.reshape(B, S, D)
+
+
+def test_moe_matches_dense_oracle_when_capacity_ample():
+    rng = jax.random.PRNGKey(0)
+    B, S, D, F = 2, 16, 8, 16
+    p = _params(rng, D, F, E_pad=8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32)
+    out = moe_ffn(x, p, n_experts=8, top_k=2, capacity_factor=8.0)
+    want = _ref_moe(x, p, 8, 2)
+    np.testing.assert_allclose(np.asarray(out.y), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(G=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
+def test_grouped_dispatch_independent_of_group_count(G, seed):
+    """With ample capacity the result must not depend on G (groups only
+    change WHERE slots live, not which tokens compute)."""
+    rng = jax.random.PRNGKey(seed)
+    B, S, D, F = 4, 8, 8, 16
+    p = _params(rng, D, F, E_pad=8)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, D),
+                          jnp.float32)
+    act_shard.set_context((), "", 1, batch_size=G)
+    try:
+        out_g = moe_ffn(x, p, n_experts=8, top_k=2, capacity_factor=8.0)
+    finally:
+        act_shard.clear_context()
+    out_1 = moe_ffn(x, p, n_experts=8, top_k=2, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(out_g.y), np.asarray(out_1.y),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_padded_experts_receive_no_tokens():
+    """Router has 8 logits but weights are padded to 16: output must be
+    identical to the unpadded weights (dummy rows untouched)."""
+    rng = jax.random.PRNGKey(2)
+    B, S, D, F = 2, 8, 8, 16
+    p8 = _params(rng, D, F, E_pad=8)
+    p16 = dict(p8)
+    for k in ("w_gate", "w_up", "w_down"):
+        pad_shape = (8,) + p8[k].shape[1:]
+        # poison the padded rows: if any token touched them, outputs differ
+        p16[k] = jnp.concatenate(
+            [p8[k], jnp.full(pad_shape, 1e3, jnp.float32)], axis=0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, D), jnp.float32)
+    o8 = moe_ffn(x, p8, n_experts=8, top_k=2, capacity_factor=8.0)
+    o16 = moe_ffn(x, p16, n_experts=8, top_k=2, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(o8.y), np.asarray(o16.y),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dropped_tokens_zero_not_clobber():
+    """Tiny capacity: over-capacity tokens contribute zero and never
+    overwrite live slots (§Perf M4 latent-bug regression test)."""
+    rng = jax.random.PRNGKey(4)
+    # capacity rounds up to 128 slots, so force > 128 tokens into one
+    # expert to actually exercise drops
+    B, S, D, F = 2, 512, 8, 16
+    p = _params(rng, D, F, E_pad=8)
+    # route everything to expert 0 by biasing the router
+    p = dict(p, router=jnp.zeros((D, 8)).at[:, 0].set(5.0))
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, D), jnp.float32)
+    out = moe_ffn(x, p, n_experts=8, top_k=1, capacity_factor=0.05)
+    assert np.isfinite(np.asarray(out.y)).all()
+    # most tokens dropped: output rows mostly exactly zero
+    zero_rows = np.mean(np.all(np.asarray(out.y) == 0.0, axis=-1))
+    assert zero_rows > 0.5
+
+
+def test_moe_grads_finite_under_drops():
+    rng = jax.random.PRNGKey(6)
+    p = _params(rng, 8, 16, E_pad=8, shared=True)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 32, 8), jnp.float32)
+
+    def loss(p):
+        out = moe_ffn(x, p, n_experts=8, top_k=2, capacity_factor=0.5)
+        return jnp.sum(out.y ** 2) + out.aux_loss
+
+    grads = jax.grad(loss)(p)
+    for g in jax.tree_util.tree_leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()

@@ -1,0 +1,92 @@
+"""Fleet telemetry, ledger persistence, data-centre projection."""
+import numpy as np
+import pytest
+
+from repro.core.calibrate import CalibrationRecord, CalibrationStore
+from repro.core.ledger import EnergyLedger
+from repro.core.telemetry import FleetLedger, datacenter_projection
+from repro.core import profiles
+from repro.core.ground_truth import GroundTruthMeter
+from repro.core.sensor import OnboardSensor
+
+
+def _ledger(dev: str, steps: int = 10, j: float = 50.0) -> EnergyLedger:
+    led = EnergyLedger(device_id=dev)
+    for i in range(steps):
+        led.append(i, i * 1.0, (i + 1) * 1.0, j * 1.1, j, 0.05 * j)
+    return led
+
+
+def test_ledger_roundtrip():
+    led = _ledger("d0")
+    led2 = EnergyLedger.from_json(led.to_json())
+    assert led2.total_corrected_j == pytest.approx(led.total_corrected_j)
+    assert led2.device_id == "d0"
+    assert len(led2.entries) == len(led.entries)
+
+
+def test_ledger_summary():
+    led = _ledger("d0", steps=10, j=50.0)
+    s = led.summary()
+    assert s["total_corrected_j"] == pytest.approx(500.0)
+    assert s["mean_power_w"] == pytest.approx(50.0)
+    assert s["naive_vs_corrected"] == pytest.approx(0.1)
+
+
+def test_fleet_uncertainty_scaling():
+    """Independent ±5 % gain errors shrink relatively as 1/sqrt(N); the
+    worst-case (correlated lot) bound does not — the paper's caveat."""
+    fleet = FleetLedger()
+    N = 64
+    for i in range(N):
+        fleet.register(_ledger(f"d{i}"))
+    s = fleet.summary()
+    per_dev_sigma = 0.05 * 500.0
+    assert s.sigma_independent_j == pytest.approx(
+        per_dev_sigma * np.sqrt(N), rel=1e-6)
+    assert s.sigma_worstcase_j == pytest.approx(per_dev_sigma * N, rel=1e-6)
+    assert s.sigma_worstcase_j / s.total_j == pytest.approx(0.05)
+
+
+def test_calibrated_devices_tighten_fleet_sigma():
+    fleet = FleetLedger()
+    calib = CalibrationRecord("d0", "a100", 0.1, 0.025, "instant", 0.25,
+                              gain=0.97, offset_w=1.0, sampled_fraction=0.25)
+    fleet.register(_ledger("d0"), calib)
+    fleet.register(_ledger("d1"))          # uncalibrated
+    s = fleet.summary()
+    # calibrated: 1 %, uncalibrated: 5 %
+    assert s.sigma_worstcase_j == pytest.approx(
+        0.01 * 500.0 + 0.05 * 500.0, rel=1e-6)
+
+
+def test_datacenter_projection_order_of_magnitude():
+    """The paper's headline: 10k GPUs × ±5 % of 700 W ≈ $1M/yr."""
+    proj = datacenter_projection(n_gpus=10_000, tdp_w=700.0, gain_tol=0.05,
+                                 duty=0.8, price_usd_per_kwh=0.35)
+    assert proj["per_gpu_err_w"] == pytest.approx(35.0)
+    assert 5e5 < proj["annual_err_usd"] < 2e6
+
+
+def test_calibration_store_roundtrip(tmp_path):
+    store = CalibrationStore(str(tmp_path))
+    rec = CalibrationRecord("dev7", "a100", 0.1, 0.025, "instant", 0.25,
+                            gain=0.96, offset_w=-1.2, r2=0.9999,
+                            sampled_fraction=0.25)
+    store.put(rec)
+    store2 = CalibrationStore(str(tmp_path))
+    got = store2.get("dev7")
+    assert got is not None
+    assert got.gain == pytest.approx(0.96)
+    assert got.sampled_fraction == pytest.approx(0.25)
+
+
+def test_store_characterises_once(tmp_path):
+    store = CalibrationStore(str(tmp_path))
+    s = OnboardSensor(profiles.get("v100"), seed=4)
+    meter = GroundTruthMeter(seed=5)
+    rec1 = store.get_or_characterise("devX", s, meter)
+    assert rec1.update_period_s == pytest.approx(0.020, rel=0.2)
+    # second call hits the cache (no sensor needed)
+    rec2 = store.get_or_characterise("devX", None)
+    assert rec2.created_at == rec1.created_at

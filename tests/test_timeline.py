@@ -1,0 +1,93 @@
+"""ActivityTimeline / GroundTruthMeter invariants (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
+                                     from_segments)
+from repro.core import load as loads
+
+
+def test_power_at_basic():
+    tl = from_segments([(1.0, 100.0), (0.5, 50.0)], idle_w=60.0)
+    assert tl.power_at(np.array([0.5]))[0] == 100.0
+    assert tl.power_at(np.array([1.2]))[0] == 50.0
+    assert tl.power_at(np.array([2.0]))[0] == 60.0     # past end: idle
+    assert tl.power_at(np.array([-1.0]))[0] == 60.0    # before start: idle
+
+
+def test_energy_analytic():
+    tl = from_segments([(1.0, 100.0), (0.5, 50.0)])
+    assert tl.energy() == pytest.approx(125.0)
+    assert tl.integral(np.array(0.5), np.array(1.25)) == pytest.approx(
+        0.5 * 100 + 0.25 * 50)
+
+
+def test_mean_power():
+    tl = from_segments([(1.0, 100.0), (1.0, 50.0)])
+    assert tl.mean_power(np.array(0.0), np.array(2.0)) == pytest.approx(75.0)
+
+
+def test_concat_and_repeat_preserve_energy():
+    frag = from_segments([(0.1, 200.0)], idle_w=60.0)
+    train = frag.repeat(10)
+    assert train.energy() == pytest.approx(10 * frag.energy())
+    with_gaps = ActivityTimeline.concat([frag] * 10, gap_s=0.05)
+    assert with_gaps.energy() == pytest.approx(
+        10 * frag.energy() + 9 * 0.05 * 60.0)
+    assert with_gaps.t_end == pytest.approx(10 * 0.1 + 9 * 0.05)
+
+
+def test_concat_is_contiguous():
+    frag = from_segments([(0.1, 200.0), (0.05, 80.0)])
+    train = frag.repeat(4)
+    # power at the very start of each repetition is the high state
+    for i in range(4):
+        t = i * 0.15 + 1e-6
+        assert train.power_at(np.array([t]))[0] == 200.0
+        assert train.power_at(np.array([t + 0.1]))[0] == 80.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    segs=st.lists(
+        st.tuples(st.floats(0.01, 1.0), st.floats(0.0, 500.0)),
+        min_size=1, max_size=10),
+    idle=st.floats(1.0, 100.0),
+)
+def test_integral_matches_riemann(segs, idle):
+    tl = from_segments(segs, idle_w=idle)
+    t0, t1 = -0.5, tl.t_end + 0.5
+    ts = np.linspace(t0, t1, 20001)
+    dt = ts[1] - ts[0]
+    riemann = float(np.sum(tl.power_at(ts[:-1])) * dt)
+    exact = float(tl.integral(np.array(t0), np.array(t1)))
+    # left-Riemann discretisation error: one grid cell of the largest
+    # power jump per segment edge
+    p_max = max(float(np.max(tl.powers)), idle)
+    tol = dt * p_max * (len(tl.powers) + 2)
+    assert exact == pytest.approx(riemann, rel=2e-3, abs=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(period=st.floats(0.02, 0.3), n=st.integers(2, 20),
+       hi=st.floats(100, 400), lo=st.floats(10, 90))
+def test_square_wave_energy(period, n, hi, lo):
+    tl = loads.square_wave(period, n, hi, lo, duty=0.5)
+    expect = n * period * 0.5 * (hi + lo)
+    assert tl.energy() == pytest.approx(expect, rel=1e-9)
+
+
+def test_pmd_trace_close_to_truth():
+    tl = loads.square_wave(0.1, 20, 220.0, 70.0)
+    meter = GroundTruthMeter(seed=1)
+    e = meter.energy(tl)
+    assert e == pytest.approx(tl.energy(), rel=0.02)
+
+
+def test_meter_quantisation_error_is_bounded():
+    tl = from_segments([(2.0, 123.456)])
+    meter = GroundTruthMeter(noise_w=0.0, seed=0)
+    ts, w = meter.trace(tl, 0.0, 2.0)
+    # ADC quantum: 0.0488 A * 12 V ≈ 0.586 W
+    assert np.all(np.abs(w - 123.456) < 0.6)

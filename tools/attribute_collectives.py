@@ -1,0 +1,46 @@
+"""Attribute collective bytes to source jax ops via HLO metadata op_name."""
+import os, re, sys, collections
+os.environ["XLA_FLAGS"]="--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES","256")
+sys.path.insert(0, "src")
+import jax
+from repro.configs.registry import get_config
+from repro.configs.base import get_shape
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo as H
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+mesh = make_production_mesh()
+compiled, txt, _, _ = lower_cell(cfg, get_shape(shape), mesh)
+print("peak mem check done")
+comps = H._split_computations(txt)
+mult = {n: 1.0 for n in comps}
+for name, lines in comps.items():
+    for line in lines:
+        m = H._WHILE_RE.search(line)
+        if m:
+            trips = H._trip_count(comps.get(m.group(1), []))
+            for t in (m.group(2), m.group(1)):
+                if t in mult:
+                    mult[t] = max(mult[t], trips * mult[name])
+agg = collections.Counter()
+cnt = collections.Counter()
+for name, lines in comps.items():
+    for line in lines:
+        m = H._INSTR_RE.match(line.strip())
+        if not m: continue
+        for kind in H._COLLECTIVES:
+            km = re.match(rf"(.+?)\s{re.escape(kind)}(-start)?\(", m.group(2))
+            if km:
+                b = H._type_bytes(km.group(1)) * mult.get(name,1.0)
+                op = re.search(r'op_name="([^"]*)"', line)
+                opn = op.group(1)[:110] if op else "?"
+                opn = km.group(1).split("{")[0].strip()[-22:] + " | " + opn
+                agg[(kind, opn)] += b
+                cnt[(kind, opn)] += 1
+                break
+total = sum(agg.values())
+print(f"TOTAL {total/1e9:.2f} GB/device")
+for (kind, opn), b in agg.most_common(25):
+    print(f"{b/1e9:9.3f} GB  x{cnt[(kind,opn)]:3d} {kind:18s} {opn}")

@@ -1,0 +1,23 @@
+"""Generate the EXPERIMENTS.md roofline markdown table from artifacts."""
+import glob, json, sys
+
+rows = []
+for fn in sorted(glob.glob("artifacts/dryrun/*.json")):
+    art = json.load(open(fn))
+    if art["status"] != "ok":
+        continue
+    r = art["roofline"]
+    rows.append(r)
+
+def fmt(r):
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+            f"{r['peak_memory_per_device']/1e9:.1f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} |")
+
+print("| arch | shape | mesh | comp ms | mem ms | coll ms | bottleneck | useful | roofline frac | peak GB/dev | fits |")
+print("|---|---|---|---|---|---|---|---|---|---|---|")
+for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    print(fmt(r))

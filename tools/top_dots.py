@@ -1,0 +1,54 @@
+"""List top dot instructions by flops (with trip multipliers)."""
+import os, re, sys, collections
+os.environ["XLA_FLAGS"]="--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES","256")
+sys.path.insert(0, "src")
+import numpy as np
+from repro.configs.registry import get_config
+from repro.configs.base import get_shape
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo as H
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+mesh = make_production_mesh()
+compiled, txt, _, _ = lower_cell(cfg, get_shape(shape), mesh)
+comps = H._split_computations(txt)
+mult = {n: 1.0 for n in comps}
+for name, lines in comps.items():
+    for line in lines:
+        m = H._WHILE_RE.search(line)
+        if m:
+            trips = H._trip_count(comps.get(m.group(1), []))
+            for t in (m.group(2), m.group(1)):
+                if t in mult:
+                    mult[t] = max(mult[t], trips * mult[name])
+agg = collections.Counter(); cnt = collections.Counter()
+for name, lines in comps.items():
+    types = {}
+    for line in lines:
+        m = H._INSTR_RE.match(line.strip())
+        if m: types[m.group(1)] = m.group(2)
+    for line in lines:
+        m = H._INSTR_RE.match(line.strip())
+        if not m: continue
+        dm = H._DOT_RE.match(m.group(2))
+        if not dm: continue
+        out_t, operands, lhs_cd = dm.group(1), dm.group(2), dm.group(3)
+        _, out_shape = H._shape_of(out_t)
+        lhs = operands.split(",")[0].strip().lstrip("%")
+        _, lhs_shape = H._shape_of(types.get(lhs, ""))
+        kk = 1
+        for d in lhs_cd.split(","):
+            if d and lhs_shape:
+                i = int(d)
+                if i < len(lhs_shape): kk *= lhs_shape[i]
+        fl = 2.0*float(np.prod(out_shape))*kk if out_shape else 0.0
+        op = re.search(r'op_name="([^"]*)"', line)
+        opn = (op.group(1)[-90:] if op else "?")
+        key = f"{out_t.split('{')[0].strip()} K={kk} | {opn}"
+        agg[key] += fl * mult.get(name, 1.0); cnt[key] += int(mult.get(name,1.0))
+total = sum(agg.values())
+print(f"TOTAL {total:.3e} dot flops/device")
+for k, fl in agg.most_common(18):
+    print(f"{fl:11.3e} ({fl/total*100:5.1f}%) x{cnt[k]:4d} {k}")
