@@ -11,10 +11,13 @@ from repro.core.activity import ChipPowerModel, StepActivity, steps_timeline
 from repro.core.calibrate import CalibrationRecord, CalibrationStore
 from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
                                      from_segments)
+from repro.core.fleet_engine import FleetAuditResult, SensorBank, fleet_audit
 from repro.core.ledger import EnergyLedger, LedgerEntry
-from repro.core.meter import (EnergyEstimate, GoodPracticeConfig,
-                              ModuleScopeError, Workload, compare_protocols,
-                              measure_good_practice, measure_naive)
+from repro.core.meter import (BatchedEnergyEstimate, EnergyEstimate,
+                              GoodPracticeConfig, ModuleScopeError, Workload,
+                              compare_protocols, measure_good_practice,
+                              measure_good_practice_batch, measure_naive,
+                              measure_naive_batch)
 from repro.core.microbench import (CharacterisationResult, characterise,
                                    estimate_boxcar_window,
                                    estimate_steady_state,
@@ -31,6 +34,9 @@ __all__ = [
     "measure_transient", "estimate_steady_state", "estimate_boxcar_window",
     "Workload", "GoodPracticeConfig", "EnergyEstimate", "ModuleScopeError",
     "measure_naive", "measure_good_practice", "compare_protocols",
+    "SensorBank", "FleetAuditResult", "fleet_audit",
+    "BatchedEnergyEstimate", "measure_naive_batch",
+    "measure_good_practice_batch",
     "EnergyLedger", "LedgerEntry", "FleetLedger", "FleetSummary",
     "datacenter_projection",
     "ChipPowerModel", "StepActivity", "steps_timeline",

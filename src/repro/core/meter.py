@@ -16,13 +16,16 @@ Good practice (§5.1, steps 1–3):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.core.calibrate import CalibrationRecord
 from repro.core.ground_truth import ActivityTimeline
 from repro.core.sensor import OnboardSensor
+
+if TYPE_CHECKING:  # avoid a circular import; banks are duck-typed below
+    from repro.core.fleet_engine import SensorBank
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +194,155 @@ def _gaps_between(i0: int, i1: int, shifts: int, reps: int) -> int:
     """Inserted gaps lying between the start of rep i0 and end of rep i1-1."""
     return (_n_gaps_before(i1, shifts, reps)
             - _n_gaps_before(i0, shifts, reps))
+
+
+# ---------------------------------------------------------------------------
+# Batched protocols: whole trial matrices dispatched through a SensorBank
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchedEnergyEstimate:
+    """Per-device good-practice estimates for a whole fleet."""
+
+    joules_per_rep: np.ndarray     # [N]
+    std_j: np.ndarray              # [N]
+    n_trials: int
+    n_reps: np.ndarray             # [N]
+    trial_values: np.ndarray       # [N, n_trials]
+
+    def error_vs(self, truth_j: float) -> np.ndarray:
+        return (self.joules_per_rep - truth_j) / truth_j
+
+    def device(self, i: int) -> EnergyEstimate:
+        """The scalar view of one device's estimate."""
+        return EnergyEstimate(float(self.joules_per_rep[i]),
+                              float(self.std_j[i]), self.n_trials,
+                              int(self.n_reps[i]),
+                              [float(v) for v in self.trial_values[i]])
+
+
+def _check_scope_bank(bank: "SensorBank",
+                      host_baseline_w: Optional[float]) -> float:
+    if np.any(bank.module_scope) and host_baseline_w is None:
+        name = bank.profiles[int(np.argmax(bank.module_scope))].name
+        raise ModuleScopeError(
+            f"profile '{name}' measures the whole module (GPU+CPU+DRAM); "
+            "supply host_baseline_w to subtract, or use a chip-scope profile")
+    return host_baseline_w or 0.0
+
+
+def measure_naive_batch(bank: "SensorBank", workload: Workload,
+                        start_offset_s: float = 0.3,
+                        host_baseline_w: Optional[float] = None,
+                        poll_period_s: float = 0.001) -> np.ndarray:
+    """Batched :func:`measure_naive`: one shared run, every device's sensor
+    integrated at once; returns per-device joules [N]."""
+    baseline = _check_scope_bank(bank, host_baseline_w)
+    tl = workload.timeline.shift(start_offset_s - workload.timeline.t_start)
+    bank.attach(tl, t_end=tl.t_end + 1.0)
+    return bank.integrate_polled(
+        0.0, tl.t_end + 0.5, poll_period_s,
+        start_offset_s, start_offset_s + workload.duration_s,
+        transform=(lambda v: v - baseline) if baseline else None)
+
+
+def measure_good_practice_batch(
+        bank: "SensorBank", workload: Workload,
+        calib: Union[CalibrationRecord, Dict[str, CalibrationRecord]],
+        cfg: GoodPracticeConfig = GoodPracticeConfig(),
+        host_baseline_w: Optional[float] = None,
+        seeds: Optional[np.ndarray] = None) -> BatchedEnergyEstimate:
+    """Batched §5 protocol: each trial dispatches the whole fleet's reading
+    matrix at once instead of looping devices.
+
+    Devices are grouped by profile name (the repetition train layout
+    depends on the calibration's window); within a group the per-device
+    randomised start offsets become a vectorised timeline shift.  Device
+    ``i`` gets protocol seed ``seeds[i]`` and reproduces
+    ``measure_good_practice(bank.scalar_reference(i), ..., seed=seeds[i])``
+    within one reporting quantum.  ``calib`` is one record (homogeneous
+    fleet) or a dict keyed by profile name.
+    """
+    n = bank.n_devices
+    baseline = _check_scope_bank(bank, host_baseline_w)
+    if seeds is None:
+        seeds = np.arange(n)
+    seeds = np.asarray(seeds, dtype=np.int64)
+    calibs: Dict[str, CalibrationRecord]
+    if isinstance(calib, CalibrationRecord):
+        calibs = {p.name: calib for p in bank.profiles}
+    else:
+        calibs = calib
+
+    dur = workload.duration_s
+    reps = max(cfg.min_reps, int(np.ceil(cfg.min_total_s / max(dur, 1e-6))))
+    reps = min(reps, cfg.max_reps)
+
+    joules = np.zeros(n)
+    stds = np.zeros(n)
+    trials = np.zeros((n, cfg.n_trials))
+    names = np.array([p.name for p in bank.profiles])
+    for name in sorted(set(names)):
+        rows = np.nonzero(names == name)[0]
+        sub = bank.subset(rows)
+        cal = calibs[name]
+        part_time = (cal.sampled_fraction < 0.999)
+        W = cal.window_s if cal.window_s else cal.update_period_s
+        shifts = cfg.n_phase_shifts if part_time else 0
+
+        # repetition train, identical to the scalar path, built once
+        if shifts > 0:
+            group = max(1, reps // shifts)
+            parts = []
+            done = 0
+            while done < reps:
+                k = min(group, reps - done)
+                parts.append(workload.timeline.repeat(k))
+                done += k
+            train = ActivityTimeline.concat(parts, gap_s=W)
+        else:
+            train = workload.timeline.repeat(reps)
+
+        # per-device randomised trial start offsets (same default_rng(seed)
+        # stream as the scalar protocol, drawn n_trials at a time)
+        starts = np.empty((len(rows), cfg.n_trials))
+        for g, i in enumerate(rows):
+            rng = np.random.default_rng(int(seeds[i]))
+            starts[g] = 0.3 + rng.uniform(0.0, 1.0, size=cfg.n_trials)
+
+        rise = cal.rise_time_s if (cfg.discard_rise and
+                                   np.isfinite(cal.rise_time_s)) else 0.0
+        n_skip = int(np.ceil(rise / max(dur, 1e-6)))
+        n_skip = min(n_skip, reps - 1)
+        kept = reps - n_skip
+        off_begin = _train_offset(n_skip, dur, shifts, reps, W)
+        off_end = _train_offset(reps, dur, shifts, reps, W)
+        gaps_inside = _gaps_between(n_skip, reps, shifts, reps)
+
+        def transform(v):
+            v = v - baseline
+            if cfg.apply_calibration and cal.gain:
+                v = (v - (cal.offset_w or 0.0)) / cal.gain
+            return v
+
+        length = train.t_end - train.t_start
+        for t in range(cfg.n_trials):
+            start = starts[:, t]
+            shift = start - train.t_start
+            sub.attach(train, t_end=train.t_end + shift + 2.0, shifts=shift)
+            e = sub.integrate_polled(
+                0.0, start + length + 1.0, cfg.poll_period_s,
+                start + off_begin, start + off_end,
+                transform=transform,
+                grid_offset=-W if cfg.time_shift else 0.0)
+            e -= gaps_inside * W * workload.timeline.idle_w
+            trials[rows, t] = e / kept
+
+        joules[rows] = np.mean(trials[rows], axis=1)
+        stds[rows] = np.std(trials[rows], axis=1)
+
+    return BatchedEnergyEstimate(joules, stds, cfg.n_trials,
+                                 np.full(n, reps, dtype=np.int64), trials)
 
 
 def compare_protocols(sensor: OnboardSensor, workload: Workload,

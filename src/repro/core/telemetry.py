@@ -17,6 +17,12 @@ import numpy as np
 from repro.core.calibrate import CalibrationRecord
 from repro.core.ledger import EnergyLedger
 
+# per-device relative energy uncertainty: the ±5 % shunt-resistor
+# tolerance (paper §6) uncalibrated, and a 1 % floor once calibrated
+# (post-correction error std ~0.25 %, plus drift headroom)
+SHUNT_TOLERANCE = 0.05
+CALIBRATED_TOLERANCE = 0.01
+
 
 @dataclasses.dataclass
 class FleetSummary:
@@ -32,12 +38,20 @@ class FleetSummary:
 
 
 class FleetLedger:
-    """Aggregates per-device ledgers + calibrations across a fleet."""
+    """Aggregates per-device ledgers + calibrations across a fleet.
+
+    Two registration paths: :meth:`register` keeps one
+    :class:`EnergyLedger` object per device (fine up to a few hundred
+    devices), while :meth:`register_batch` takes whole fleets as stacked
+    arrays from the batched engine (:mod:`repro.core.fleet_engine`) —
+    10k+ devices without 10k Python objects.  :meth:`summary` folds both.
+    """
 
     def __init__(self, price_usd_per_kwh: float = 0.35):
         self.price = price_usd_per_kwh
         self.ledgers: Dict[str, EnergyLedger] = {}
         self.calibrations: Dict[str, CalibrationRecord] = {}
+        self._batches: List[tuple] = []   # (energies_j, sigmas_j, duration_s)
 
     def register(self, ledger: EnergyLedger,
                  calib: Optional[CalibrationRecord] = None) -> None:
@@ -45,33 +59,55 @@ class FleetLedger:
         if calib is not None:
             self.calibrations[calib.device_id] = calib
 
+    def register_batch(self, energies_j: np.ndarray,
+                       sigmas_j: Optional[np.ndarray] = None,
+                       duration_s: float = 0.0,
+                       calibrated: bool = False) -> None:
+        """Array-native registration for fleet-scale audits.
+
+        ``sigmas_j`` defaults to the same per-device model as the object
+        path: 5 % shunt tolerance uncalibrated, 1 % calibrated floor.
+        """
+        e = np.asarray(energies_j, dtype=np.float64)
+        if sigmas_j is None:
+            s = (CALIBRATED_TOLERANCE if calibrated else SHUNT_TOLERANCE) * e
+        else:
+            s = np.broadcast_to(
+                np.asarray(sigmas_j, dtype=np.float64), e.shape).copy()
+        self._batches.append((e, s, float(duration_s)))
+
     def _device_sigma(self, device_id: str, energy_j: float) -> float:
         calib = self.calibrations.get(device_id)
         if calib is not None and calib.gain is not None:
-            # calibrated: residual uncertainty is the regression residual,
-            # take 1 % as the calibrated floor (paper: post-correction
-            # error std ~0.25 %, plus drift headroom)
-            return 0.01 * energy_j
-        return 0.05 * energy_j          # uncalibrated shunt tolerance
+            return CALIBRATED_TOLERANCE * energy_j
+        return SHUNT_TOLERANCE * energy_j
 
     def summary(self) -> FleetSummary:
         totals = []
         sigmas = []
         duration = 0.0
+        n_devices = len(self.ledgers)
         for dev, led in self.ledgers.items():
             e = led.total_corrected_j
             totals.append(e)
             sigmas.append(self._device_sigma(dev, e))
             duration = max(duration, led.total_duration_s)
         total = float(np.sum(totals)) if totals else 0.0
-        sig_ind = float(np.sqrt(np.sum(np.square(sigmas)))) if sigmas else 0.0
+        sig_sq = float(np.sum(np.square(sigmas))) if sigmas else 0.0
         sig_wc = float(np.sum(sigmas)) if sigmas else 0.0
+        for e, s, dur in self._batches:
+            n_devices += len(e)
+            total += float(np.sum(e))
+            sig_sq += float(np.sum(np.square(s)))
+            sig_wc += float(np.sum(s))
+            duration = max(duration, dur)
+        sig_ind = float(np.sqrt(sig_sq))
         kwh = total / 3.6e6
         mean_p = total / duration if duration > 0 else 0.0
         # annualised uncertainty if this fleet ran at this mean power all year
         annual_kwh_sigma = (sig_wc / max(total, 1e-9)) * mean_p * 8760.0 / 1000.0
         return FleetSummary(
-            n_devices=len(self.ledgers),
+            n_devices=n_devices,
             total_j=total,
             sigma_independent_j=sig_ind,
             sigma_worstcase_j=sig_wc,

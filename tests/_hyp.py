@@ -1,0 +1,51 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+The tier-1 environment may lack `hypothesis` (it is pinned in
+``requirements.txt`` but not baked into every image).  Importing this
+module instead of `hypothesis` directly lets the suite *degrade* —
+property tests are individually skipped — rather than erroring six test
+modules at collection time.
+
+Usage (in a test module)::
+
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed "
+                                    "(see requirements.txt)")
+
+    class _Strategy:
+        """Inert placeholder accepted anywhere a strategy is expected."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return _SKIP(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

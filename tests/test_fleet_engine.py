@@ -1,0 +1,188 @@
+"""Scalar ↔ batched engine equivalence and fleet-audit behaviour.
+
+The contract under test (ISSUE 1 acceptance): `SensorBank` reproduces the
+scalar `OnboardSensor` readings per-device — same profile + seed — within
+one reporting quantum, across every transient kind in the catalog, and the
+batched measurement protocols match their scalar counterparts.
+"""
+import numpy as np
+import pytest
+
+from repro.core import load as loads
+from repro.core import profiles
+from repro.core.calibrate import CalibrationRecord
+from repro.core.fleet_engine import SensorBank, fleet_audit
+from repro.core.meter import (GoodPracticeConfig, ModuleScopeError, Workload,
+                              measure_good_practice,
+                              measure_good_practice_batch, measure_naive,
+                              measure_naive_batch)
+from repro.core.sensor import OnboardSensor, SensorUnsupported
+from repro.core.telemetry import FleetLedger
+
+# one of each behavioural class: part-time boxcar, long-window boxcar,
+# fast Volta grid, logarithmic transients, estimation-based Fermi
+MIXED = ["a100", "h100_average", "v100", "rtx3090_530", "kepler",
+         "maxwell", "fermi2", "gh200_gpu", "tpu_v5e_dash"]
+
+TL = loads.square_wave(0.230, 16, 220.0, 90.0)
+
+
+def _calib(name: str) -> CalibrationRecord:
+    p = profiles.get(name)
+    return CalibrationRecord("d", name, p.update_period_s, p.window_s,
+                             "instant", 2.5 * p.update_period_s,
+                             sampled_fraction=p.sampled_fraction)
+
+
+def test_bank_hidden_params_match_scalar():
+    bank = SensorBank.from_catalog(MIXED, base_seed=42)
+    for i, name in enumerate(MIXED):
+        s = OnboardSensor(profiles.get(name), seed=42 + i)
+        assert bank.true_gain[i] == s.true_gain
+        assert bank.true_offset[i] == s.true_offset
+        assert bank.true_phase[i] == s.true_phase
+
+
+@pytest.mark.parametrize("rep", range(2))
+def test_bank_readings_match_scalar_within_quantum(rep):
+    """Same seeds → same readings, across every transient kind."""
+    base = 42 + 100 * rep
+    names = MIXED * 2
+    bank = SensorBank.from_catalog(names, base_seed=base)
+    bank.attach(TL, t_end=6.0)
+    qs = np.linspace(0.0, 6.0, 500)
+    got = bank.query(qs)
+    for i, name in enumerate(names):
+        s = OnboardSensor(profiles.get(name), seed=base + i)
+        s.attach(TL, t_end=6.0)
+        quantum = profiles.get(name).quantum_w
+        np.testing.assert_allclose(got[i], s.query(qs), atol=quantum + 1e-12,
+                                   err_msg=f"device {i} ({name})")
+
+
+def test_bank_poll_matches_scalar_poll():
+    bank = SensorBank.from_catalog(["a100", "v100"], base_seed=3)
+    bank.attach(TL, t_end=4.0)
+    ts, mat = bank.poll(0.0, 4.0, period_s=0.002)
+    for i, name in enumerate(["a100", "v100"]):
+        s = OnboardSensor(profiles.get(name), seed=3 + i)
+        s.attach(TL, t_end=4.0)
+        ts_ref, vals_ref = s.poll(0.0, 4.0, period_s=0.002)
+        np.testing.assert_array_equal(ts, ts_ref)
+        np.testing.assert_allclose(mat[i], vals_ref, atol=1e-12)
+
+
+def test_unsupported_profile_raises_on_attach():
+    bank = SensorBank.from_catalog(["a100", "fermi1"], base_seed=0)
+    with pytest.raises(SensorUnsupported):
+        bank.attach(TL)
+
+
+def test_module_scope_host_timeline_matches_scalar():
+    host = loads.workload_burst(2.0, 55.0, idle_w=40.0)
+    bank = SensorBank.from_catalog(["gh200_module_instant"], base_seed=9,
+                                   host_timeline=host)
+    bank.attach(TL, t_end=4.0)
+    s = bank.scalar_reference(0)
+    s.attach(TL, t_end=4.0)
+    qs = np.linspace(0.0, 4.0, 200)
+    np.testing.assert_allclose(bank.query(qs)[0], s.query(qs), atol=1e-12)
+
+
+def test_measure_naive_batch_matches_scalar():
+    wl = Workload("w", loads.multi_phase_workload([(0.130, 215.0),
+                                                   (0.070, 165.0)]))
+    names = ["a100", "a100", "rtx3090_average", "v100", "kepler"]
+    bank = SensorBank.from_catalog(names, base_seed=7)
+    batch = measure_naive_batch(bank, wl)
+    for i, name in enumerate(names):
+        ref = measure_naive(OnboardSensor(profiles.get(name), seed=7 + i), wl)
+        assert batch[i] == pytest.approx(ref, abs=1e-9)
+
+
+def test_measure_good_practice_batch_matches_scalar():
+    wl = Workload("w", loads.multi_phase_workload([(0.130, 215.0),
+                                                   (0.070, 165.0)]))
+    names = ["a100", "a100", "rtx3090_average", "v100"]
+    bank = SensorBank.from_catalog(names, base_seed=7)
+    cfg = GoodPracticeConfig(n_trials=2)
+    calibs = {n: _calib(n) for n in set(names)}
+    batch = measure_good_practice_batch(bank, wl, calibs, cfg)
+    for i, name in enumerate(names):
+        s = OnboardSensor(profiles.get(name), seed=7 + i)
+        ref = measure_good_practice(s, wl, calibs[name], cfg, seed=i)
+        assert batch.joules_per_rep[i] == pytest.approx(
+            ref.joules_per_rep, abs=1e-3)
+        np.testing.assert_allclose(batch.trial_values[i], ref.trial_values,
+                                   atol=1e-3)
+
+
+def test_measure_batch_module_scope_guard():
+    wl = Workload("w", loads.workload_burst(0.1, 210.0))
+    bank = SensorBank.from_catalog(["a100", "gh200_module_instant"],
+                                   base_seed=0)
+    with pytest.raises(ModuleScopeError):
+        measure_naive_batch(bank, wl)
+    e = measure_naive_batch(bank, wl, host_baseline_w=0.0)
+    assert np.all(np.isfinite(e))
+
+
+def test_subset_shares_hidden_params():
+    bank = SensorBank.from_catalog(MIXED, base_seed=11)
+    sub = bank.subset(np.array([2, 5]))
+    assert sub.n_devices == 2
+    assert sub.true_gain[0] == bank.true_gain[2]
+    assert sub.profiles[1].name == MIXED[5]
+
+
+def test_fleet_audit_shape_and_gp_beats_naive():
+    res = fleet_audit(300, profile="a100", seed=5, good_practice=True,
+                      n_trials=2)
+    assert res.naive_j.shape == (300,)
+    assert res.gp_j.shape == (300,)
+    st, gp = res.stats(), res.stats(res.gp_err)
+    # the paper's Fig. 18 at fleet scale: protocol collapses the error
+    assert gp["mean_abs_err"] < st["mean_abs_err"]
+    assert gp["mean_abs_err"] < 0.10
+    unc = res.uncertainty()
+    # 1/sqrt(N) scaling: independent bound ~ worst-case / sqrt(300)
+    assert unc["sigma_independent_j"] == pytest.approx(
+        unc["sigma_worstcase_j"] / np.sqrt(300), rel=0.15)
+
+
+def test_fleet_audit_heterogeneous_profiles():
+    names = ["a100"] * 50 + ["v100"] * 50
+    res = fleet_audit(100, profile=names, seed=2)
+    assert res.naive_j.shape == (100,)
+    assert np.all(np.isfinite(res.naive_err))
+
+
+def test_register_batch_summary_matches_object_path():
+    e = np.full(64, 500.0)
+    obj = FleetLedger()
+    from repro.core.ledger import EnergyLedger
+    for i in range(64):
+        led = EnergyLedger(device_id=f"d{i}")
+        led.append(0, 0.0, 10.0, 550.0, 500.0, 25.0)
+        obj.register(led)
+    arr = FleetLedger()
+    arr.register_batch(e, duration_s=10.0)
+    so, sa = obj.summary(), arr.summary()
+    assert sa.n_devices == so.n_devices
+    assert sa.total_j == pytest.approx(so.total_j)
+    assert sa.sigma_independent_j == pytest.approx(so.sigma_independent_j)
+    assert sa.sigma_worstcase_j == pytest.approx(so.sigma_worstcase_j)
+    assert sa.mean_power_w == pytest.approx(so.mean_power_w)
+
+
+def test_register_batch_mixes_with_object_path():
+    fleet = FleetLedger()
+    from repro.core.ledger import EnergyLedger
+    led = EnergyLedger(device_id="d0")
+    led.append(0, 0.0, 1.0, 110.0, 100.0, 5.0)
+    fleet.register(led)
+    fleet.register_batch(np.array([100.0, 100.0]), duration_s=1.0)
+    s = fleet.summary()
+    assert s.n_devices == 3
+    assert s.total_j == pytest.approx(300.0)
+    assert s.sigma_worstcase_j == pytest.approx(15.0)

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to per-test skips without hypothesis
 
 from repro.kernels import ops, ref
 from repro.kernels.fma_chain import fma_chain

@@ -12,7 +12,7 @@ The quantitative claims validated here:
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to per-test skips without hypothesis
 
 from repro.core import load as loads
 from repro.core import profiles

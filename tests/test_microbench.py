@@ -2,7 +2,7 @@
 parameters (the paper's §4 experiments as property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to per-test skips without hypothesis
 
 from repro.core import microbench, profiles
 from repro.core.ground_truth import GroundTruthMeter

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to per-test skips without hypothesis
 
 from repro.distributed import act_shard
 from repro.models.moe import moe_ffn

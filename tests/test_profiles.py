@@ -1,0 +1,91 @@
+"""Profile catalog invariants: the characterised Fig. 14 values."""
+import os
+
+import pytest
+
+from repro.core import profiles
+from repro.core.sensor import SensorProfile
+
+# the paper's characterised sampled fractions (window / update period)
+CHARACTERISED = {
+    "a100": 0.25,                 # 25 ms / 100 ms — the headline number
+    "h100_instant": 0.25,
+    "h100_average": 1.0,          # 1 s running average covers everything
+    "gh200_gpu": 0.20,
+    "gh200_cpu": 0.10,
+    "gh200_module_instant": 0.20,
+    "rtx3090_pre530": 1.0,
+    "rtx3090_530": 1.0,
+    "rtx3090_instant": 1.0,
+    "rtx3090_average": 1.0,
+    "rtx4090_instant": 1.0,
+    "turing": 1.0,
+    "v100": 0.50,
+    "p100": 0.50,
+    "kepler": 1.0,                # logarithmic filter sees everything
+    "maxwell": 1.0,
+    "fermi2": 1.0,
+    "tpu_v5e_chip": 0.25,
+    "tpu_v5e_host": 1.0,
+    "tpu_v5e_dash": 1.0,
+}
+
+
+def test_every_catalog_entry_is_characterised():
+    assert set(profiles.CATALOG) == set(CHARACTERISED) | {"fermi1"}
+
+
+@pytest.mark.parametrize("name,frac", sorted(CHARACTERISED.items()))
+def test_sampled_fraction_matches_paper(name, frac):
+    assert profiles.get(name).sampled_fraction == pytest.approx(frac)
+
+
+def test_get_raises_on_unknown_name():
+    with pytest.raises(KeyError, match="unknown sensor profile"):
+        profiles.get("b200")
+
+
+def test_get_returns_catalog_object():
+    assert profiles.get("a100") is profiles.CATALOG["a100"]
+    assert isinstance(profiles.get("a100"), SensorProfile)
+
+
+def test_catalog_names_are_keys():
+    for name, prof in profiles.CATALOG.items():
+        assert prof.name == name
+
+
+def test_fermi1_unsupported():
+    assert not profiles.get("fermi1").supported
+
+
+def test_evaluation_cases_of_section5():
+    # case 1: W == T, case 2: W > T, case 3: W < T (part-time)
+    assert profiles.CASE1.sampled_fraction == pytest.approx(1.0)
+    assert profiles.CASE2.window_s > profiles.CASE2.update_period_s
+    assert profiles.CASE3.sampled_fraction == pytest.approx(0.25)
+
+
+def test_docs_profile_table_matches_catalog():
+    """docs/sensor-model.md's Fig. 14 table is generated from CATALOG;
+    fail if someone edits the catalog without regenerating the docs."""
+    import importlib.util
+    root = os.path.join(os.path.dirname(__file__), "..")
+    spec = importlib.util.spec_from_file_location(
+        "make_profile_table",
+        os.path.join(root, "tools", "make_profile_table.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    with open(os.path.join(root, "docs", "sensor-model.md")) as f:
+        text = f.read()
+    assert mod.render_block() in text, (
+        "profile table stale; run: PYTHONPATH=src python "
+        "tools/make_profile_table.py")
+
+
+def test_part_time_parts_are_flagged():
+    """Every part-time (W < T) part misses activity; the A100/H100 story."""
+    for name in ("a100", "h100_instant", "gh200_gpu", "v100"):
+        p = profiles.get(name)
+        assert p.window_s < p.update_period_s
+        assert p.sampled_fraction < 1.0

@@ -1,7 +1,7 @@
 """ActivityTimeline / GroundTruthMeter invariants (unit + property)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to per-test skips without hypothesis
 
 from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
                                      from_segments)
