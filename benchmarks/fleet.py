@@ -1,15 +1,33 @@
 """Data-centre projection + fleet telemetry (the paper's $1M/yr headline
-and the 1/√N vs worst-case uncertainty scaling), now driven through the
-batched engine: a 10,000-device Monte-Carlo audit — every device with its
-own hidden gain/offset/phase — in one vectorized pass."""
+and the 1/√N vs worst-case uncertainty scaling), driven through the
+batched engine two ways: the shared-timeline audit (one workload × 10k
+seeds) and the heterogeneous mixed-scenario audit (every device its own
+timeline via the `TimelineBank` substrate), with per-scenario error
+breakdowns and a machine-readable ``BENCH_fleet.json`` so the perf
+trajectory has data points.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from benchmarks.common import emit
+from repro.core import load as loads
 from repro.core.fleet_engine import fleet_audit
 from repro.core.ledger import EnergyLedger
+from repro.core.meter import WorkloadSet
 from repro.core.telemetry import FleetLedger, datacenter_projection
+
+N_DEVICES = 10_000
+JSON_PATH = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
+
+
+def _emit_err(name: str, us_per_dev: float, st: dict) -> None:
+    emit(name, us_per_dev,
+         f"mean_abs={st['mean_abs_err']:.4f};std={st['std_err']:.4f};"
+         f"p50={st['p50_abs']:.4f};p90={st['p90_abs']:.4f};"
+         f"p99={st['p99_abs']:.4f};worst={st['worst_abs']:.4f}")
 
 
 def run() -> None:
@@ -32,9 +50,9 @@ def run() -> None:
          f"{s.sigma_worstcase_j/s.total_j*100:.2f};"
          f"mean_power_w={s.mean_power_w:.0f}")
 
-    # batched path: 10k heterogeneous devices, naive + good practice,
-    # per-device error distribution (the paper's Fig. 18 at fleet scale)
-    n = 10_000
+    # shared-timeline path: 10k heterogeneous devices, one workload,
+    # naive + good practice (the paper's Fig. 18 at fleet scale)
+    n = N_DEVICES
     names = (["a100"] * (n // 2) + ["h100_instant"] * (n // 4)
              + ["v100"] * (n // 4))
     # time the two protocols separately: the naive-only pass first, then
@@ -45,28 +63,86 @@ def run() -> None:
     wall_naive = time.perf_counter() - t0
     t0 = time.perf_counter()
     res = fleet_audit(n, profile=names, good_practice=True, n_trials=2)
-    wall = time.perf_counter() - t0
-    wall_gp = max(wall - wall_naive, 0.0)
+    wall_shared = time.perf_counter() - t0
+    wall_gp = max(wall_shared - wall_naive, 0.0)
     st = res.stats()
     gp = res.stats(res.gp_err)
-    emit("fleet_audit/naive_err_10k", wall_naive * 1e6 / n,
-         f"mean_abs={st['mean_abs_err']:.4f};std={st['std_err']:.4f};"
-         f"p50={st['p50_abs']:.4f};p90={st['p90_abs']:.4f};"
-         f"p99={st['p99_abs']:.4f};worst={st['worst_abs']:.4f}")
-    emit("fleet_audit/goodpractice_err_10k", wall_gp * 1e6 / n,
-         f"mean_abs={gp['mean_abs_err']:.4f};std={gp['std_err']:.4f};"
-         f"p50={gp['p50_abs']:.4f};p90={gp['p90_abs']:.4f};"
-         f"p99={gp['p99_abs']:.4f};worst={gp['worst_abs']:.4f}")
+    _emit_err("fleet_audit/naive_err_10k", wall_naive * 1e6 / n, st)
+    _emit_err("fleet_audit/goodpractice_err_10k", wall_gp * 1e6 / n, gp)
 
     unc = res.uncertainty()
     big = FleetLedger()
     big.register_batch(res.gp_j, duration_s=0.2)
     bs = big.summary()
-    emit("fleet_audit/uncertainty_10k", wall * 1e6 / n,
+    emit("fleet_audit/uncertainty_10k", wall_shared * 1e6 / n,
          f"n={bs.n_devices};sigma_ind_pct="
          f"{unc['sigma_independent_rel']*100:.3f};"
          f"sigma_wc_pct={unc['sigma_worstcase_rel']*100:.3f};"
-         f"wall_s={wall:.2f}")
+         f"wall_s={wall_shared:.2f}")
+
+    # heterogeneous path: every device its own timeline (mixed scenarios:
+    # training pods, Poisson inference serving, idle/maintenance, diurnal)
+    t0 = time.perf_counter()
+    ws = WorkloadSet(loads.mixed_fleet_workloads(n, seed=7))
+    ws.timeline_bank      # stack the [N, S] substrate outside the audits
+    wall_gen = time.perf_counter() - t0
+    # naive-only pass first (same seeds → identical naive results), so
+    # each metric's us-per-device reflects only its own protocol's cost
+    t0 = time.perf_counter()
+    fleet_audit(n, profile=names, workload=ws, good_practice=False)
+    wall_naive_h = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_h = fleet_audit(n, profile=names, workload=ws,
+                        good_practice=True, n_trials=2)
+    wall_hetero = time.perf_counter() - t0
+    wall_gp_h = max(wall_hetero - wall_naive_h, 0.0)
+    sth = res_h.stats()
+    gph = res_h.stats(res_h.gp_err)
+    _emit_err("fleet_audit/hetero_naive_err_10k", wall_naive_h * 1e6 / n, sth)
+    _emit_err("fleet_audit/hetero_goodpractice_err_10k",
+              wall_gp_h * 1e6 / n, gph)
+    by_naive = res_h.by_scenario()
+    by_gp = res_h.by_scenario(res_h.gp_err)
+    for label in sorted(by_naive):
+        emit(f"fleet_audit/scenario_{label}", 0.0,
+             f"n={by_naive[label]['n_devices']};"
+             f"naive_mean_abs={by_naive[label]['mean_abs_err']:.4f};"
+             f"gp_mean_abs={by_gp[label]['mean_abs_err']:.4f}")
+    ratio = wall_hetero / max(wall_shared, 1e-9)
+    emit("fleet_audit/hetero_over_shared", 0.0,
+         f"wall_shared_s={wall_shared:.2f};wall_hetero_s={wall_hetero:.2f};"
+         f"ratio={ratio:.2f}")
+
+    payload = {
+        "n_devices": n,
+        "profiles": {"a100": n // 2, "h100_instant": n // 4,
+                     "v100": n // 4},
+        "shared": {
+            "wall_s_naive": round(wall_naive, 4),
+            "wall_s_total": round(wall_shared, 4),
+            "devices_per_sec": round(n / wall_shared, 1),
+            "naive": st,
+            "good_practice": gp,
+        },
+        "heterogeneous": {
+            "wall_s_workload_gen": round(wall_gen, 4),
+            "wall_s_naive": round(wall_naive_h, 4),
+            "wall_s_total": round(wall_hetero, 4),
+            "devices_per_sec": round(n / wall_hetero, 1),
+            "naive": sth,
+            "good_practice": gph,
+            "by_scenario": {k: {"n_devices": by_naive[k]["n_devices"],
+                                "naive_mean_abs":
+                                    by_naive[k]["mean_abs_err"],
+                                "gp_mean_abs": by_gp[k]["mean_abs_err"]}
+                            for k in sorted(by_naive)},
+        },
+        "hetero_over_shared_wall": round(ratio, 3),
+    }
+    with open(JSON_PATH, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    emit("fleet_audit/bench_json", 0.0, f"path={JSON_PATH}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,16 @@
-"""Fleet energy audit at datacentre scale: simulate a pod where every
-chip has a part-time sensor with its own hidden gain/offset/phase error;
-compare the naive fleet energy bill against the §5 good-practice one.
+"""Fleet energy audit at datacentre scale — now with a *heterogeneous*
+fleet: every chip runs its own job (training pods, bursty Poisson-arrival
+inference serving, idle/maintenance windows, diurnal cycles), each with a
+part-time sensor carrying its own hidden gain/offset/phase error.  The
+naive fleet energy bill is compared against the §5 good-practice one, with
+the error broken down per workload scenario — the paper's Fig. 18 spread,
+emergent from workload mix rather than seed noise.
 
 The audit runs through the batched engine (`repro.core.fleet_engine`):
-one `SensorBank` holds all 4,096 chips and every trial dispatches the
-whole fleet's reading matrix at once, so this demo takes ~1 s where the
-per-device loop took minutes (and scales to 10k+; see benchmarks/fleet.py).
+per-device timelines are stacked into one `TimelineBank`, one `SensorBank`
+holds all 4,096 chips, and every trial dispatches the whole fleet's
+reading matrix at once — ~1 s where the per-device loop took minutes (and
+scales to 10k+; see benchmarks/fleet.py).
 
     PYTHONPATH=src python examples/fleet_energy_audit.py
 """
@@ -13,50 +18,54 @@ import time
 
 import numpy as np
 
-from repro.core import (CalibrationRecord, FleetLedger, SensorBank,
-                        datacenter_projection)
+from repro.core import FleetLedger, datacenter_projection
 from repro.core import load as loads
 from repro.core import profiles
-from repro.core.meter import (GoodPracticeConfig, Workload,
-                              measure_good_practice_batch,
-                              measure_naive_batch)
+from repro.core.fleet_engine import fleet_audit
 
 
 def main():
     profile = profiles.get("tpu_v5e_chip")   # 25/100 part-time class
-    step = Workload("train_step", loads.multi_phase_workload(
-        [(0.130, 215.0), (0.070, 165.0)]))   # compute + collective phases
     n_chips = 4096
 
-    t0 = time.perf_counter()
-    bank = SensorBank.from_catalog(profile.name, n=n_chips, base_seed=1000)
-    calib = CalibrationRecord(
-        "pod", profile.name, profile.update_period_s, profile.window_s,
-        "instant", 0.25, sampled_fraction=profile.sampled_fraction)
+    # every chip its own timeline, drawn from the default scenario mix
+    workloads = loads.mixed_fleet_workloads(n_chips, seed=1000)
 
-    naive = measure_naive_batch(bank, step)
-    est = measure_good_practice_batch(bank, step, calib,
-                                      GoodPracticeConfig(n_trials=2))
+    t0 = time.perf_counter()
+    res = fleet_audit(n_chips, profile=profile.name, workload=workloads,
+                      seed=1000, good_practice=True, n_trials=2)
     wall = time.perf_counter() - t0
 
     fleet = FleetLedger(price_usd_per_kwh=0.35)
-    fleet.register_batch(est.joules_per_rep, duration_s=step.duration_s)
+    fleet.register_batch(res.gp_j, duration_s=float(np.mean(
+        [w.duration_s for w in workloads])),
+        labels=np.array(res.scenarios, dtype=object))
     s = fleet.summary()
 
-    truth = step.true_energy_j * n_chips
-    naive_total = float(np.sum(naive))
-    err = est.error_vs(step.true_energy_j)
-    print(f"chips audited        : {s.n_devices}  ({wall:.2f}s batched)")
-    print(f"true energy          : {truth:9.1f} J/step")
-    print(f"naive fleet reading  : {naive_total:9.1f} J/step "
+    truth = float(np.sum(res.true_j))
+    naive_total = float(np.sum(res.naive_j))
+    print(f"chips audited        : {s.n_devices}  ({wall:.2f}s batched, "
+          "every chip its own timeline)")
+    print(f"true energy          : {truth:9.1f} J/rep")
+    print(f"naive fleet reading  : {naive_total:9.1f} J/rep "
           f"({(naive_total-truth)/truth:+.1%})")
-    print(f"good-practice total  : {s.total_j:9.1f} J/step "
+    print(f"good-practice total  : {s.total_j:9.1f} J/rep "
           f"({(s.total_j-truth)/truth:+.1%})")
-    print(f"per-chip |err| p50/p99: {np.percentile(np.abs(err), 50):.2%} / "
-          f"{np.percentile(np.abs(err), 99):.2%}")
     print(f"uncertainty (indep)  : {s.sigma_independent_j:7.1f} J  (1/√N)")
     print(f"uncertainty (worst)  : {s.sigma_worstcase_j:7.1f} J  "
           "(correlated resistor lot)")
+
+    print("\nper-scenario breakdown (naive → good practice, mean |err|):")
+    by_naive = res.by_scenario()
+    by_gp = res.by_scenario(res.gp_err)
+    by_energy = fleet.by_label()
+    for label in sorted(by_naive):
+        n = by_naive[label]["n_devices"]
+        print(f"  {label:10s} n={n:5d}  "
+              f"{by_naive[label]['mean_abs_err']:6.2%} → "
+              f"{by_gp[label]['mean_abs_err']:6.2%}   "
+              f"({by_energy[label].total_j:8.1f} J)")
+
     proj = datacenter_projection()
     print(f"\n10k-GPU projection of NVIDIA's spec gap: "
           f"${proj['annual_err_usd']:,.0f}/yr unaccounted")

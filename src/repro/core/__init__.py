@@ -10,12 +10,13 @@ Public API:
 from repro.core.activity import ChipPowerModel, StepActivity, steps_timeline
 from repro.core.calibrate import CalibrationRecord, CalibrationStore
 from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
-                                     from_segments)
+                                     TimelineBank, from_segments)
 from repro.core.fleet_engine import FleetAuditResult, SensorBank, fleet_audit
 from repro.core.ledger import EnergyLedger, LedgerEntry
 from repro.core.meter import (BatchedEnergyEstimate, EnergyEstimate,
                               GoodPracticeConfig, ModuleScopeError, Workload,
-                              compare_protocols, measure_good_practice,
+                              WorkloadSet, compare_protocols,
+                              measure_good_practice,
                               measure_good_practice_batch, measure_naive,
                               measure_naive_batch)
 from repro.core.microbench import (CharacterisationResult, characterise,
@@ -27,12 +28,13 @@ from repro.core.telemetry import (FleetLedger, FleetSummary,
                                   datacenter_projection)
 
 __all__ = [
-    "ActivityTimeline", "GroundTruthMeter", "from_segments",
+    "ActivityTimeline", "GroundTruthMeter", "TimelineBank", "from_segments",
     "OnboardSensor", "SensorProfile", "SensorUnsupported",
     "CalibrationRecord", "CalibrationStore",
     "CharacterisationResult", "characterise", "estimate_update_period",
     "measure_transient", "estimate_steady_state", "estimate_boxcar_window",
-    "Workload", "GoodPracticeConfig", "EnergyEstimate", "ModuleScopeError",
+    "Workload", "WorkloadSet", "GoodPracticeConfig", "EnergyEstimate",
+    "ModuleScopeError",
     "measure_naive", "measure_good_practice", "compare_protocols",
     "SensorBank", "FleetAuditResult", "fleet_audit",
     "BatchedEnergyEstimate", "measure_naive_batch",

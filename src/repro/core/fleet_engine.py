@@ -24,12 +24,16 @@ measurement protocols).  The guarantees rest on three implementation rules:
   ``phase + T * k`` on a padded ``[N, M]`` matrix, with leading/trailing
   slots masked rather than filtered;
 * the Kepler/Maxwell first-order ("logarithmic") filter is a *scan across
-  shared timeline segments with vector state over devices* — the loop length
-  equals the number of timeline edges (as in the scalar code) but each step
-  advances every device at once.
+  timeline segments with vector state over devices* — each step advances
+  every device at once, and with per-device timelines the scan walks each
+  row's own padded edge sequence (zero-width padding steps are masked).
 
-The batched boxcar and estimation kernels reuse the already-vectorised
-``ActivityTimeline.mean_power`` on 2-D tick matrices.  A JAX ``lax.scan``
+Timelines are *heterogeneous-first*: ``attach`` takes either one shared
+:class:`ActivityTimeline` (optionally with per-device ``shifts``) or a
+:class:`~repro.core.ground_truth.TimelineBank` giving every device its own
+trace — a fleet where each GPU runs a different job.  Internally both paths
+feed the same three transient kernels; the shared timeline is simply the
+degenerate single-row bank broadcast across devices.  A JAX ``lax.scan``
 drop-in for the logarithmic filter was considered and rejected: JAX defaults
 to float32, which breaks the one-quantum equivalence contract; the
 device-vectorised NumPy scan is within ~2× of it on CPU fleets anyway.
@@ -42,7 +46,8 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import profiles as _profiles
-from repro.core.ground_truth import ActivityTimeline
+from repro.core.ground_truth import (ActivityTimeline, TimelineBank,
+                                     batch_searchsorted)
 from repro.core.sensor import (OnboardSensor, SensorProfile,
                                SensorUnsupported, _sum_timelines)
 
@@ -203,35 +208,69 @@ class SensorBank:
         return nb
 
     # -- simulation -------------------------------------------------------
-    def attach(self, timeline: ActivityTimeline,
+    def attach(self, timeline: Union[ActivityTimeline, TimelineBank],
                t_end: Union[None, float, np.ndarray] = None,
                t_start: float = 0.0,
                shifts: Optional[np.ndarray] = None) -> None:
         """Precompute every device's published-reading schedule at once.
 
-        ``shifts[i]`` makes device ``i`` observe ``timeline.shift(shifts[i])``
-        without materialising N shifted timelines (the batched measurement
-        protocols randomise per-device start offsets this way).  ``t_end``
-        may be per-device.
+        ``timeline`` is one shared :class:`ActivityTimeline` for the whole
+        fleet, or a :class:`TimelineBank` with one row per device (every
+        GPU running its own job).  With a shared timeline, ``shifts[i]``
+        makes device ``i`` observe ``timeline.shift(shifts[i])`` without
+        materialising N shifted timelines (the batched measurement
+        protocols randomise per-device start offsets this way); with a
+        bank, bake offsets in via :meth:`TimelineBank.shift` instead.
+        ``t_end`` may be per-device.
         """
         n = self.n_devices
         if not np.all(self.supported):
             bad = self.profiles[int(np.argmin(self.supported))]
             raise SensorUnsupported(f"{bad.name} exposes no power readings")
-        if shifts is not None and self.host_timeline is not None:
-            raise NotImplementedError(
-                "per-device shifts with a module-scope host timeline")
-        s = _as_array(shifts if shifts is not None else 0.0, n)
 
-        total = timeline
-        if self.host_timeline is not None and np.any(self.module_scope):
-            total_module = _sum_timelines(timeline, self.host_timeline)
+        per_device = isinstance(timeline, TimelineBank)
+        if per_device:
+            if timeline.n_rows != n:
+                raise ValueError(
+                    f"TimelineBank has {timeline.n_rows} rows for "
+                    f"{n} devices")
+            if shifts is not None:
+                raise ValueError(
+                    "per-device shifts are redundant with a TimelineBank; "
+                    "bake them in with TimelineBank.shift(offsets)")
+            if self.seed_mode == "fleet":
+                raise ValueError(
+                    "seed_mode='fleet' draws one shared noise stream and "
+                    "cannot honour the per-device equivalence contract "
+                    "with per-device timelines; build the bank with "
+                    "seed_mode='per_device'")
+            chip_bank = timeline
         else:
-            total_module = timeline
+            if (shifts is not None and self.host_timeline is not None
+                    and np.any(self.module_scope)):
+                raise NotImplementedError(
+                    "per-device shifts with a module-scope host timeline")
+            chip_bank = TimelineBank.from_timelines([timeline])
+        s = _as_array(0.0 if (shifts is None or per_device) else shifts, n)
+
+        mod_local = None    # module_bank row order, when not device order
+        if self.host_timeline is not None and np.any(self.module_scope):
+            if per_device:
+                # sum the host trace into the module-scope rows only
+                mod_local = np.nonzero(self.module_scope)[0]
+                module_bank = TimelineBank.from_timelines(
+                    [_sum_timelines(timeline.row(i), self.host_timeline)
+                     for i in mod_local])
+            else:
+                module_bank = TimelineBank.from_timelines(
+                    [_sum_timelines(timeline, self.host_timeline)])
+        else:
+            module_bank = chip_bank
 
         T = self.update_period_s
         if t_end is None:
-            te = (timeline.t_end + s) + 2.0 * T
+            te = (chip_bank.t_end if per_device
+                  else (timeline.t_end + s)) + 2.0 * T
         else:
             te = _as_array(t_end, n)
 
@@ -255,9 +294,16 @@ class SensorBank:
                 continue
             chip_rows = rows[~self.module_scope[rows]]
             mod_rows = rows[self.module_scope[rows]]
-            for rr, tl in ((chip_rows, timeline), (mod_rows, total_module)):
+            for rr, bank_tl, remap in ((chip_rows, chip_bank, None),
+                                       (mod_rows, module_bank, mod_local)):
                 if len(rr) == 0:
                     continue
+                if bank_tl.n_rows == 1:
+                    tl = bank_tl
+                elif remap is not None:
+                    tl = bank_tl.rows(np.searchsorted(remap, rr))
+                else:
+                    tl = bank_tl.rows(rr)
                 t_eval = ticks[rr] - s[rr, None]
                 if kind == "boxcar":
                     raw[rr] = tl.mean_power(t_eval - self.window_s[rr, None],
@@ -266,7 +312,7 @@ class SensorBank:
                     raw[rr] = (tl.mean_power(t_eval - T[rr, None], t_eval)
                                * self._model_gain[rr, None])
                 else:
-                    raw[rr] = _log_filter_batch(tl, t_eval, self.tau_s[rr])
+                    raw[rr] = _log_filter_bank(tl, t_eval, self.tau_s[rr])
 
         vals = self._gain[:, None] * raw + self._offset[:, None]
         vals = vals + self._noise(m, first, count)
@@ -443,67 +489,108 @@ class SensorBank:
         return np.where(nonempty, total, 0.0)
 
 
-def _log_filter_batch(timeline: ActivityTimeline, ticks: np.ndarray,
-                      tau: np.ndarray) -> np.ndarray:
+def _log_filter_bank(bank: TimelineBank, ticks: np.ndarray,
+                     tau: np.ndarray) -> np.ndarray:
     """Batched first-order filter y' = (P - y)/tau for G devices.
 
     The scalar ``OnboardSensor._filtered_at`` walks the piecewise-constant
-    segments in a per-device Python loop; here one scan over the *shared*
-    segments advances a vector of G filter states per step, so the loop
-    length is the number of timeline edges — independent of fleet size.
-    Before the first timeline edge the state is exactly ``idle_w`` (the
-    scalar code's ``t_lo`` padding only ever covers idle), so readings are
-    bitwise identical to the scalar filter for any padding choice.
+    segments in a per-device Python loop; here one scan advances a vector
+    of G filter states per step.  With a shared timeline (single-row bank)
+    the loop length is the number of timeline edges — independent of fleet
+    size; with per-device rows the scan walks each row's own padded edge
+    sequence, masking the zero-width padding steps so the state carries
+    through unchanged.  Before the first real edge the state is exactly
+    ``idle_w`` (the ``t_lo`` padding only ever covers idle), so readings
+    are bitwise identical to the scalar filter for any padding choice.
     """
+    g, _ = ticks.shape
     tau = np.asarray(tau, dtype=np.float64)
-    t_lo = min(float(np.min(ticks)), timeline.t_start) - 5.0 * float(np.max(tau))
-    t_hi = max(float(np.max(ticks)), timeline.t_end) + 1e-9
-    edges = np.unique(np.concatenate([[t_lo], timeline.edges, [t_hi]]))
-    mids = 0.5 * (edges[:-1] + edges[1:])
-    seg_p = timeline.power_at(mids)
+    t_lo = (min(float(np.min(ticks)), float(np.min(bank.t_start)))
+            - 5.0 * float(np.max(tau)))
+    t_hi = max(float(np.max(ticks)), float(np.max(bank.t_end))) + 1e-9
+    r = bank.n_rows
+    ext_e = np.concatenate([np.full((r, 1), t_lo), bank.edges,
+                            np.full((r, 1), t_hi)], axis=1)
+    ext_p = np.concatenate([bank.idle_w[:, None], bank.powers,
+                            bank.idle_w[:, None]], axis=1)
+    n_seg = ext_p.shape[1]
+    dts = np.diff(ext_e, axis=1)
 
-    g = len(tau)
-    y = np.empty((g, len(edges)))
-    y[:, 0] = timeline.idle_w
-    for i in range(len(seg_p)):
-        dt = edges[i + 1] - edges[i]
-        y[:, i + 1] = seg_p[i] + (y[:, i] - seg_p[i]) * np.exp(-dt / tau)
+    y = np.empty((g, n_seg + 1))
+    y[:, 0] = np.broadcast_to(bank.idle_w, (g,))
+    for i in range(n_seg):
+        dt = dts[:, i]
+        sp = ext_p[:, i]
+        step = sp + (y[:, i] - sp) * np.exp(-dt / tau)
+        y[:, i + 1] = np.where(dt > 0, step, y[:, i])
 
-    idx = np.clip(np.searchsorted(edges, ticks, side="right") - 1,
-                  0, len(seg_p) - 1)
+    idx = np.clip(batch_searchsorted(ext_e, ticks, side="right") - 1,
+                  0, n_seg - 1)
     y_at = np.take_along_axis(y, idx, axis=1)
-    return seg_p[idx] + (y_at - seg_p[idx]) * np.exp(
-        -(ticks - edges[idx]) / tau[:, None])
+    sp_at = np.take_along_axis(np.broadcast_to(ext_p, (g, n_seg)), idx,
+                               axis=1)
+    e_at = np.take_along_axis(np.broadcast_to(ext_e, (g, n_seg + 1)), idx,
+                              axis=1)
+    return sp_at + (y_at - sp_at) * np.exp(-(ticks - e_at) / tau[:, None])
 
 
 # ---------------------------------------------------------------------------
 # Monte-Carlo fleet audit
 # ---------------------------------------------------------------------------
 
+def _err_stats(e: np.ndarray) -> Dict[str, float]:
+    q = np.percentile(np.abs(e), [50, 90, 99])
+    return {
+        "mean_err": float(np.mean(e)),
+        "mean_abs_err": float(np.mean(np.abs(e))),
+        "std_err": float(np.std(e)),
+        "p50_abs": float(q[0]),
+        "p90_abs": float(q[1]),
+        "p99_abs": float(q[2]),
+        "worst_abs": float(np.max(np.abs(e))),
+    }
+
+
 @dataclasses.dataclass
 class FleetAuditResult:
-    """Per-device error distribution of a fleet-wide energy audit."""
+    """Per-device error distribution of a fleet-wide energy audit.
+
+    ``true_j`` is one shared per-repetition truth (homogeneous workload)
+    or a [N] vector (heterogeneous fleet, one workload per device);
+    ``scenarios`` labels each device's workload class for the per-scenario
+    breakdown (the paper's Fig. 18 spread, emergent from workload mix).
+    """
 
     n_devices: int
     profile_names: List[str]
-    true_j: float                      # per-repetition analytic truth
+    true_j: Union[float, np.ndarray]   # per-repetition analytic truth
     naive_j: np.ndarray                # [N] single-shot estimates
     naive_err: np.ndarray              # [N] relative errors
     gp_j: Optional[np.ndarray] = None  # [N] good-practice estimates
     gp_err: Optional[np.ndarray] = None
+    scenarios: Optional[List[str]] = None   # [N] workload labels
 
     def stats(self, errs: Optional[np.ndarray] = None) -> Dict[str, float]:
         e = self.naive_err if errs is None else errs
-        q = np.percentile(np.abs(e), [50, 90, 99])
-        return {
-            "mean_err": float(np.mean(e)),
-            "mean_abs_err": float(np.mean(np.abs(e))),
-            "std_err": float(np.std(e)),
-            "p50_abs": float(q[0]),
-            "p90_abs": float(q[1]),
-            "p99_abs": float(q[2]),
-            "worst_abs": float(np.max(np.abs(e))),
-        }
+        return _err_stats(e)
+
+    def by_scenario(self, errs: Optional[np.ndarray] = None
+                    ) -> Dict[str, Dict[str, float]]:
+        """Error stats split by workload scenario label: how much of the
+        fleet-wide spread each workload shape contributes."""
+        if self.scenarios is None:
+            st = self.stats(errs)
+            st["n_devices"] = int(self.n_devices)
+            return {"all": st}
+        e = self.naive_err if errs is None else errs
+        labels = np.asarray(self.scenarios)
+        out: Dict[str, Dict[str, float]] = {}
+        for label in sorted(set(self.scenarios)):
+            sel = e[labels == label]
+            st = _err_stats(sel)
+            st["n_devices"] = int(sel.shape[0])
+            out[label] = st
+        return out
 
     def uncertainty(self) -> Dict[str, float]:
         """1/√N (independent) vs worst-case (correlated lot) fleet bounds."""
@@ -527,8 +614,14 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
                 good_practice: bool = False, n_trials: int = 2,
                 seed_mode: str = "per_device") -> FleetAuditResult:
     """Monte-Carlo audit: N devices, each with hidden gain/offset/phase,
-    measure one workload naively (and optionally with the §5 protocol) and
-    return the per-device error distribution.
+    measure naively (and optionally with the §5 protocol) and return the
+    per-device error distribution.
+
+    ``workload`` is one shared :class:`~repro.core.meter.Workload`, or a
+    sequence / :class:`~repro.core.meter.WorkloadSet` of N per-device
+    workloads — a mixed fleet where every device runs its own job (see
+    :func:`repro.core.load.mixed_fleet_workloads`) and the error spread
+    becomes a function of workload shape, not just seed noise.
 
     10,000 devices run in seconds: everything after bank construction is
     [N, M] array arithmetic.
@@ -536,6 +629,7 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
     from repro.core import load as loads
     from repro.core.calibrate import CalibrationRecord
     from repro.core.meter import (Workload, GoodPracticeConfig,
+                                  as_workload_set,
                                   measure_good_practice_batch,
                                   measure_naive_batch)
 
@@ -548,13 +642,21 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
         raise ValueError(f"{len(names)} profile names for {n_devices} devices")
     bank = SensorBank.from_catalog(names, base_seed=seed, seed_mode=seed_mode)
 
-    truth = workload.true_energy_j
+    ws = as_workload_set(workload, n_devices)
+    if ws is None:
+        truth = workload.true_energy_j
+        scenarios = None
+    else:
+        workload = ws
+        truth = ws.true_energies_j
+        scenarios = list(ws.scenarios)
     naive = measure_naive_batch(bank, workload,
                                 host_baseline_w=0.0 if np.any(
                                     bank.module_scope) else None)
     res = FleetAuditResult(
         n_devices=n_devices, profile_names=names, true_j=truth,
-        naive_j=naive, naive_err=(naive - truth) / truth)
+        naive_j=naive, naive_err=(naive - truth) / truth,
+        scenarios=scenarios)
 
     if good_practice:
         calibs = {}

@@ -8,11 +8,22 @@ either (a) a synthetic benchmark load (square wave / step / plateaus) or
 :class:`GroundTruthMeter` plays the PMD role: a quantised, noisy, finite-
 rate sampling of the timeline, *plus* the exact analytic integral used for
 scoring (the paper's "ground truth" column).
+
+Fleet studies need N *different* truths at once — every device in a data
+centre runs its own job — so :class:`TimelineBank` stacks N piecewise-
+constant traces as padded ``[N, S]`` edge/power arrays with the same
+analytics (``power_at`` / ``integral`` / ``mean_power``) vectorised over
+``[N, M]`` query matrices.  Row ``i`` of a bank is *bitwise* equivalent to
+the scalar :class:`ActivityTimeline` it was built from: padding repeats
+each row's final edge (zero-width idle segments that contribute nothing),
+and the row-wise searchsorted is an exact-comparison binary search, so no
+value is ever perturbed.  ``ActivityTimeline`` stays the N=1 reference
+view, round-tripping through ``TimelineBank.from_timelines`` / ``.row``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -146,6 +157,259 @@ def from_segments(segments: Iterable[Tuple[float, float]],
     return ActivityTimeline(np.asarray(edges), np.asarray(powers), idle_w)
 
 
+def batch_searchsorted(a: np.ndarray, v: np.ndarray,
+                       side: str = "right") -> np.ndarray:
+    """Row-wise ``np.searchsorted``: sorted rows ``a`` [R, S] against query
+    rows ``v`` [G, M], where R == G or R == 1 (row broadcast).
+
+    A fixed-iteration vectorised binary search with *exact* comparisons —
+    no offset/flattening tricks that would perturb float values — so the
+    result is bitwise what ``np.searchsorted(a[i], v[i], side)`` returns
+    per row.  Cost is ``ceil(log2 S)`` gather passes over [G, M].
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"bad side '{side}'")
+    a = np.asarray(a)
+    v = np.asarray(v)
+    r, s = a.shape
+    g = v.shape[0]
+    if r not in (1, g):
+        raise ValueError(f"cannot broadcast {r} rows against {g} queries")
+    if r == 1 and g > 1:
+        a = np.broadcast_to(a, (g, s))
+    lo = np.zeros(v.shape, dtype=np.int64)
+    hi = np.full(v.shape, s, dtype=np.int64)
+    for _ in range(int(np.ceil(np.log2(max(s, 2)))) + 1):
+        active = lo < hi
+        if not np.any(active):
+            break
+        mid = (lo + hi) >> 1
+        # mid < s wherever active; the clip only feeds settled lanes
+        amid = np.take_along_axis(a, np.minimum(mid, s - 1), axis=1)
+        go = (amid <= v) if side == "right" else (amid < v)
+        lo = np.where(active & go, mid + 1, lo)
+        hi = np.where(active & ~go, mid, hi)
+    return lo
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineBank:
+    """N piecewise-constant power traces as stacked, padded arrays.
+
+    ``edges`` is [N, S+1] (non-decreasing per row), ``powers`` [N, S],
+    ``idle_w`` and ``n_segs`` are [N].  Row ``i`` uses its first
+    ``n_segs[i]`` segments; padding slots repeat the row's final edge
+    (zero-width) and hold ``idle_w[i]`` — both are normalised on
+    construction, so hand-built arrays only need valid prefixes.
+
+    Analytics mirror :class:`ActivityTimeline` operation-for-operation and
+    are bitwise equal on each row.  Query shapes: a scalar broadcasts to
+    every row (returns [N]); a [N] vector is one instant per row (returns
+    [N]); a [G, M] matrix is per-row query grids (returns [G, M], where G
+    must equal N unless the bank has a single row, which broadcasts).
+    """
+
+    edges: np.ndarray
+    powers: np.ndarray
+    idle_w: np.ndarray
+    n_segs: np.ndarray
+
+    def __post_init__(self):
+        e = np.array(np.asarray(self.edges, dtype=np.float64), copy=True)
+        p = np.array(np.asarray(self.powers, dtype=np.float64), copy=True)
+        idle = np.asarray(self.idle_w, dtype=np.float64)
+        ns = np.asarray(self.n_segs, dtype=np.int64)
+        if e.ndim != 2 or p.ndim != 2 or e.shape != (p.shape[0],
+                                                     p.shape[1] + 1):
+            raise ValueError(f"bad bank shapes {e.shape} {p.shape}")
+        n, s = p.shape
+        if n == 0:
+            raise ValueError("empty TimelineBank (no rows)")
+        if idle.shape != (n,) or ns.shape != (n,):
+            raise ValueError(f"idle_w/n_segs must be [{n}], got "
+                             f"{idle.shape} {ns.shape}")
+        if np.any(ns < 1) or np.any(ns > s):
+            raise ValueError(f"n_segs must be within [1, {s}] "
+                             "(a row needs at least one segment)")
+        # normalise padding: repeat the final valid edge, idle power
+        cols = np.arange(s + 1)[None, :]
+        last = np.take_along_axis(e, ns[:, None], axis=1)
+        e = np.where(cols > ns[:, None], last, e)
+        p = np.where(cols[:, :s] >= ns[:, None], idle[:, None], p)
+        if np.any(np.diff(e, axis=1) < -1e-12):
+            raise ValueError("edges must be non-decreasing per row")
+        object.__setattr__(self, "edges", e)
+        object.__setattr__(self, "powers", p)
+        object.__setattr__(self, "idle_w", idle)
+        object.__setattr__(self, "n_segs", ns)
+
+    # -- construction / views ---------------------------------------------
+    @staticmethod
+    def from_timelines(timelines: Sequence[ActivityTimeline]) -> "TimelineBank":
+        """Stack scalar timelines into a bank (``row(i)`` round-trips)."""
+        tls = list(timelines)
+        if not tls:
+            raise ValueError("empty TimelineBank (no timelines)")
+        ns = np.array([len(t.powers) for t in tls], dtype=np.int64)
+        s = int(ns.max())
+        n = len(tls)
+        edges = np.empty((n, s + 1))
+        powers = np.empty((n, s))
+        idle = np.array([t.idle_w for t in tls])
+        for i, t in enumerate(tls):
+            k = len(t.powers)
+            edges[i, :k + 1] = t.edges
+            edges[i, k + 1:] = t.edges[-1]
+            powers[i, :k] = t.powers
+            powers[i, k:] = t.idle_w
+        return TimelineBank(edges, powers, idle, ns)
+
+    @staticmethod
+    def from_timeline(timeline: ActivityTimeline, n: int,
+                      shifts: Optional[np.ndarray] = None) -> "TimelineBank":
+        """Broadcast one timeline to ``n`` rows, optionally shifted per row
+        (row ``i`` is ``timeline.shift(shifts[i])``)."""
+        if n < 1:
+            raise ValueError("empty TimelineBank (n < 1)")
+        s = len(timeline.powers)
+        edges = np.tile(timeline.edges, (n, 1))
+        if shifts is not None:
+            edges = edges + np.asarray(shifts, dtype=np.float64)[:, None]
+        return TimelineBank(edges, np.tile(timeline.powers, (n, 1)),
+                            np.full(n, timeline.idle_w),
+                            np.full(n, max(s, 1), dtype=np.int64))
+
+    def row(self, i: int) -> ActivityTimeline:
+        """The scalar reference view of row ``i`` (exact round-trip)."""
+        k = int(self.n_segs[i])
+        return ActivityTimeline(self.edges[i, :k + 1].copy(),
+                                self.powers[i, :k].copy(),
+                                float(self.idle_w[i]))
+
+    def rows(self, idx: np.ndarray) -> "TimelineBank":
+        """A bank over a subset of rows (values sliced, not re-derived)."""
+        idx = np.asarray(idx)
+        return TimelineBank(self.edges[idx], self.powers[idx],
+                            self.idle_w[idx], self.n_segs[idx])
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def t_start(self) -> np.ndarray:
+        return self.edges[:, 0]
+
+    @property
+    def t_end(self) -> np.ndarray:
+        # padding repeats each row's final edge, so the last column is it
+        return self.edges[:, -1]
+
+    @property
+    def duration_s(self) -> np.ndarray:
+        return self.t_end - self.t_start
+
+    # -- composition ------------------------------------------------------
+    def shift(self, dt) -> "TimelineBank":
+        """Shift every row by ``dt`` (scalar) or row ``i`` by ``dt[i]``."""
+        dt = np.asarray(dt, dtype=np.float64)
+        if dt.ndim == 1:
+            dt = dt[:, None]
+        return TimelineBank(self.edges + dt, self.powers, self.idle_w,
+                            self.n_segs)
+
+    # -- queries ----------------------------------------------------------
+    def _prep(self, t) -> Tuple[np.ndarray, tuple]:
+        """Normalise a query to [G, M]; returns (queries, output shape)."""
+        t = np.asarray(t, dtype=np.float64)
+        if t.ndim == 0:
+            return np.full((self.n_rows, 1), float(t)), (self.n_rows,)
+        if t.ndim == 1:
+            if self.n_rows == 1:
+                return t[None, :], t.shape      # grid on the single row
+            if t.shape[0] == self.n_rows:
+                return t[:, None], (self.n_rows,)
+            raise ValueError(f"1-D query of length {t.shape[0]} for "
+                             f"{self.n_rows} rows (pass [N] or [N, M])")
+        if t.ndim == 2:
+            if t.shape[0] == 1 and self.n_rows > 1:   # shared query grid
+                t = np.broadcast_to(t, (self.n_rows, t.shape[1]))
+            if t.shape[0] == self.n_rows or self.n_rows == 1:
+                return t, t.shape
+        raise ValueError(f"bad query shape {t.shape} for {self.n_rows} rows")
+
+    def _row_arrays(self, g: int):
+        """edges/powers/idle/n_segs broadcast to ``g`` query rows."""
+        e, p = self.edges, self.powers
+        idle, ns = self.idle_w, self.n_segs
+        if self.n_rows == 1 and g > 1:
+            e = np.broadcast_to(e, (g, e.shape[1]))
+            p = np.broadcast_to(p, (g, p.shape[1]))
+            idle = np.broadcast_to(idle, (g,))
+            ns = np.broadcast_to(ns, (g,))
+        elif self.n_rows != g:
+            raise ValueError(f"{g} query rows for {self.n_rows} bank rows")
+        return e, p, idle, ns
+
+    def power_at(self, t) -> np.ndarray:
+        """Vectorised P_i(t): same semantics as the scalar ``power_at``
+        applied to each row."""
+        tq, out_shape = self._prep(t)
+        e, p, idle, ns = self._row_arrays(tq.shape[0])
+        idx = batch_searchsorted(e, tq, "right") - 1
+        vals = np.take_along_axis(p, np.clip(idx, 0, p.shape[1] - 1), axis=1)
+        inside = ((idx >= 0) & (idx < ns[:, None])
+                  & (tq < e[:, -1][:, None]))
+        out = np.where(inside, vals, idle[:, None])
+        return out.reshape(out_shape)
+
+    def _cum_energy(self) -> np.ndarray:
+        seg = self.powers * np.diff(self.edges, axis=1)
+        return np.concatenate(
+            [np.zeros((self.n_rows, 1)), np.cumsum(seg, axis=1)], axis=1)
+
+    def integral(self, t0, t1) -> np.ndarray:
+        """Exact per-row ∫P_i dt over [t0_i, t1_i], idle outside coverage."""
+        tq0, sh0 = self._prep(t0)
+        tq1, sh1 = self._prep(t1)
+        tq0, tq1 = np.broadcast_arrays(tq0, tq1)
+        out_shape = sh1 if len(sh1) >= len(sh0) else sh0
+        g = tq0.shape[0]
+        e, p, idle, ns = self._row_arrays(g)
+        cum = self._cum_energy()
+        if cum.shape[0] != g:
+            cum = np.broadcast_to(cum, (g, cum.shape[1]))
+        first = e[:, 0][:, None]
+        last = e[:, -1][:, None]
+        hi_idx = np.maximum(ns - 1, 0)[:, None]
+
+        def eval_I(t):
+            tc = np.clip(t, first, last)
+            idx = np.clip(batch_searchsorted(e, tc, "right") - 1, 0, hi_idx)
+            inner = (np.take_along_axis(cum, idx, axis=1)
+                     + np.take_along_axis(p, idx, axis=1)
+                     * (tc - np.take_along_axis(e, idx, axis=1)))
+            before = np.minimum(t - first, 0.0) * idle[:, None]
+            after = np.maximum(t - last, 0.0) * idle[:, None]
+            return inner + before + after
+
+        return (eval_I(tq1) - eval_I(tq0)).reshape(out_shape)
+
+    def mean_power(self, t0, t1) -> np.ndarray:
+        dt = np.maximum(np.asarray(t1, dtype=np.float64)
+                        - np.asarray(t0, dtype=np.float64), 1e-12)
+        return self.integral(t0, t1) / dt
+
+    def energy(self, t0=None, t1=None) -> np.ndarray:
+        """Analytic per-row ground-truth energy [N] in joules."""
+        if t0 is None:
+            t0 = self.t_start
+        if t1 is None:
+            t1 = self.t_end
+        return self.integral(t0, t1)
+
+
 class MeterConfig(Config):
     pass
 
@@ -189,3 +453,38 @@ class GroundTruthMeter:
         reports); close to but not exactly the analytic truth."""
         ts, watts = self.trace(timeline, t0, t1)
         return float(np.trapezoid(watts, ts))
+
+    def energy_batch(self, bank: TimelineBank,
+                     t0: Optional[np.ndarray] = None,
+                     t1: Optional[np.ndarray] = None) -> np.ndarray:
+        """Per-row PMD energies [N] for a whole :class:`TimelineBank`.
+
+        Row ``i`` draws its ADC noise from ``default_rng(seed + i)``, so it
+        equals ``GroundTruthMeter(..., seed=seed + i).energy(bank.row(i))``
+        bitwise — one meter per device, not one shared noise stream.  The
+        trace sampling itself (the expensive part) is one batched
+        ``power_at`` over a padded [N, M] grid.
+        """
+        n = bank.n_rows
+        t0 = bank.t_start if t0 is None else np.broadcast_to(
+            np.asarray(t0, dtype=np.float64), (n,))
+        t1 = bank.t_end if t1 is None else np.broadcast_to(
+            np.asarray(t1, dtype=np.float64), (n,))
+        counts = np.maximum(
+            2, np.round((t1 - t0) * self.sample_hz).astype(np.int64))
+        m = int(counts.max())
+        # row i's first counts[i] instants match the scalar trace() grid
+        ts = t0[:, None] + np.arange(m)[None, :] / self.sample_hz
+        p = bank.power_at(ts)
+        volts = (np.round(self.rail_volts / self.volt_per_level)
+                 * self.volt_per_level)
+        amps = p / self.rail_volts
+        amps = np.round(amps / self.amp_per_level) * self.amp_per_level
+        watts = volts * amps
+        out = np.empty(n)
+        for i in range(n):
+            k = int(counts[i])
+            rng = np.random.default_rng(self.seed + i)
+            w = watts[i, :k] + rng.normal(0.0, self.noise_w, size=k)
+            out[i] = np.trapezoid(w, ts[i, :k])
+        return out

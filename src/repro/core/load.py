@@ -77,3 +77,158 @@ def multi_phase_workload(phases: list[tuple[float, float]],
     """A workload with several internal phases (e.g. compute-bound matmul
     then memory-bound softmax) — (duration_s, watts) list."""
     return from_segments(phases, idle_w=idle_w)
+
+
+# ---------------------------------------------------------------------------
+# Scenario generators: per-device workload fragments for mixed fleets
+# ---------------------------------------------------------------------------
+# The paper's data-centre argument (§6) is about fleets running *different
+# concurrent workloads*, each interacting differently with the part-time
+# sample window.  Each generator below draws one device's repetition
+# fragment from a seeded rng, so a 10k-device fleet gets 10k distinct
+# timelines — the per-scenario error spread is then emergent from workload
+# shape, not seed noise.
+
+def training_step_timeline(seed: int = 0, idle_w: float = 60.0,
+                           peak_w: float = 250.0) -> ActivityTimeline:
+    """One training step: a compute-bound phase (matmul-heavy, near peak)
+    followed by a communication/collective phase at lower draw, with
+    per-device jitter in both duration and amplitude (stragglers, binning).
+    """
+    rng = np.random.default_rng(seed)
+    compute = float(rng.uniform(0.100, 0.160))
+    collective = float(rng.uniform(0.040, 0.080))
+    p_hi = float(peak_w * rng.uniform(0.82, 0.95))
+    p_lo = float(peak_w * rng.uniform(0.55, 0.70))
+    return multi_phase_workload([(compute, p_hi), (collective, p_lo)],
+                                idle_w=idle_w)
+
+
+def inference_serving_timeline(seed: int = 0, window_s: float = 0.350,
+                               rate_hz: float = 14.0,
+                               idle_w: float = 60.0,
+                               peak_w: float = 250.0) -> ActivityTimeline:
+    """A serving window with bursty Poisson request arrivals: K ~
+    Poisson(rate · window) requests land at uniform times, each a short
+    high-power burst; overlapping bursts merge.  Exactly the part-time
+    sensor's worst case — activity the 25 ms window may never see."""
+    rng = np.random.default_rng(seed)
+    k = min(int(rng.poisson(rate_hz * window_s)), 12)
+    p_hi = float(peak_w * rng.uniform(0.75, 0.92))
+    if k == 0:
+        return from_segments([(window_s, idle_w)], idle_w=idle_w)
+    arrivals = np.sort(rng.uniform(0.0, window_s, size=k))
+    lengths = np.maximum(rng.exponential(0.012, size=k), 0.002)
+    segs: list[tuple[float, float]] = []
+    cursor = 0.0
+    busy_until = 0.0
+    for a, d in zip(arrivals, lengths):
+        end = min(float(a + d), window_s)
+        if a > busy_until:                       # idle gap, then the burst
+            segs.append((float(a) - cursor, idle_w))
+            cursor = float(a)
+        end = max(end, busy_until)
+        if end > cursor:
+            segs.append((end - cursor, p_hi))
+            cursor = end
+        busy_until = max(busy_until, end)
+    if cursor < window_s:
+        segs.append((window_s - cursor, idle_w))
+    return from_segments(segs, idle_w=idle_w)
+
+
+def idle_maintenance_timeline(seed: int = 0, window_s: float = 0.450,
+                              idle_w: float = 60.0,
+                              peak_w: float = 250.0) -> ActivityTimeline:
+    """A drained / maintenance device: near-idle with one short health
+    check blip at a random position (the fleet's 'dark' energy that naive
+    accounting silently extrapolates from busy neighbours)."""
+    rng = np.random.default_rng(seed)
+    blip = float(rng.uniform(0.015, 0.035))
+    at = float(rng.uniform(0.0, window_s - blip))
+    p_blip = float(idle_w + (peak_w - idle_w) * rng.uniform(0.2, 0.4))
+    p_floor = float(idle_w * rng.uniform(1.0, 1.15))
+    return from_segments([(at, p_floor), (blip, p_blip),
+                          (window_s - at - blip, p_floor)], idle_w=idle_w)
+
+
+def diurnal_cycle_timeline(seed: int = 0, window_s: float = 0.300,
+                           idle_w: float = 60.0, peak_w: float = 250.0,
+                           n_steps: int = 6) -> ActivityTimeline:
+    """A slice of a diurnal utilisation cycle: the device's load follows a
+    sinusoidal day curve sampled at a random phase (hour of day), stepped
+    into plateaus — the slow-varying counterpart to the bursty scenarios.
+    """
+    rng = np.random.default_rng(seed)
+    phase = float(rng.uniform(0.0, 2.0 * np.pi))
+    depth = float(rng.uniform(0.5, 0.9))
+    hours = phase + np.linspace(0.0, np.pi / 3.0, n_steps)   # ~4 h slice
+    util = 0.5 * (1.0 + np.sin(hours)) * depth
+    dwell = window_s / n_steps
+    segs = [(dwell, amplitude_for_fraction(float(u), idle_w, peak_w))
+            for u in util]
+    return from_segments(segs, idle_w=idle_w)
+
+
+SCENARIOS = {
+    "training": training_step_timeline,
+    "inference": inference_serving_timeline,
+    "idle": idle_maintenance_timeline,
+    "diurnal": diurnal_cycle_timeline,
+}
+
+DEFAULT_MIX = {"training": 0.40, "inference": 0.30,
+               "idle": 0.15, "diurnal": 0.15}
+
+
+def scenario_timeline(kind: str, seed: int = 0, idle_w: float = 60.0,
+                      peak_w: float = 250.0) -> ActivityTimeline:
+    """One device's repetition fragment for a named scenario."""
+    try:
+        builder = SCENARIOS[kind]
+    except KeyError:
+        raise KeyError(f"unknown scenario '{kind}'; "
+                       f"available: {sorted(SCENARIOS)}") from None
+    return builder(seed=seed, idle_w=idle_w, peak_w=peak_w)
+
+
+def mixed_fleet_workloads(n: int, mix: dict[str, float] | None = None,
+                          seed: int = 0, idle_w: float = 60.0,
+                          peak_w: float = 250.0) -> list:
+    """N per-device workloads drawn from a scenario mix — every device its
+    own timeline, labelled for per-scenario error breakdowns.
+
+    ``mix`` maps scenario name → fraction (normalised); counts are
+    apportioned deterministically (largest remainder) and the assignment
+    is shuffled so profiles and scenarios decorrelate.  Returns a list of
+    :class:`repro.core.meter.Workload` ready for ``fleet_audit`` /
+    ``measure_*_batch``.
+    """
+    from repro.core.meter import Workload
+
+    if n < 1:
+        raise ValueError("need at least one device")
+    mix = dict(DEFAULT_MIX if mix is None else mix)
+    for kind in mix:
+        if kind not in SCENARIOS:
+            raise KeyError(f"unknown scenario '{kind}'; "
+                           f"available: {sorted(SCENARIOS)}")
+    total = sum(mix.values())
+    if total <= 0:
+        raise ValueError("scenario mix fractions must sum to > 0")
+    kinds = sorted(mix)
+    exact = np.array([mix[k] / total * n for k in kinds])
+    counts = np.floor(exact).astype(int)
+    rema = exact - counts
+    for i in np.argsort(-rema)[: n - int(counts.sum())]:
+        counts[i] += 1
+    labels = [k for k, c in zip(kinds, counts) for _ in range(int(c))]
+    rng = np.random.default_rng(seed)
+    labels = [labels[i] for i in rng.permutation(n)]
+    return [
+        Workload(f"{kind}[{i}]",
+                 scenario_timeline(kind, seed=seed + 1 + i,
+                                   idle_w=idle_w, peak_w=peak_w),
+                 scenario=kind)
+        for i, kind in enumerate(labels)
+    ]

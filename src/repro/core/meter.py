@@ -16,12 +16,12 @@ Good practice (§5.1, steps 1–3):
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional, Union
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.calibrate import CalibrationRecord
-from repro.core.ground_truth import ActivityTimeline
+from repro.core.ground_truth import ActivityTimeline, TimelineBank
 from repro.core.sensor import OnboardSensor
 
 if TYPE_CHECKING:  # avoid a circular import; banks are duck-typed below
@@ -30,10 +30,22 @@ if TYPE_CHECKING:  # avoid a circular import; banks are duck-typed below
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """One repetition of a measurable workload."""
+    """One repetition of a measurable workload.
+
+    ``scenario`` is an optional grouping label (e.g. ``"training"`` /
+    ``"inference"``) used by fleet audits for per-scenario error
+    breakdowns; it defaults to the workload name.
+    """
 
     name: str
     timeline: ActivityTimeline        # fragment starting at t=0
+    scenario: Optional[str] = None
+
+    def __post_init__(self):
+        if self.duration_s <= 0.0:
+            raise ValueError(
+                f"workload '{self.name}' has zero/negative duration "
+                f"({self.duration_s} s); a repetition must cover time")
 
     @property
     def duration_s(self) -> float:
@@ -43,6 +55,46 @@ class Workload:
     def true_energy_j(self) -> float:
         """Analytic per-repetition ground truth."""
         return self.timeline.energy()
+
+    @property
+    def scenario_label(self) -> str:
+        return self.scenario if self.scenario is not None else self.name
+
+
+class WorkloadSet:
+    """Per-device workloads for a heterogeneous fleet.
+
+    Device ``i`` of a :class:`~repro.core.fleet_engine.SensorBank` runs
+    ``workloads[i]`` — its own timeline, duration and analytic truth.  The
+    batched measurement protocols accept this in place of a single shared
+    :class:`Workload`; timelines are stacked once into a
+    :class:`TimelineBank` and reused across trials.
+    """
+
+    def __init__(self, workloads: Sequence[Workload]):
+        self.workloads: List[Workload] = list(workloads)
+        if not self.workloads:
+            raise ValueError("empty WorkloadSet")
+        self.durations_s = np.array([w.duration_s for w in self.workloads])
+        self.true_energies_j = np.array(
+            [w.true_energy_j for w in self.workloads])
+        self.scenarios: List[str] = [w.scenario_label
+                                     for w in self.workloads]
+        self._bank: Optional[TimelineBank] = None
+
+    def __len__(self) -> int:
+        return len(self.workloads)
+
+    def __getitem__(self, i: int) -> Workload:
+        return self.workloads[i]
+
+    @property
+    def timeline_bank(self) -> TimelineBank:
+        """The stacked [N, S] timeline substrate (built once, cached)."""
+        if self._bank is None:
+            self._bank = TimelineBank.from_timelines(
+                [w.timeline for w in self.workloads])
+        return self._bank
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,8 +171,7 @@ def measure_good_practice(sensor: OnboardSensor, workload: Workload,
     baseline = _check_scope(sensor, host_baseline_w)
     rng = np.random.default_rng(seed)
     dur = workload.duration_s
-    reps = max(cfg.min_reps, int(np.ceil(cfg.min_total_s / max(dur, 1e-6))))
-    reps = min(reps, cfg.max_reps)
+    reps = int(_reps_for(dur, cfg))
 
     part_time = (calib.sampled_fraction < 0.999)
     W = calib.window_s if calib.window_s else calib.update_period_s
@@ -129,18 +180,7 @@ def measure_good_practice(sensor: OnboardSensor, workload: Workload,
     trial_values: List[float] = []
     for trial in range(cfg.n_trials):
         start = 0.3 + float(rng.uniform(0.0, 1.0))      # randomised delay
-        # build the repetition train with evenly spaced W-length delays
-        if shifts > 0:
-            group = max(1, reps // shifts)
-            parts = []
-            done = 0
-            while done < reps:
-                n = min(group, reps - done)
-                parts.append(workload.timeline.repeat(n))
-                done += n
-            train = ActivityTimeline.concat(parts, gap_s=W)
-        else:
-            train = workload.timeline.repeat(reps)
+        train = _build_train(workload.timeline, reps, shifts, W)
         train = train.shift(start - train.t_start)
         sensor.attach(train, t_end=train.t_end + 2.0)
         ts, vals = sensor.poll(0.0, train.t_end + 1.0,
@@ -169,6 +209,84 @@ def measure_good_practice(sensor: OnboardSensor, workload: Workload,
     arr = np.asarray(trial_values)
     return EnergyEstimate(float(np.mean(arr)), float(np.std(arr)),
                           cfg.n_trials, reps, trial_values)
+
+
+def _build_train(timeline: ActivityTimeline, reps: int, shifts: int,
+                 W: float) -> ActivityTimeline:
+    """The §5.1 repetition train: ``reps`` back-to-back repetitions, with
+    an idle gap of one window-length after every complete group when
+    phase-shift delays are in play (part-time sensors)."""
+    if shifts > 0:
+        group = max(1, reps // shifts)
+        parts = []
+        done = 0
+        while done < reps:
+            k = min(group, reps - done)
+            parts.append(timeline.repeat(k))
+            done += k
+        return ActivityTimeline.concat(parts, gap_s=W)
+    return timeline.repeat(reps)
+
+
+def _train_arrays(timeline: ActivityTimeline, reps: int, shifts: int,
+                  W: float):
+    """(edges, powers) of the §5.1 repetition train, built directly as
+    flat arrays — the array-programming form of :func:`_build_train`
+    (which stacks ``ActivityTimeline.concat`` calls).  Values agree to
+    float rounding (~1e-13 of the train length): the only difference is
+    the repetition offsets coming from ``r·dur`` instead of a sequentially
+    accumulated cursor.
+    """
+    rel = timeline.edges - timeline.t_start          # [S+1], starts at 0
+    p = timeline.powers
+    s = len(p)
+    dur = float(rel[-1])
+    r = np.arange(reps)
+    if shifts > 0:
+        group = max(1, reps // shifts)
+        gaps = np.minimum(r // group, (reps - 1) // group)
+    else:
+        gaps = np.zeros(reps, dtype=np.int64)
+    off = r * dur + gaps * W                          # start of rep r
+    starts = (rel[None, :s] + off[:, None]).ravel()
+    powers = np.tile(p, reps)
+    gap_rows = np.nonzero(np.diff(gaps) > 0)[0] + 1   # reps preceded by a gap
+    if len(gap_rows):
+        pos = gap_rows * s
+        starts = np.insert(starts, pos, off[gap_rows] - W)
+        powers = np.insert(powers, pos, timeline.idle_w)
+    edges = np.concatenate([starts, [off[-1] + dur]]) + timeline.t_start
+    return edges, powers
+
+
+def _train_bank(ws: WorkloadSet, rows: np.ndarray, reps: np.ndarray,
+                shifts: int, W: float) -> TimelineBank:
+    """Stack per-device repetition trains into a :class:`TimelineBank`
+    without materialising intermediate ActivityTimeline objects."""
+    built = [_train_arrays(ws[i].timeline, int(reps[g]), shifts, W)
+             for g, i in enumerate(rows)]
+    n_segs = np.array([len(p) for _, p in built], dtype=np.int64)
+    smax = int(n_segs.max())
+    edges = np.empty((len(built), smax + 1))
+    powers = np.empty((len(built), smax))
+    idle = np.array([ws[i].timeline.idle_w for i in rows])
+    for g, (e, p) in enumerate(built):
+        k = len(p)
+        edges[g, :k + 1] = e
+        edges[g, k + 1:] = e[-1]
+        powers[g, :k] = p
+        powers[g, k:] = idle[g]
+    return TimelineBank(edges, powers, idle, n_segs)
+
+
+def _reps_for(durations, cfg: GoodPracticeConfig) -> np.ndarray:
+    """Per-device repetition counts (≥ min_reps, ≥ min_total_s of runtime,
+    capped at max_reps) — the scalar formula, vectorised."""
+    dur = np.asarray(durations, dtype=np.float64)
+    reps = np.maximum(cfg.min_reps,
+                      np.ceil(cfg.min_total_s
+                              / np.maximum(dur, 1e-6)).astype(np.int64))
+    return np.minimum(reps, cfg.max_reps)
 
 
 def _n_gaps_before(rep_idx: int, shifts: int, reps: int) -> int:
@@ -231,23 +349,72 @@ def _check_scope_bank(bank: "SensorBank",
     return host_baseline_w or 0.0
 
 
-def measure_naive_batch(bank: "SensorBank", workload: Workload,
+def _baseline_rows(bank: "SensorBank", baseline: float) -> np.ndarray:
+    """Per-device baseline [N]: the host baseline is debited from
+    module-scope rows only — chip-scope sensors never see host power, so
+    a mixed fleet must not subtract it from their readings."""
+    return np.where(bank.module_scope, baseline, 0.0)
+
+
+def as_workload_set(workload: Union[Workload, Sequence[Workload],
+                                    WorkloadSet],
+                    n_devices: int) -> Optional[WorkloadSet]:
+    """Normalise a protocol's workload argument: ``None`` for one shared
+    :class:`Workload`, else a :class:`WorkloadSet` checked against the
+    fleet size."""
+    if isinstance(workload, Workload):
+        return None
+    ws = workload if isinstance(workload, WorkloadSet) \
+        else WorkloadSet(workload)
+    if len(ws) != n_devices:
+        raise ValueError(f"{len(ws)} workloads for {n_devices} devices")
+    return ws
+
+
+def measure_naive_batch(bank: "SensorBank",
+                        workload: Union[Workload, Sequence[Workload],
+                                        WorkloadSet],
                         start_offset_s: float = 0.3,
                         host_baseline_w: Optional[float] = None,
                         poll_period_s: float = 0.001) -> np.ndarray:
-    """Batched :func:`measure_naive`: one shared run, every device's sensor
-    integrated at once; returns per-device joules [N]."""
+    """Batched :func:`measure_naive`: every device's sensor integrated at
+    once; returns per-device joules [N].
+
+    ``workload`` is one shared :class:`Workload` (every device runs the
+    same job, the degenerate case) or a :class:`WorkloadSet` /sequence of
+    per-device workloads — a heterogeneous fleet measured in one pass.
+    Device ``i`` reproduces ``measure_naive(bank.scalar_reference(i),
+    workload_i)`` on its own timeline (with ``host_baseline_w`` passed
+    through for module-scope devices only).
+    """
     baseline = _check_scope_bank(bank, host_baseline_w)
-    tl = workload.timeline.shift(start_offset_s - workload.timeline.t_start)
-    bank.attach(tl, t_end=tl.t_end + 1.0)
+    base = _baseline_rows(bank, baseline)
+    if baseline and np.any(base):
+        def transform(v, base=base):
+            return v - (base if v.ndim == 1 else base[:, None])
+    else:
+        transform = None
+    ws = as_workload_set(workload, bank.n_devices)
+    if ws is None:
+        tl = workload.timeline.shift(start_offset_s
+                                     - workload.timeline.t_start)
+        bank.attach(tl, t_end=tl.t_end + 1.0)
+        return bank.integrate_polled(
+            0.0, tl.t_end + 0.5, poll_period_s,
+            start_offset_s, start_offset_s + workload.duration_s,
+            transform=transform)
+    tlb = ws.timeline_bank
+    tlb = tlb.shift(start_offset_s - tlb.t_start)
+    bank.attach(tlb, t_end=tlb.t_end + 1.0)
     return bank.integrate_polled(
-        0.0, tl.t_end + 0.5, poll_period_s,
-        start_offset_s, start_offset_s + workload.duration_s,
-        transform=(lambda v: v - baseline) if baseline else None)
+        0.0, tlb.t_end + 0.5, poll_period_s,
+        start_offset_s, start_offset_s + ws.durations_s,
+        transform=transform)
 
 
 def measure_good_practice_batch(
-        bank: "SensorBank", workload: Workload,
+        bank: "SensorBank",
+        workload: Union[Workload, Sequence[Workload], WorkloadSet],
         calib: Union[CalibrationRecord, Dict[str, CalibrationRecord]],
         cfg: GoodPracticeConfig = GoodPracticeConfig(),
         host_baseline_w: Optional[float] = None,
@@ -262,9 +429,15 @@ def measure_good_practice_batch(
     ``measure_good_practice(bank.scalar_reference(i), ..., seed=seeds[i])``
     within one reporting quantum.  ``calib`` is one record (homogeneous
     fleet) or a dict keyed by profile name.
+
+    With a :class:`WorkloadSet` every device runs *its own* workload: the
+    per-device repetition trains are stacked into a
+    :class:`TimelineBank` per profile group, and repetition counts, rise
+    discards and gap corrections all become per-device vectors.
     """
     n = bank.n_devices
     baseline = _check_scope_bank(bank, host_baseline_w)
+    ws = as_workload_set(workload, n)
     if seeds is None:
         seeds = np.arange(n)
     seeds = np.asarray(seeds, dtype=np.int64)
@@ -274,12 +447,9 @@ def measure_good_practice_batch(
     else:
         calibs = calib
 
-    dur = workload.duration_s
-    reps = max(cfg.min_reps, int(np.ceil(cfg.min_total_s / max(dur, 1e-6))))
-    reps = min(reps, cfg.max_reps)
-
     joules = np.zeros(n)
     stds = np.zeros(n)
+    reps_out = np.zeros(n, dtype=np.int64)
     trials = np.zeros((n, cfg.n_trials))
     names = np.array([p.name for p in bank.profiles])
     for name in sorted(set(names)):
@@ -289,19 +459,8 @@ def measure_good_practice_batch(
         part_time = (cal.sampled_fraction < 0.999)
         W = cal.window_s if cal.window_s else cal.update_period_s
         shifts = cfg.n_phase_shifts if part_time else 0
-
-        # repetition train, identical to the scalar path, built once
-        if shifts > 0:
-            group = max(1, reps // shifts)
-            parts = []
-            done = 0
-            while done < reps:
-                k = min(group, reps - done)
-                parts.append(workload.timeline.repeat(k))
-                done += k
-            train = ActivityTimeline.concat(parts, gap_s=W)
-        else:
-            train = workload.timeline.repeat(reps)
+        rise = cal.rise_time_s if (cfg.discard_rise and
+                                   np.isfinite(cal.rise_time_s)) else 0.0
 
         # per-device randomised trial start offsets (same default_rng(seed)
         # stream as the scalar protocol, drawn n_trials at a time)
@@ -310,39 +469,74 @@ def measure_good_practice_batch(
             rng = np.random.default_rng(int(seeds[i]))
             starts[g] = 0.3 + rng.uniform(0.0, 1.0, size=cfg.n_trials)
 
-        rise = cal.rise_time_s if (cfg.discard_rise and
-                                   np.isfinite(cal.rise_time_s)) else 0.0
-        n_skip = int(np.ceil(rise / max(dur, 1e-6)))
-        n_skip = min(n_skip, reps - 1)
-        kept = reps - n_skip
-        off_begin = _train_offset(n_skip, dur, shifts, reps, W)
-        off_end = _train_offset(reps, dur, shifts, reps, W)
-        gaps_inside = _gaps_between(n_skip, reps, shifts, reps)
+        base = _baseline_rows(sub, baseline)
 
-        def transform(v):
-            v = v - baseline
+        def transform(v, cal=cal, base=base):
+            v = v - (base if v.ndim == 1 else base[:, None])
             if cfg.apply_calibration and cal.gain:
                 v = (v - (cal.offset_w or 0.0)) / cal.gain
             return v
 
-        length = train.t_end - train.t_start
-        for t in range(cfg.n_trials):
-            start = starts[:, t]
-            shift = start - train.t_start
-            sub.attach(train, t_end=train.t_end + shift + 2.0, shifts=shift)
-            e = sub.integrate_polled(
-                0.0, start + length + 1.0, cfg.poll_period_s,
-                start + off_begin, start + off_end,
-                transform=transform,
-                grid_offset=-W if cfg.time_shift else 0.0)
-            e -= gaps_inside * W * workload.timeline.idle_w
-            trials[rows, t] = e / kept
+        if ws is None:
+            dur = workload.duration_s
+            reps = int(_reps_for(dur, cfg))
+            # repetition train, identical to the scalar path, built once
+            train = _build_train(workload.timeline, reps, shifts, W)
+            n_skip = min(int(np.ceil(rise / max(dur, 1e-6))), reps - 1)
+            kept = reps - n_skip
+            off_begin = _train_offset(n_skip, dur, shifts, reps, W)
+            off_end = _train_offset(reps, dur, shifts, reps, W)
+            gaps_inside = _gaps_between(n_skip, reps, shifts, reps)
+            idle = workload.timeline.idle_w
+            reps_out[rows] = reps
+            length = train.t_end - train.t_start
+            for t in range(cfg.n_trials):
+                start = starts[:, t]
+                shift = start - train.t_start
+                sub.attach(train, t_end=train.t_end + shift + 2.0,
+                           shifts=shift)
+                e = sub.integrate_polled(
+                    0.0, start + length + 1.0, cfg.poll_period_s,
+                    start + off_begin, start + off_end,
+                    transform=transform,
+                    grid_offset=-W if cfg.time_shift else 0.0)
+                e -= gaps_inside * W * idle
+                trials[rows, t] = e / kept
+        else:
+            dur = ws.durations_s[rows]
+            reps = _reps_for(dur, cfg)
+            n_skip = np.minimum(
+                np.ceil(rise / np.maximum(dur, 1e-6)).astype(np.int64),
+                reps - 1)
+            kept = reps - n_skip
+            off_begin = np.empty(len(rows))
+            off_end = np.empty(len(rows))
+            gaps_inside = np.empty(len(rows))
+            for g, i in enumerate(rows):
+                r_g, s_g, d_g = int(reps[g]), int(n_skip[g]), float(dur[g])
+                off_begin[g] = _train_offset(s_g, d_g, shifts, r_g, W)
+                off_end[g] = _train_offset(r_g, d_g, shifts, r_g, W)
+                gaps_inside[g] = _gaps_between(s_g, r_g, shifts, r_g)
+            tb0 = _train_bank(ws, rows, reps, shifts, W)
+            idle = tb0.idle_w
+            reps_out[rows] = reps
+            for t in range(cfg.n_trials):
+                start = starts[:, t]
+                tb = tb0.shift(start - tb0.t_start)
+                sub.attach(tb, t_end=tb.t_end + 2.0)
+                e = sub.integrate_polled(
+                    0.0, tb.t_end + 1.0, cfg.poll_period_s,
+                    start + off_begin, start + off_end,
+                    transform=transform,
+                    grid_offset=-W if cfg.time_shift else 0.0)
+                e -= gaps_inside * W * idle
+                trials[rows, t] = e / kept
 
         joules[rows] = np.mean(trials[rows], axis=1)
         stds[rows] = np.std(trials[rows], axis=1)
 
     return BatchedEnergyEstimate(joules, stds, cfg.n_trials,
-                                 np.full(n, reps, dtype=np.int64), trials)
+                                 reps_out, trials)
 
 
 def compare_protocols(sensor: OnboardSensor, workload: Workload,

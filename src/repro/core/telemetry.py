@@ -51,7 +51,8 @@ class FleetLedger:
         self.price = price_usd_per_kwh
         self.ledgers: Dict[str, EnergyLedger] = {}
         self.calibrations: Dict[str, CalibrationRecord] = {}
-        self._batches: List[tuple] = []   # (energies_j, sigmas_j, duration_s)
+        # (energies_j, sigmas_j, duration_s, labels)
+        self._batches: List[tuple] = []
 
     def register(self, ledger: EnergyLedger,
                  calib: Optional[CalibrationRecord] = None) -> None:
@@ -62,11 +63,14 @@ class FleetLedger:
     def register_batch(self, energies_j: np.ndarray,
                        sigmas_j: Optional[np.ndarray] = None,
                        duration_s: float = 0.0,
-                       calibrated: bool = False) -> None:
+                       calibrated: bool = False,
+                       labels: Optional[np.ndarray] = None) -> None:
         """Array-native registration for fleet-scale audits.
 
         ``sigmas_j`` defaults to the same per-device model as the object
         path: 5 % shunt tolerance uncalibrated, 1 % calibrated floor.
+        ``labels`` optionally tags each device with its workload scenario
+        (one string, or [N]) for :meth:`by_label` breakdowns.
         """
         e = np.asarray(energies_j, dtype=np.float64)
         if sigmas_j is None:
@@ -74,7 +78,12 @@ class FleetLedger:
         else:
             s = np.broadcast_to(
                 np.asarray(sigmas_j, dtype=np.float64), e.shape).copy()
-        self._batches.append((e, s, float(duration_s)))
+        if labels is None:
+            lab = None
+        else:
+            lab = np.broadcast_to(np.asarray(labels, dtype=object),
+                                  e.shape).copy()
+        self._batches.append((e, s, float(duration_s), lab))
 
     def _device_sigma(self, device_id: str, energy_j: float) -> float:
         calib = self.calibrations.get(device_id)
@@ -95,7 +104,7 @@ class FleetLedger:
         total = float(np.sum(totals)) if totals else 0.0
         sig_sq = float(np.sum(np.square(sigmas))) if sigmas else 0.0
         sig_wc = float(np.sum(sigmas)) if sigmas else 0.0
-        for e, s, dur in self._batches:
+        for e, s, dur, _ in self._batches:
             n_devices += len(e)
             total += float(np.sum(e))
             sig_sq += float(np.sum(np.square(s)))
@@ -117,6 +126,32 @@ class FleetLedger:
             cost_sigma_usd=(sig_wc / 3.6e6) * self.price,
             annual_cost_uncertainty_usd=annual_kwh_sigma * self.price,
         )
+
+    def by_label(self) -> Dict[str, FleetSummary]:
+        """Per-scenario fleet summaries over labelled batches.
+
+        Groups every batch-registered device by its workload label (the
+        paper's Fig. 18 spread as an accounting column: which job classes
+        carry the energy, and the uncertainty, of the bill).  Unlabelled
+        batch devices fall under ``"(unlabelled)"``; object-path ledgers
+        are not labelled and are excluded.
+        """
+        groups: Dict[str, List[tuple]] = {}
+        for e, s, dur, lab in self._batches:
+            if lab is None:
+                groups.setdefault("(unlabelled)", []).append((e, s, dur))
+                continue
+            for label in sorted(set(lab.tolist())):
+                sel = lab == label
+                groups.setdefault(str(label), []).append(
+                    (e[sel], s[sel], dur))
+        out: Dict[str, FleetSummary] = {}
+        for label, parts in sorted(groups.items()):
+            sub = FleetLedger(price_usd_per_kwh=self.price)
+            for e, s, dur in parts:
+                sub._batches.append((e, s, dur, None))
+            out[label] = sub.summary()
+        return out
 
 
 def datacenter_projection(n_gpus: int = 10_000, tdp_w: float = 700.0,

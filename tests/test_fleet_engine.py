@@ -12,8 +12,9 @@ from repro.core import load as loads
 from repro.core import profiles
 from repro.core.calibrate import CalibrationRecord
 from repro.core.fleet_engine import SensorBank, fleet_audit
+from repro.core.ground_truth import TimelineBank
 from repro.core.meter import (GoodPracticeConfig, ModuleScopeError, Workload,
-                              measure_good_practice,
+                              WorkloadSet, measure_good_practice,
                               measure_good_practice_batch, measure_naive,
                               measure_naive_batch)
 from repro.core.sensor import OnboardSensor, SensorUnsupported
@@ -127,12 +128,135 @@ def test_measure_batch_module_scope_guard():
     assert np.all(np.isfinite(e))
 
 
+def test_mixed_scope_baseline_only_hits_module_rows():
+    """The host baseline is debited from module-scope devices only: in a
+    mixed fleet a chip-scope sensor never sees host power, so its reading
+    must match a no-baseline run of the same device."""
+    wl = Workload("w", loads.workload_burst(0.2, 210.0))
+    mixed = SensorBank.from_catalog(["a100", "gh200_module_instant"],
+                                    base_seed=0)
+    e = measure_naive_batch(mixed, wl, host_baseline_w=50.0)
+    chip_only = SensorBank.from_catalog(["a100"], base_seed=0)
+    ref = measure_naive_batch(chip_only, wl)
+    assert e[0] == pytest.approx(ref[0], abs=1e-9)
+    # ... while the module row *is* debited
+    e0 = measure_naive_batch(
+        SensorBank.from_catalog(["a100", "gh200_module_instant"],
+                                base_seed=0), wl, host_baseline_w=0.0)
+    assert e[1] < e0[1]
+
+
+def test_gp_batch_with_chip_only_host_timeline():
+    """A host timeline on an all-chip-scope bank is inert — the batched
+    §5 protocol (which uses per-device shifts) must still run."""
+    host = loads.workload_burst(2.0, 55.0, idle_w=40.0)
+    bank = SensorBank.from_catalog(["a100"] * 3, base_seed=1,
+                                   host_timeline=host)
+    wl = Workload("w", loads.workload_burst(0.130, 215.0))
+    est = measure_good_practice_batch(bank, wl, _calib("a100"),
+                                      GoodPracticeConfig(n_trials=2))
+    assert np.all(np.isfinite(est.joules_per_rep))
+
+
 def test_subset_shares_hidden_params():
     bank = SensorBank.from_catalog(MIXED, base_seed=11)
     sub = bank.subset(np.array([2, 5]))
     assert sub.n_devices == 2
     assert sub.true_gain[0] == bank.true_gain[2]
     assert sub.profiles[1].name == MIXED[5]
+
+
+# -- per-device timelines (the heterogeneous-fleet substrate) ---------------
+
+def _per_device_timelines(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [loads.square_wave(float(rng.uniform(0.1, 0.4)),
+                              int(rng.integers(4, 12)),
+                              float(rng.uniform(150, 250)),
+                              float(rng.uniform(60, 120)), seed=seed + i)
+            for i in range(n)]
+
+
+def test_bank_per_device_timelines_match_scalar():
+    """The ISSUE 2 equivalence pin: a TimelineBank-backed bank row
+    reproduces OnboardSensor on the same per-device timeline, across every
+    transient kind."""
+    names = MIXED
+    tls = _per_device_timelines(len(names), seed=5)
+    bank = SensorBank.from_catalog(names, base_seed=42)
+    bank.attach(TimelineBank.from_timelines(tls), t_end=6.0)
+    qs = np.linspace(0.0, 6.0, 300)
+    got = bank.query(qs)
+    for i, name in enumerate(names):
+        s = OnboardSensor(profiles.get(name), seed=42 + i)
+        s.attach(tls[i], t_end=6.0)
+        quantum = profiles.get(name).quantum_w
+        np.testing.assert_allclose(got[i], s.query(qs), atol=quantum + 1e-12,
+                                   err_msg=f"device {i} ({name})")
+
+
+def test_bank_per_device_module_scope_matches_scalar():
+    host = loads.workload_burst(2.0, 55.0, idle_w=40.0)
+    names = ["gh200_module_instant", "a100"]
+    tls = _per_device_timelines(2, seed=9)
+    bank = SensorBank.from_catalog(names, base_seed=9, host_timeline=host)
+    bank.attach(TimelineBank.from_timelines(tls), t_end=4.0)
+    qs = np.linspace(0.0, 4.0, 200)
+    got = bank.query(qs)
+    for i in range(2):
+        s = bank.scalar_reference(i)
+        s.attach(tls[i], t_end=4.0)
+        np.testing.assert_allclose(got[i], s.query(qs), atol=1e-12)
+
+
+def test_bank_attach_per_device_validation():
+    bank = SensorBank.from_catalog(["a100"] * 3, base_seed=0)
+    tb = TimelineBank.from_timelines(_per_device_timelines(2, seed=1))
+    with pytest.raises(ValueError, match="2 rows for 3 devices"):
+        bank.attach(tb)
+    tb3 = TimelineBank.from_timelines(_per_device_timelines(3, seed=1))
+    with pytest.raises(ValueError, match="redundant with a TimelineBank"):
+        bank.attach(tb3, shifts=np.zeros(3))
+    fleet_bank = SensorBank.from_catalog(["a100"] * 3, base_seed=0,
+                                         seed_mode="fleet")
+    with pytest.raises(ValueError, match="seed_mode='fleet'"):
+        fleet_bank.attach(tb3)
+
+
+def test_measure_naive_batch_per_device_workloads():
+    names = ["a100", "v100", "kepler", "rtx3090_average"]
+    rng = np.random.default_rng(2)
+    wls = [Workload(f"w{i}", loads.multi_phase_workload(
+        [(float(rng.uniform(0.05, 0.2)), float(rng.uniform(180, 240))),
+         (float(rng.uniform(0.03, 0.1)), float(rng.uniform(120, 180)))]))
+        for i in range(len(names))]
+    bank = SensorBank.from_catalog(names, base_seed=7)
+    batch = measure_naive_batch(bank, WorkloadSet(wls))
+    for i, name in enumerate(names):
+        ref = measure_naive(OnboardSensor(profiles.get(name), seed=7 + i),
+                            wls[i])
+        assert batch[i] == pytest.approx(ref, abs=1e-9)
+
+
+def test_measure_good_practice_batch_per_device_workloads():
+    names = ["a100", "a100", "rtx3090_average", "v100"]
+    rng = np.random.default_rng(3)
+    wls = [Workload(f"w{i}", loads.multi_phase_workload(
+        [(float(rng.uniform(0.08, 0.2)), float(rng.uniform(180, 240))),
+         (float(rng.uniform(0.04, 0.1)), float(rng.uniform(120, 180)))]))
+        for i in range(len(names))]
+    bank = SensorBank.from_catalog(names, base_seed=7)
+    cfg = GoodPracticeConfig(n_trials=2)
+    calibs = {n: _calib(n) for n in set(names)}
+    batch = measure_good_practice_batch(bank, WorkloadSet(wls), calibs, cfg)
+    for i, name in enumerate(names):
+        s = OnboardSensor(profiles.get(name), seed=7 + i)
+        ref = measure_good_practice(s, wls[i], calibs[name], cfg, seed=i)
+        assert batch.joules_per_rep[i] == pytest.approx(
+            ref.joules_per_rep, abs=1e-3)
+        np.testing.assert_allclose(batch.trial_values[i], ref.trial_values,
+                                   atol=1e-3)
+        assert batch.n_reps[i] == ref.n_reps
 
 
 def test_fleet_audit_shape_and_gp_beats_naive():

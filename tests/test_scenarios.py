@@ -1,0 +1,122 @@
+"""Scenario-generator layer + heterogeneous fleet audits.
+
+Mixed fleets (training pods, Poisson inference serving, idle/maintenance,
+diurnal cycles) feed per-device timelines end-to-end: workload set →
+TimelineBank → SensorBank → batched protocols → per-scenario error
+breakdowns in the audit result and the fleet ledger.
+"""
+import numpy as np
+import pytest
+
+from repro.core import load as loads
+from repro.core.fleet_engine import fleet_audit
+from repro.core.meter import Workload, WorkloadSet
+from repro.core.telemetry import FleetLedger
+
+
+@pytest.mark.parametrize("kind", sorted(loads.SCENARIOS))
+def test_scenario_timelines_well_formed(kind):
+    for seed in range(5):
+        tl = loads.scenario_timeline(kind, seed=seed)
+        dur = tl.t_end - tl.t_start
+        assert dur > 0.0
+        assert tl.energy() > 0.0
+        assert np.all(tl.powers >= 0.0)
+        assert np.all(tl.powers <= 300.0)
+        # deterministic per seed
+        tl2 = loads.scenario_timeline(kind, seed=seed)
+        np.testing.assert_array_equal(tl.edges, tl2.edges)
+        np.testing.assert_array_equal(tl.powers, tl2.powers)
+
+
+def test_scenario_unknown_kind_raises():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        loads.scenario_timeline("mining")
+    with pytest.raises(KeyError, match="unknown scenario"):
+        loads.mixed_fleet_workloads(4, mix={"mining": 1.0})
+
+
+def test_mixed_fleet_counts_and_labels():
+    wls = loads.mixed_fleet_workloads(100, seed=0)
+    assert len(wls) == 100
+    counts = {}
+    for w in wls:
+        counts[w.scenario] = counts.get(w.scenario, 0) + 1
+    # default mix: 40/30/15/15
+    assert counts == {"training": 40, "inference": 30,
+                      "idle": 15, "diurnal": 15}
+
+
+def test_mixed_fleet_every_device_its_own_timeline():
+    wls = loads.mixed_fleet_workloads(40, seed=1)
+    sigs = {(w.timeline.edges.tobytes(), w.timeline.powers.tobytes())
+            for w in wls}
+    assert len(sigs) == len(wls)          # no two devices share a trace
+    # deterministic rebuild
+    wls2 = loads.mixed_fleet_workloads(40, seed=1)
+    for a, b in zip(wls, wls2):
+        assert a.scenario == b.scenario
+        np.testing.assert_array_equal(a.timeline.edges, b.timeline.edges)
+
+
+def test_mixed_fleet_degenerate_inputs():
+    with pytest.raises(ValueError):
+        loads.mixed_fleet_workloads(0)
+    with pytest.raises(ValueError):
+        loads.mixed_fleet_workloads(4, mix={"training": 0.0})
+
+
+def test_fleet_audit_mixed_scenarios_end_to_end():
+    n = 80
+    wls = loads.mixed_fleet_workloads(n, seed=3)
+    res = fleet_audit(n, profile=["a100"] * (n // 2) + ["v100"] * (n // 2),
+                      workload=wls, good_practice=True, n_trials=2)
+    assert res.naive_j.shape == (n,)
+    assert np.all(np.isfinite(res.naive_err))
+    assert isinstance(res.true_j, np.ndarray) and res.true_j.shape == (n,)
+    by = res.by_scenario()
+    assert set(by) == set(loads.DEFAULT_MIX)
+    assert sum(v["n_devices"] for v in by.values()) == n
+    # the protocol collapses the error for every scenario class
+    by_gp = res.by_scenario(res.gp_err)
+    for label in by:
+        assert by_gp[label]["mean_abs_err"] < 0.10
+
+
+def test_fleet_audit_workload_count_mismatch():
+    wls = loads.mixed_fleet_workloads(5, seed=0)
+    with pytest.raises(ValueError, match="5 workloads for 6 devices"):
+        fleet_audit(6, profile="a100", workload=wls)
+
+
+def test_fleet_seed_mode_rejects_per_device_timelines():
+    wls = loads.mixed_fleet_workloads(4, seed=0)
+    with pytest.raises(ValueError, match="seed_mode='fleet'"):
+        fleet_audit(4, profile="a100", workload=wls, seed_mode="fleet")
+
+
+def test_ledger_label_breakdown_sums_to_total():
+    n = 60
+    wls = loads.mixed_fleet_workloads(n, seed=5)
+    res = fleet_audit(n, profile="a100", workload=wls)
+    led = FleetLedger()
+    led.register_batch(res.naive_j, duration_s=0.4,
+                       labels=np.array(res.scenarios, dtype=object))
+    led.register_batch(np.array([100.0, 200.0]), duration_s=0.4)
+    by = led.by_label()
+    assert "(unlabelled)" in by
+    assert by["(unlabelled)"].total_j == pytest.approx(300.0)
+    total = sum(s.total_j for s in by.values())
+    assert total == pytest.approx(led.summary().total_j)
+    assert sum(s.n_devices for s in by.values()) == n + 2
+
+
+def test_workload_set_validation():
+    from repro.core.ground_truth import from_segments
+
+    with pytest.raises(ValueError, match="empty WorkloadSet"):
+        WorkloadSet([])
+    with pytest.raises(ValueError, match="zero/negative duration"):
+        Workload("null", from_segments([], t0=1.0))
+    with pytest.raises(ValueError, match="zero/negative duration"):
+        Workload("flat", from_segments([(0.0, 200.0)]))

@@ -78,6 +78,90 @@ def test_square_wave_energy(period, n, hi, lo):
     assert tl.energy() == pytest.approx(expect, rel=1e-9)
 
 
+def test_concat_gap_idle_energy_accounting():
+    """Gap energy uses the *override* idle level when one is supplied,
+    regardless of the fragments' own idle_w."""
+    frag = from_segments([(0.1, 200.0)], idle_w=60.0)
+    over = ActivityTimeline.concat([frag] * 4, gap_s=0.2, idle_w=10.0)
+    assert over.energy() == pytest.approx(4 * 20.0 + 3 * 0.2 * 10.0)
+    # default: idle of the first part
+    default = ActivityTimeline.concat([frag] * 4, gap_s=0.2)
+    assert default.energy() == pytest.approx(4 * 20.0 + 3 * 0.2 * 60.0)
+
+
+def test_concat_mismatched_idle_w_uses_first_part():
+    a = from_segments([(0.1, 200.0)], idle_w=60.0)
+    b = from_segments([(0.1, 100.0)], idle_w=30.0)
+    tl = ActivityTimeline.concat([a, b], gap_s=0.5)
+    assert tl.idle_w == 60.0
+    # the gap segment carries the first part's idle level
+    assert tl.power_at(np.array([0.3]))[0] == 60.0
+    assert tl.energy() == pytest.approx(20.0 + 10.0 + 0.5 * 60.0)
+
+
+def test_concat_empty_parts_raises():
+    with pytest.raises(ValueError, match="no parts"):
+        ActivityTimeline.concat([])
+
+
+def test_zero_width_segments_contribute_nothing():
+    tl = from_segments([(0.5, 100.0), (0.0, 900.0), (0.5, 50.0)])
+    assert tl.energy() == pytest.approx(75.0)
+    # a zero-width segment never owns any instant
+    assert tl.power_at(np.array([0.5]))[0] == 50.0
+    train = tl.repeat(3)
+    assert train.energy() == pytest.approx(3 * 75.0)
+    assert train.t_end == pytest.approx(3.0)
+
+
+def test_repeat_with_gap_matches_concat():
+    frag = from_segments([(0.1, 200.0), (0.05, 80.0)], idle_w=40.0)
+    np.testing.assert_array_equal(
+        frag.repeat(5, gap_s=0.02).edges,
+        ActivityTimeline.concat([frag] * 5, gap_s=0.02).edges)
+
+
+def test_sum_timelines_pointwise_and_idle():
+    from repro.core.sensor import _sum_timelines
+
+    a = from_segments([(1.0, 100.0), (1.0, 50.0)], idle_w=60.0)
+    b = from_segments([(0.5, 10.0), (2.0, 20.0)], t0=0.75, idle_w=40.0)
+    s = _sum_timelines(a, b)
+    # idle levels add (module = chip + host when both are idle)
+    assert s.idle_w == 100.0
+    ts = np.array([0.1, 0.8, 1.5, 2.2, 3.5])
+    np.testing.assert_allclose(s.power_at(ts),
+                               a.power_at(ts) + b.power_at(ts))
+    # edges are the union: piecewise-constant everywhere in between
+    fine = np.linspace(-0.5, 3.5, 4001)
+    np.testing.assert_allclose(s.power_at(fine),
+                               a.power_at(fine) + b.power_at(fine))
+
+
+def test_sum_timelines_disjoint_support_gap_is_sum_of_idles():
+    """Between a's end and b's start neither covers t: the summed timeline
+    reports a.idle + b.idle there — the module draws both idle floors."""
+    from repro.core.sensor import _sum_timelines
+
+    a = from_segments([(1.0, 100.0)], idle_w=60.0)
+    b = from_segments([(1.0, 30.0)], t0=2.0, idle_w=40.0)
+    s = _sum_timelines(a, b)
+    assert s.power_at(np.array([1.5]))[0] == pytest.approx(100.0)
+    assert s.energy() == pytest.approx(
+        1.0 * (100.0 + 40.0) + 1.0 * (60.0 + 40.0) + 1.0 * (60.0 + 30.0))
+
+
+def test_sum_timelines_with_zero_width_segments():
+    from repro.core.sensor import _sum_timelines
+
+    a = from_segments([(0.5, 100.0), (0.0, 999.0), (0.5, 50.0)], idle_w=60.0)
+    b = from_segments([(1.0, 10.0)], idle_w=5.0)
+    s = _sum_timelines(a, b)
+    assert s.power_at(np.array([0.25]))[0] == pytest.approx(110.0)
+    assert s.power_at(np.array([0.75]))[0] == pytest.approx(60.0)
+    assert s.energy() == pytest.approx(0.5 * 110.0 + 0.5 * 60.0)
+
+
 def test_pmd_trace_close_to_truth():
     tl = loads.square_wave(0.1, 20, 220.0, 70.0)
     meter = GroundTruthMeter(seed=1)

@@ -1,0 +1,179 @@
+"""TimelineBank ↔ ActivityTimeline equivalence (unit + property).
+
+The substrate contract (ISSUE 2): row ``i`` of a bank is *bitwise*
+equivalent to the scalar timeline it was built from — same ``power_at`` /
+``integral`` / ``mean_power`` outputs, not merely close — and the
+round-trip through ``from_timelines`` / ``row`` is exact.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # degrades to per-test skips without hypothesis
+
+from repro.core import load as loads
+from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
+                                     TimelineBank, batch_searchsorted,
+                                     from_segments)
+
+
+def _random_timelines(seed, n=6):
+    rng = np.random.default_rng(seed)
+    tls = []
+    for _ in range(n):
+        k = int(rng.integers(1, 9))
+        segs = [(float(rng.uniform(0.01, 1.0)), float(rng.uniform(0, 400)))
+                for _ in range(k)]
+        tls.append(from_segments(segs, t0=float(rng.uniform(-1, 1)),
+                                 idle_w=float(rng.uniform(1, 100))))
+    return tls
+
+
+def test_round_trip_exact():
+    tls = _random_timelines(0)
+    bank = TimelineBank.from_timelines(tls)
+    assert bank.n_rows == len(tls)
+    for i, t in enumerate(tls):
+        r = bank.row(i)
+        np.testing.assert_array_equal(r.edges, t.edges)
+        np.testing.assert_array_equal(r.powers, t.powers)
+        assert r.idle_w == t.idle_w
+
+
+def test_batch_searchsorted_matches_numpy():
+    rng = np.random.default_rng(1)
+    for side in ("left", "right"):
+        a = np.sort(rng.integers(0, 10, size=(5, 12)).astype(float), axis=1)
+        v = rng.integers(-1, 11, size=(5, 20)).astype(float)
+        got = batch_searchsorted(a, v, side)
+        ref = np.stack([np.searchsorted(a[i], v[i], side) for i in range(5)])
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_analytics_bitwise_vs_scalar_rows():
+    tls = _random_timelines(2)
+    bank = TimelineBank.from_timelines(tls)
+    rng = np.random.default_rng(3)
+    ts = rng.uniform(-2, 5, size=(len(tls), 41))
+    t0 = rng.uniform(-2, 5, size=(len(tls), 41))
+    t1 = t0 + rng.uniform(0, 3, size=t0.shape)
+    pa, I = bank.power_at(ts), bank.integral(t0, t1)
+    mp, en = bank.mean_power(t0, t1), bank.energy()
+    for i, t in enumerate(tls):
+        np.testing.assert_array_equal(pa[i], t.power_at(ts[i]))
+        np.testing.assert_array_equal(I[i], t.integral(t0[i], t1[i]))
+        np.testing.assert_array_equal(mp[i], t.mean_power(t0[i], t1[i]))
+        assert en[i] == t.energy()
+
+
+def test_single_row_broadcasts_over_query_rows():
+    tl = loads.square_wave(0.2, 6, 220.0, 80.0)
+    bank = TimelineBank.from_timelines([tl])
+    ts = np.random.default_rng(4).uniform(-1, 3, size=(7, 19))
+    got = bank.mean_power(ts - 0.05, ts)
+    ref = tl.mean_power(ts - 0.05, ts)      # scalar path is 2-D capable
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_shift_scalar_and_vector():
+    tls = _random_timelines(5, n=4)
+    bank = TimelineBank.from_timelines(tls)
+    dt = np.arange(4.0)
+    shifted = bank.shift(dt)
+    for i, t in enumerate(tls):
+        ref = t.shift(float(dt[i]))
+        np.testing.assert_array_equal(shifted.row(i).edges, ref.edges)
+    both = bank.shift(0.5)
+    np.testing.assert_array_equal(both.t_start, bank.t_start + 0.5)
+
+
+def test_query_shapes():
+    bank = TimelineBank.from_timelines(_random_timelines(6, n=3))
+    assert bank.power_at(0.5).shape == (3,)
+    np.testing.assert_array_equal(bank.power_at(np.full(3, 0.5)),
+                                  bank.power_at(0.5))
+    assert bank.power_at(np.zeros((3, 9))).shape == (3, 9)
+    # shared [1, M] grid broadcasts to every row
+    grid = np.linspace(0.0, 1.0, 9)[None, :]
+    np.testing.assert_array_equal(bank.power_at(grid),
+                                  bank.power_at(np.broadcast_to(grid, (3, 9))))
+    with pytest.raises(ValueError):
+        bank.power_at(np.zeros(5))           # neither [N] nor single-row
+    with pytest.raises(ValueError):
+        bank.power_at(np.zeros((4, 9)))      # wrong row count
+
+
+def test_degenerate_inputs_raise():
+    with pytest.raises(ValueError, match="empty TimelineBank"):
+        TimelineBank.from_timelines([])
+    with pytest.raises(ValueError, match="empty TimelineBank"):
+        TimelineBank.from_timeline(loads.workload_burst(0.1, 200.0), 0)
+    with pytest.raises(ValueError, match="at least one segment"):
+        TimelineBank(np.zeros((1, 2)), np.zeros((1, 1)), np.zeros(1),
+                     np.zeros(1, dtype=np.int64))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        TimelineBank(np.array([[0.0, 2.0, 1.0]]), np.ones((1, 2)),
+                     np.ones(1), np.full(1, 2, dtype=np.int64))
+
+
+def test_from_timeline_broadcast_with_shifts():
+    tl = loads.workload_burst(0.3, 210.0)
+    shifts = np.array([0.0, 0.5, 1.25])
+    bank = TimelineBank.from_timeline(tl, 3, shifts=shifts)
+    for i, s in enumerate(shifts):
+        np.testing.assert_array_equal(bank.row(i).edges, tl.shift(s).edges)
+
+
+def test_padding_rows_of_unequal_length():
+    """A 1-segment row stacked with an 8-segment row: padding must not
+    leak into either row's analytics."""
+    short = from_segments([(0.5, 100.0)], idle_w=10.0)
+    long = loads.square_wave(0.25, 4, 300.0, 50.0, idle_w=20.0)
+    bank = TimelineBank.from_timelines([short, long])
+    ts = np.linspace(-0.5, 3.0, 101)
+    qs = np.broadcast_to(ts, (2, 101))
+    got = bank.power_at(qs)
+    np.testing.assert_array_equal(got[0], short.power_at(ts))
+    np.testing.assert_array_equal(got[1], long.power_at(ts))
+    np.testing.assert_array_equal(
+        bank.energy(), [short.energy(), long.energy()])
+
+
+def test_energy_batch_matches_per_device_meters():
+    """Row i of energy_batch is the scalar meter seeded seed+i, bitwise."""
+    tls = _random_timelines(7, n=5)
+    bank = TimelineBank.from_timelines(tls)
+    meter = GroundTruthMeter(seed=11)
+    got = meter.energy_batch(bank)
+    for i, t in enumerate(tls):
+        assert got[i] == GroundTruthMeter(seed=11 + i).energy(t)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.lists(
+        st.tuples(
+            st.lists(st.tuples(st.floats(0.005, 0.8), st.floats(0.0, 500.0)),
+                     min_size=1, max_size=9),
+            st.floats(-1.0, 1.0),        # t0
+            st.floats(1.0, 100.0)),      # idle_w
+        min_size=1, max_size=6),
+    qseed=st.integers(0, 2**31 - 1),
+)
+def test_property_rows_bitwise_match_scalar(rows, qseed):
+    """Hypothesis: for random per-row segment lists, every TimelineBank
+    analytic matches the scalar ActivityTimeline bitwise."""
+    tls = [from_segments(segs, t0=t0, idle_w=idle)
+           for segs, t0, idle in rows]
+    bank = TimelineBank.from_timelines(tls)
+    rng = np.random.default_rng(qseed)
+    ts = rng.uniform(-2.0, 8.0, size=(len(tls), 17))
+    t0q = rng.uniform(-2.0, 8.0, size=ts.shape)
+    t1q = t0q + rng.uniform(0.0, 4.0, size=ts.shape)
+    pa = bank.power_at(ts)
+    I = bank.integral(t0q, t1q)
+    mp = bank.mean_power(t0q, t1q)
+    en = bank.energy()
+    for i, t in enumerate(tls):
+        np.testing.assert_array_equal(pa[i], t.power_at(ts[i]))
+        np.testing.assert_array_equal(I[i], t.integral(t0q[i], t1q[i]))
+        np.testing.assert_array_equal(mp[i], t.mean_power(t0q[i], t1q[i]))
+        assert en[i] == t.energy()
