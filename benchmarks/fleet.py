@@ -5,21 +5,34 @@ seeds) and the heterogeneous mixed-scenario audit (every device its own
 timeline via the `TimelineBank` substrate), with per-scenario error
 breakdowns and a machine-readable ``BENCH_fleet.json`` so the perf
 trajectory has data points.
+
+Backend comparison (ISSUE 3): the same heterogeneous naive audit is
+timed under every selected execution backend
+(:mod:`repro.core.engine_backend`), then the jax backend runs a
+fleet-scale audit (100k devices by default).  CLI::
+
+    python benchmarks/fleet.py --backend both --n-devices 10000 \
+        --scale-devices 100000
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 
+import numpy as np
+
 from benchmarks.common import emit
 from repro.core import load as loads
+from repro.core.engine_backend import available_backends
 from repro.core.fleet_engine import fleet_audit
 from repro.core.ledger import EnergyLedger
 from repro.core.meter import WorkloadSet
 from repro.core.telemetry import FleetLedger, datacenter_projection
 
 N_DEVICES = 10_000
+SCALE_DEVICES = 100_000
 JSON_PATH = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
 
 
@@ -30,7 +43,50 @@ def _emit_err(name: str, us_per_dev: float, st: dict) -> None:
          f"p99={st['p99_abs']:.4f};worst={st['worst_abs']:.4f}")
 
 
-def run() -> None:
+def _profile_names(n: int) -> list:
+    return (["a100"] * (n // 2) + ["h100_instant"] * (n // 4)
+            + ["v100"] * (n - n // 2 - n // 4))
+
+
+def _parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", choices=("numpy", "jax", "both", "auto"),
+                    default="both",
+                    help="execution backend(s) to benchmark; 'both'/'auto' "
+                         "degrade to numpy-only when jax is missing")
+    ap.add_argument("--n-devices", type=int, default=N_DEVICES,
+                    help="fleet size for the main audits "
+                         f"(default {N_DEVICES})")
+    ap.add_argument("--scale-devices", type=int, default=SCALE_DEVICES,
+                    help="fleet size for the jax-backend scale audit "
+                         f"(default {SCALE_DEVICES}; 0 disables)")
+    return ap.parse_args(argv)
+
+
+def _selected_backends(choice: str) -> list:
+    avail = available_backends()
+    if choice in ("both", "auto"):
+        return list(avail)
+    if choice == "jax" and "jax" not in avail:
+        raise SystemExit("--backend jax requested but jax is not installed")
+    return [choice]
+
+
+def _audit_stats(n, names, ws, backend):
+    """One timed heterogeneous naive audit; returns (wall_s, result)."""
+    t0 = time.perf_counter()
+    res = fleet_audit(n, profile=names, workload=ws, good_practice=False,
+                      backend=backend)
+    return time.perf_counter() - t0, res
+
+
+def run(argv=None) -> None:
+    # programmatic callers (benchmarks/run.py) get the defaults; the CLI
+    # passes sys.argv[1:] explicitly
+    args = _parse_args(argv if argv is not None else [])
+    n = args.n_devices
+    backends = _selected_backends(args.backend)
+
     proj = datacenter_projection(n_gpus=10_000, tdp_w=700.0, gain_tol=0.05)
     emit("headline_datacenter/10k_h100", 0.0,
          f"per_gpu_err_w={proj['per_gpu_err_w']:.0f};"
@@ -50,11 +106,9 @@ def run() -> None:
          f"{s.sigma_worstcase_j/s.total_j*100:.2f};"
          f"mean_power_w={s.mean_power_w:.0f}")
 
-    # shared-timeline path: 10k heterogeneous devices, one workload,
+    # shared-timeline path: n heterogeneous devices, one workload,
     # naive + good practice (the paper's Fig. 18 at fleet scale)
-    n = N_DEVICES
-    names = (["a100"] * (n // 2) + ["h100_instant"] * (n // 4)
-             + ["v100"] * (n // 4))
+    names = _profile_names(n)
     # time the two protocols separately: the naive-only pass first, then
     # the full audit (same seeds → identical naive results), so each
     # metric's us-per-device reflects only its own protocol's cost
@@ -67,14 +121,14 @@ def run() -> None:
     wall_gp = max(wall_shared - wall_naive, 0.0)
     st = res.stats()
     gp = res.stats(res.gp_err)
-    _emit_err("fleet_audit/naive_err_10k", wall_naive * 1e6 / n, st)
-    _emit_err("fleet_audit/goodpractice_err_10k", wall_gp * 1e6 / n, gp)
+    _emit_err(f"fleet_audit/naive_err_{n}", wall_naive * 1e6 / n, st)
+    _emit_err(f"fleet_audit/goodpractice_err_{n}", wall_gp * 1e6 / n, gp)
 
     unc = res.uncertainty()
     big = FleetLedger()
     big.register_batch(res.gp_j, duration_s=0.2)
     bs = big.summary()
-    emit("fleet_audit/uncertainty_10k", wall_shared * 1e6 / n,
+    emit(f"fleet_audit/uncertainty_{n}", wall_shared * 1e6 / n,
          f"n={bs.n_devices};sigma_ind_pct="
          f"{unc['sigma_independent_rel']*100:.3f};"
          f"sigma_wc_pct={unc['sigma_worstcase_rel']*100:.3f};"
@@ -98,8 +152,9 @@ def run() -> None:
     wall_gp_h = max(wall_hetero - wall_naive_h, 0.0)
     sth = res_h.stats()
     gph = res_h.stats(res_h.gp_err)
-    _emit_err("fleet_audit/hetero_naive_err_10k", wall_naive_h * 1e6 / n, sth)
-    _emit_err("fleet_audit/hetero_goodpractice_err_10k",
+    _emit_err(f"fleet_audit/hetero_naive_err_{n}", wall_naive_h * 1e6 / n,
+              sth)
+    _emit_err(f"fleet_audit/hetero_goodpractice_err_{n}",
               wall_gp_h * 1e6 / n, gph)
     by_naive = res_h.by_scenario()
     by_gp = res_h.by_scenario(res_h.gp_err)
@@ -113,10 +168,54 @@ def run() -> None:
          f"wall_shared_s={wall_shared:.2f};wall_hetero_s={wall_hetero:.2f};"
          f"ratio={ratio:.2f}")
 
+    # -- backend comparison (ISSUE 3): the same heterogeneous naive audit
+    # timed per backend, cold (first call pays jax compilation) and warm
+    backend_stats = {}
+    ref_naive = None
+    for be in backends:
+        wall_cold, res_be = _audit_stats(n, names, ws, be)
+        wall_warm, res_be = _audit_stats(n, names, ws, be)
+        entry = {
+            "n_devices": n,
+            "wall_s_cold": round(wall_cold, 4),
+            "wall_s": round(wall_warm, 4),
+            "devices_per_sec": round(n / wall_warm, 1),
+        }
+        if ref_naive is None:
+            ref_naive = res_be.naive_j
+        else:
+            entry["max_abs_dev_j_vs_numpy"] = float(
+                np.max(np.abs(res_be.naive_j - ref_naive)))
+        backend_stats[be] = entry
+        emit(f"fleet_audit/backend_{be}_{n}", wall_warm * 1e6 / n,
+             f"devices_per_sec={entry['devices_per_sec']};"
+             f"wall_s_cold={wall_cold:.2f}")
+
+    # -- jax at fleet scale: the ROADMAP's 100k-device heterogeneous audit
+    if "jax" in backends and args.scale_devices > 0:
+        ns = args.scale_devices
+        t0 = time.perf_counter()
+        ws_scale = WorkloadSet(loads.mixed_fleet_workloads(ns, seed=7))
+        ws_scale.timeline_bank
+        wall_gen_s = time.perf_counter() - t0
+        wall_scale, res_scale = _audit_stats(
+            ns, _profile_names(ns), ws_scale, "jax")
+        backend_stats["jax"]["scale"] = {
+            "n_devices": ns,
+            "wall_s_workload_gen": round(wall_gen_s, 4),
+            "wall_s": round(wall_scale, 4),
+            "devices_per_sec": round(ns / wall_scale, 1),
+            "naive_mean_abs_err": res_scale.stats()["mean_abs_err"],
+        }
+        emit(f"fleet_audit/backend_jax_scale_{ns}", wall_scale * 1e6 / ns,
+             f"devices_per_sec={round(ns / wall_scale, 1)};"
+             f"wall_s={wall_scale:.2f}")
+
     payload = {
         "n_devices": n,
         "profiles": {"a100": n // 2, "h100_instant": n // 4,
-                     "v100": n // 4},
+                     "v100": n - n // 2 - n // 4},
+        "backends": backend_stats,
         "shared": {
             "wall_s_naive": round(wall_naive, 4),
             "wall_s_total": round(wall_shared, 4),
@@ -146,4 +245,5 @@ def run() -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(sys.argv[1:])

@@ -9,6 +9,8 @@ Public API:
 """
 from repro.core.activity import ChipPowerModel, StepActivity, steps_timeline
 from repro.core.calibrate import CalibrationRecord, CalibrationStore
+from repro.core.engine_backend import (available_backends, get_backend,
+                                       resolve_backend)
 from repro.core.ground_truth import (ActivityTimeline, GroundTruthMeter,
                                      TimelineBank, from_segments)
 from repro.core.fleet_engine import FleetAuditResult, SensorBank, fleet_audit
@@ -41,5 +43,6 @@ __all__ = [
     "measure_good_practice_batch",
     "EnergyLedger", "LedgerEntry", "FleetLedger", "FleetSummary",
     "datacenter_projection",
+    "available_backends", "get_backend", "resolve_backend",
     "ChipPowerModel", "StepActivity", "steps_timeline",
 ]

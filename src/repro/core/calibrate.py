@@ -37,7 +37,32 @@ class CalibrationRecord:
 
     @classmethod
     def from_json(cls, s: str) -> "CalibrationRecord":
-        return cls(**json.loads(s))
+        """Load a persisted record, tolerating schema drift.
+
+        Stores outlive the code that wrote them: a record persisted
+        before a field was added (the new field falls back to its
+        dataclass default), or after one was removed (the stale key is
+        dropped), must still load — that is the module's "load a cached
+        characterisation" contract.  Only fields without defaults are
+        truly required.
+        """
+        data = json.loads(s)
+        if not isinstance(data, dict):
+            raise ValueError("calibration record must be a JSON object, "
+                             f"got {type(data).__name__}")
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - set(fields))
+        if unknown:
+            log.info("dropping unknown calibration fields",
+                     fields=",".join(unknown))
+        required = [n for n, f in fields.items()
+                    if f.default is dataclasses.MISSING
+                    and f.default_factory is dataclasses.MISSING]
+        missing = sorted(set(required) - set(data))
+        if missing:
+            raise ValueError("calibration record missing required "
+                             f"field(s): {', '.join(missing)}")
+        return cls(**{k: v for k, v in data.items() if k in fields})
 
 
 def record_from_characterisation(device_id: str, profile_name: str,

@@ -1,0 +1,92 @@
+"""Multi-backend execution layer for the fleet engine.
+
+The batched sensor simulation reduces to four pure array kernels — the
+three transient responses (trailing boxcar, first-order "logarithmic"
+filter, estimation proxy) and the closed-form poll counting behind
+``SensorBank.integrate_polled``.  This package holds one implementation
+per array backend:
+
+* :mod:`~repro.core.engine_backend.numpy_backend` — the reference
+  semantics; always available.
+* :mod:`~repro.core.engine_backend.jax_backend` — ``jax.jit`` + ``vmap``
+  kernels (``lax.associative_scan`` for the filter recurrence), traced
+  under x64 so results stay within one reporting quantum of NumPy.
+
+Backends are plain modules sharing one function signature set over the
+pytree containers in :mod:`~repro.core.engine_backend.pytrees`
+(``TimelineArrays``, ``ReadingSchedule``, ``PollGrid``).  Select one with
+``SensorBank(..., backend="jax")`` / ``fleet_audit(..., backend="auto")``
+or grab it directly via :func:`get_backend`.  See ``docs/backends.md``.
+"""
+from __future__ import annotations
+
+import importlib
+import importlib.util
+from typing import Optional, Tuple
+
+from repro.core.engine_backend import numpy_backend
+from repro.core.engine_backend.pytrees import (PollGrid, ReadingSchedule,
+                                               TimelineArrays)
+
+__all__ = ["available_backends", "get_backend", "has_jax",
+           "resolve_backend", "PollGrid", "ReadingSchedule",
+           "TimelineArrays", "numpy_backend"]
+
+_BACKENDS = {"numpy": numpy_backend}
+_KNOWN = ("numpy", "jax")
+
+
+_HAS_JAX: Optional[bool] = None
+
+
+def has_jax() -> bool:
+    """Whether the jax backend can actually be loaded.
+
+    A present-but-broken install (jax without a matching jaxlib) must
+    read as unavailable so ``backend="auto"`` degrades to numpy instead
+    of crashing; that means probing with a real import, not just
+    ``find_spec``.  The result is cached — the probe runs once."""
+    global _HAS_JAX
+    if _HAS_JAX is None:
+        if "jax" in _BACKENDS:
+            _HAS_JAX = True
+        elif importlib.util.find_spec("jax") is None:
+            _HAS_JAX = False
+        else:
+            try:
+                importlib.import_module("jax")
+                _HAS_JAX = True
+            except Exception:
+                _HAS_JAX = False
+    return _HAS_JAX
+
+
+def available_backends() -> Tuple[str, ...]:
+    """Names accepted by :func:`get_backend`, in preference order."""
+    return ("numpy", "jax") if has_jax() else ("numpy",)
+
+
+def resolve_backend(name: Optional[str]) -> str:
+    """Normalise a backend selector: ``None`` → ``"numpy"`` (the default
+    and reference), ``"auto"`` → ``"jax"`` when importable else
+    ``"numpy"``.  Asking for ``"jax"`` without jax installed raises."""
+    if name is None:
+        return "numpy"
+    if name == "auto":
+        return "jax" if has_jax() else "numpy"
+    if name not in _KNOWN:
+        raise ValueError(
+            f"unknown backend '{name}'; known: {', '.join(_KNOWN)}")
+    if name == "jax" and not has_jax():
+        raise ValueError("backend 'jax' requested but jax is not "
+                         "installed; use backend='numpy' or 'auto'")
+    return name
+
+
+def get_backend(name: Optional[str] = None):
+    """The backend module for ``name`` (see :func:`resolve_backend`)."""
+    name = resolve_backend(name)
+    if name not in _BACKENDS:
+        _BACKENDS[name] = importlib.import_module(
+            f"repro.core.engine_backend.{name}_backend")
+    return _BACKENDS[name]

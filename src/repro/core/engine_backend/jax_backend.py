@@ -1,0 +1,248 @@
+"""JAX implementation of the fleet-engine kernels (`jax.jit` + `vmap`).
+
+Same signatures, same semantics as
+:mod:`repro.core.engine_backend.numpy_backend` — NumPy arrays in, NumPy
+arrays out — with the array math dispatched through XLA:
+
+* row-wise binary search is ``vmap(jnp.searchsorted)``;
+* the logarithmic-filter recurrence ``y_{i+1} = a_i·y_i + b_i`` (affine
+  per segment) runs as a ``lax.associative_scan`` over segments —
+  O(log S) depth instead of the NumPy backend's sequential Python loop;
+* the poll-counting closed form is one fused jitted kernel.
+
+Everything is traced under ``jax.experimental.enable_x64`` so float64
+semantics match NumPy bit-for-bit on elementwise arithmetic; only
+reduction/scan association order differs, which is why the parity
+contract is "within one reporting quantum", not bitwise
+(``tests/test_engine_backend.py`` pins it).  Compiled kernels are cached
+by shape, so repeated trials of a fixed fleet re-use one compilation.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.core.engine_backend.pytrees import (PollGrid, ReadingSchedule,
+                                               TimelineArrays)
+
+name = "jax"
+
+_FAR = np.iinfo(np.int64).max // 2
+
+
+def _searchsorted_rows(a, v, side: str):
+    g = v.shape[0]
+    if a.shape[0] == 1 and g > 1:
+        a = jnp.broadcast_to(a, (g, a.shape[1]))
+    return jax.vmap(
+        lambda ar, vr: jnp.searchsorted(ar, vr, side=side))(a, v)
+
+
+def _broadcast_rows(tl: TimelineArrays, g: int) -> TimelineArrays:
+    r = tl.edges.shape[0]
+    if r == g:
+        return tl
+    if r != 1:
+        raise ValueError(f"{g} query rows for {r} timeline rows")
+    return TimelineArrays(
+        jnp.broadcast_to(tl.edges, (g, tl.edges.shape[1])),
+        jnp.broadcast_to(tl.powers, (g, tl.powers.shape[1])),
+        jnp.broadcast_to(tl.idle_w, (g,)),
+        jnp.broadcast_to(tl.n_segs, (g,)))
+
+
+@jax.jit
+def _integral_impl(tl: TimelineArrays, t0, t1):
+    g = t0.shape[0]
+    seg = tl.powers * jnp.diff(tl.edges, axis=1)
+    cum = jnp.concatenate(
+        [jnp.zeros((tl.edges.shape[0], 1)), jnp.cumsum(seg, axis=1)],
+        axis=1)
+    tl = _broadcast_rows(tl, g)
+    cum = jnp.broadcast_to(cum, (g, cum.shape[1]))
+    e, p, idle, ns = tl
+    first = e[:, 0][:, None]
+    last = e[:, -1][:, None]
+    hi_idx = jnp.maximum(ns - 1, 0)[:, None]
+
+    def eval_I(t):
+        tc = jnp.clip(t, first, last)
+        idx = jnp.clip(_searchsorted_rows(e, tc, "right") - 1, 0, hi_idx)
+        inner = (jnp.take_along_axis(cum, idx, axis=1)
+                 + jnp.take_along_axis(p, idx, axis=1)
+                 * (tc - jnp.take_along_axis(e, idx, axis=1)))
+        before = jnp.minimum(t - first, 0.0) * idle[:, None]
+        after = jnp.maximum(t - last, 0.0) * idle[:, None]
+        return inner + before + after
+
+    return eval_I(t1) - eval_I(t0)
+
+
+@jax.jit
+def _boxcar_impl(tl: TimelineArrays, t0, t1):
+    dt = jnp.maximum(t1 - t0, 1e-12)
+    return _integral_impl(tl, t0, t1) / dt
+
+
+@jax.jit
+def _estimation_impl(tl: TimelineArrays, t0, t1, model_gain):
+    return _boxcar_impl(tl, t0, t1) * model_gain[:, None]
+
+
+@jax.jit
+def _log_filter_impl(tl: TimelineArrays, ticks, tau, t_lo, t_hi):
+    g = ticks.shape[0]
+    r = tl.edges.shape[0]
+    ext_e = jnp.concatenate([jnp.full((r, 1), t_lo), tl.edges,
+                             jnp.full((r, 1), t_hi)], axis=1)
+    ext_p = jnp.concatenate([tl.idle_w[:, None], tl.powers,
+                             tl.idle_w[:, None]], axis=1)
+    n_seg = ext_p.shape[1]
+    dts = jnp.broadcast_to(jnp.diff(ext_e, axis=1), (g, n_seg))
+    sp = jnp.broadcast_to(ext_p, (g, n_seg))
+    # each segment advances the filter state affinely:
+    #   y_{i+1} = a_i · y_i + b_i  with  a_i = e^{-dt_i/tau},
+    #   b_i = P_i (1 - a_i); zero-width padding steps are the identity map
+    decay = jnp.exp(-dts / tau[:, None])
+    a_seg = jnp.where(dts > 0, decay, 1.0)
+    b_seg = jnp.where(dts > 0, sp * (1.0 - decay), 0.0)
+
+    def compose(lo, hi):
+        a1, b1 = lo
+        a2, b2 = hi
+        return (a1 * a2, b1 * a2 + b2)
+
+    A, B = lax.associative_scan(compose, (a_seg, b_seg), axis=1)
+    y0 = jnp.broadcast_to(tl.idle_w, (g,))[:, None]
+    y = jnp.concatenate([y0, A * y0 + B], axis=1)          # [g, n_seg+1]
+
+    ext_e_g = jnp.broadcast_to(ext_e, (g, n_seg + 1))
+    idx = jnp.clip(_searchsorted_rows(ext_e, ticks, "right") - 1,
+                   0, n_seg - 1)
+    y_at = jnp.take_along_axis(y, idx, axis=1)
+    sp_at = jnp.take_along_axis(sp, idx, axis=1)
+    e_at = jnp.take_along_axis(ext_e_g, idx, axis=1)
+    return sp_at + (y_at - sp_at) * jnp.exp(-(ticks - e_at) / tau[:, None])
+
+
+@jax.jit
+def _query_slots_impl(sched: ReadingSchedule, tq):
+    T = sched.update_period_s[:, None]
+    phase = sched.phase[:, None]
+    m = sched.ticks.shape[1]
+    j = jnp.floor((tq - phase) / T).astype(jnp.int64) - sched.k0[:, None]
+    j = jnp.clip(j, 0, m - 1)
+    for _ in range(2):
+        tj = jnp.take_along_axis(sched.ticks, j, axis=1)
+        j = jnp.where((tj > tq) & (j > 0), j - 1, j)
+    for _ in range(2):
+        jn = jnp.minimum(j + 1, m - 1)
+        tn = jnp.take_along_axis(sched.ticks, jn, axis=1)
+        j = jnp.where((tn <= tq) & (jn > j), jn, j)
+    return jnp.clip(j, sched.first[:, None], sched.last[:, None])
+
+
+@jax.jit
+def _poll_counts_impl(sched: ReadingSchedule, t0, t1, period_s,
+                      grid_offset, a, b):
+    n = a.shape[0]
+    m_i = jnp.floor((t1 - t0) / period_s).astype(jnp.int64)
+
+    def q(idx):
+        return t0 + period_s * idx
+
+    def r(idx):
+        return (t0 + period_s * idx) + grid_offset
+
+    j0 = jnp.ceil((a - grid_offset - t0) / period_s).astype(jnp.int64)
+    j1 = jnp.floor((b - grid_offset - t0) / period_s).astype(jnp.int64)
+    for _ in range(2):
+        j0 = jnp.where(r(j0 - 1) >= a, j0 - 1, j0)
+        j0 = jnp.where(r(j0) < a, j0 + 1, j0)
+        j1 = jnp.where(r(j1 + 1) <= b, j1 + 1, j1)
+        j1 = jnp.where(r(j1) > b, j1 - 1, j1)
+    j0 = jnp.maximum(j0, 0)
+    j1 = jnp.minimum(j1, m_i - 1)
+
+    ticks = sched.ticks
+    m = ticks.shape[1]
+    slot = jnp.arange(m)[None, :]
+    lo = jnp.ceil((ticks - t0) / period_s).astype(jnp.int64)
+    for _ in range(2):
+        lo = jnp.where(q(lo - 1) >= ticks, lo - 1, lo)
+        lo = jnp.where(q(lo) < ticks, lo + 1, lo)
+    hi = jnp.concatenate([lo[:, 1:] - 1, jnp.full((n, 1), _FAR)], axis=1)
+    lo = jnp.where(slot == sched.first[:, None], jnp.int64(0), lo)
+    hi = jnp.where(slot == sched.last[:, None], _FAR, hi)
+    counts = (jnp.minimum(hi, (j1 - 1)[:, None])
+              - jnp.maximum(lo, j0[:, None]) + 1)
+    valid = ((slot >= sched.first[:, None])
+             & (slot <= sched.last[:, None]))
+    counts = jnp.where(valid, jnp.maximum(counts, 0), 0)
+
+    slot_b = _query_slots_impl(sched, q(j1.astype(jnp.float64))[:, None])
+    tail_dt = b - r(j1.astype(jnp.float64))
+    return counts, slot_b[:, 0], tail_dt, j1 >= j0
+
+
+# -- public wrappers: NumPy in, NumPy out -----------------------------------
+
+def boxcar_means(tl: TimelineArrays, t0: np.ndarray,
+                 t1: np.ndarray) -> np.ndarray:
+    with enable_x64():
+        return np.asarray(_boxcar_impl(tl, jnp.asarray(t0, jnp.float64),
+                                       jnp.asarray(t1, jnp.float64)))
+
+
+def estimation_means(tl: TimelineArrays, t0: np.ndarray, t1: np.ndarray,
+                     model_gain: np.ndarray) -> np.ndarray:
+    with enable_x64():
+        return np.asarray(_estimation_impl(
+            tl, jnp.asarray(t0, jnp.float64), jnp.asarray(t1, jnp.float64),
+            jnp.asarray(model_gain, jnp.float64)))
+
+
+def timeline_integral(tl: TimelineArrays, t0: np.ndarray,
+                      t1: np.ndarray) -> np.ndarray:
+    with enable_x64():
+        return np.asarray(_integral_impl(tl, jnp.asarray(t0, jnp.float64),
+                                         jnp.asarray(t1, jnp.float64)))
+
+
+def log_filter(tl: TimelineArrays, ticks: np.ndarray,
+               tau: np.ndarray) -> np.ndarray:
+    tau = np.asarray(tau, dtype=np.float64)
+    # concrete pad bounds (cheap NumPy reductions) keep the jitted kernel
+    # free of host round-trips; they only need to cover idle
+    t_lo = (min(float(np.min(ticks)), float(np.min(tl.t_start)))
+            - 5.0 * float(np.max(tau)))
+    t_hi = max(float(np.max(ticks)), float(np.max(tl.t_end))) + 1e-9
+    with enable_x64():
+        return np.asarray(_log_filter_impl(
+            tl, jnp.asarray(ticks, jnp.float64), jnp.asarray(tau),
+            jnp.float64(t_lo), jnp.float64(t_hi)))
+
+
+def poll_counts(sched: ReadingSchedule, grid: PollGrid, a: np.ndarray,
+                b: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray, np.ndarray]:
+    with enable_x64():
+        counts, slot_b, tail_dt, nonempty = _poll_counts_impl(
+            sched, jnp.float64(grid.t0),
+            jnp.asarray(grid.t1, jnp.float64),
+            jnp.float64(grid.period_s), jnp.float64(grid.grid_offset),
+            jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64))
+    return (np.asarray(counts), np.asarray(slot_b),
+            np.asarray(tail_dt), np.asarray(nonempty))
+
+
+def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:
+    with enable_x64():
+        return np.asarray(_query_slots_impl(
+            sched, jnp.asarray(tq, jnp.float64)))

@@ -1,0 +1,282 @@
+"""NumPy implementation of the fleet-engine kernels.
+
+This module is the reference semantics: every function is a pure array
+function (no hidden state, no RNG) extracted from the original
+``fleet_engine`` / ``ground_truth`` hot paths.  The JAX backend
+(:mod:`repro.core.engine_backend.jax_backend`) reimplements the same
+signatures with ``jax.jit`` + ``vmap``; parity is pinned by
+``tests/test_engine_backend.py`` to within one reporting quantum.
+
+Kernels
+-------
+* :func:`searchsorted_rows`     — row-wise exact binary search
+* :func:`timeline_integral`     — exact per-row ∫P dt (idle outside coverage)
+* :func:`boxcar_means`          — batched trailing-window means
+* :func:`estimation_means`      — activity-proxy means (boxcar × model gain)
+* :func:`log_filter`            — first-order-filter segment scan
+* :func:`poll_counts`           — closed-form poll counting for
+  ``integrate_polled`` (how many uniform poll instants land in each
+  reading interval, plus the partial final step)
+
+No module in this file imports from the rest of :mod:`repro` — backends
+sit at the bottom of the dependency graph so ``ground_truth`` and
+``fleet_engine`` can both build on them.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.engine_backend.pytrees import (PollGrid, ReadingSchedule,
+                                               TimelineArrays)
+
+name = "numpy"
+
+_FAR = np.iinfo(np.int64).max // 2
+
+
+def searchsorted_rows(a: np.ndarray, v: np.ndarray,
+                      side: str = "right") -> np.ndarray:
+    """Row-wise ``np.searchsorted``: sorted rows ``a`` [R, S] against query
+    rows ``v`` [G, M], where R == G or R == 1 (row broadcast).
+
+    A fixed-iteration vectorised binary search with *exact* comparisons —
+    no offset/flattening tricks that would perturb float values — so the
+    result is bitwise what ``np.searchsorted(a[i], v[i], side)`` returns
+    per row.  Cost is ``ceil(log2 S)`` gather passes over [G, M].
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"bad side '{side}'")
+    a = np.asarray(a)
+    v = np.asarray(v)
+    r, s = a.shape
+    g = v.shape[0]
+    if r not in (1, g):
+        raise ValueError(f"cannot broadcast {r} rows against {g} queries")
+    if r == 1 and g > 1:
+        a = np.broadcast_to(a, (g, s))
+    lo = np.zeros(v.shape, dtype=np.int64)
+    hi = np.full(v.shape, s, dtype=np.int64)
+    for _ in range(int(np.ceil(np.log2(max(s, 2)))) + 1):
+        active = lo < hi
+        if not np.any(active):
+            break
+        mid = (lo + hi) >> 1
+        # mid < s wherever active; the clip only feeds settled lanes
+        amid = np.take_along_axis(a, np.minimum(mid, s - 1), axis=1)
+        go = (amid <= v) if side == "right" else (amid < v)
+        lo = np.where(active & go, mid + 1, lo)
+        hi = np.where(active & ~go, mid, hi)
+    return lo
+
+
+def _broadcast_rows(tl: TimelineArrays, g: int) -> TimelineArrays:
+    """Broadcast a single-row bank to ``g`` query rows (views, no copy)."""
+    r = tl.n_rows
+    if r == g:
+        return tl
+    if r != 1:
+        raise ValueError(f"{g} query rows for {r} timeline rows")
+    return TimelineArrays(
+        np.broadcast_to(tl.edges, (g, tl.edges.shape[1])),
+        np.broadcast_to(tl.powers, (g, tl.powers.shape[1])),
+        np.broadcast_to(tl.idle_w, (g,)),
+        np.broadcast_to(tl.n_segs, (g,)))
+
+
+def cum_energy(tl: TimelineArrays) -> np.ndarray:
+    """Per-row cumulative segment energy [R, S+1] (zero at the first edge)."""
+    seg = tl.powers * np.diff(tl.edges, axis=1)
+    return np.concatenate(
+        [np.zeros((tl.n_rows, 1)), np.cumsum(seg, axis=1)], axis=1)
+
+
+def timeline_integral(tl: TimelineArrays, t0: np.ndarray,
+                      t1: np.ndarray) -> np.ndarray:
+    """Exact per-row ∫P_i dt over [t0_i, t1_i] [G, M]; idle outside
+    coverage.  ``tl`` has G rows, or 1 row broadcast against G."""
+    t0 = np.asarray(t0, dtype=np.float64)
+    t1 = np.asarray(t1, dtype=np.float64)
+    g = t0.shape[0]
+    cum = cum_energy(tl)            # on the R stored rows, then broadcast
+    tl = _broadcast_rows(tl, g)
+    e, p, idle, ns = tl
+    if cum.shape[0] != g:
+        cum = np.broadcast_to(cum, (g, cum.shape[1]))
+    first = e[:, 0][:, None]
+    last = e[:, -1][:, None]
+    hi_idx = np.maximum(ns - 1, 0)[:, None]
+
+    def eval_I(t):
+        tc = np.clip(t, first, last)
+        idx = np.clip(searchsorted_rows(e, tc, "right") - 1, 0, hi_idx)
+        inner = (np.take_along_axis(cum, idx, axis=1)
+                 + np.take_along_axis(p, idx, axis=1)
+                 * (tc - np.take_along_axis(e, idx, axis=1)))
+        before = np.minimum(t - first, 0.0) * idle[:, None]
+        after = np.maximum(t - last, 0.0) * idle[:, None]
+        return inner + before + after
+
+    return eval_I(t1) - eval_I(t0)
+
+
+def boxcar_means(tl: TimelineArrays, t0: np.ndarray,
+                 t1: np.ndarray) -> np.ndarray:
+    """Batched trailing-window means: ∫P dt / (t1 - t0) over [G, M]
+    windows — the boxcar transient's raw reading."""
+    t0 = np.asarray(t0, dtype=np.float64)
+    t1 = np.asarray(t1, dtype=np.float64)
+    dt = np.maximum(t1 - t0, 1e-12)
+    return timeline_integral(tl, t0, t1) / dt
+
+
+def estimation_means(tl: TimelineArrays, t0: np.ndarray, t1: np.ndarray,
+                     model_gain: np.ndarray) -> np.ndarray:
+    """Activity-proxy transient: the true period mean seen through a crude
+    per-device activity model (``model_gain`` [G])."""
+    return boxcar_means(tl, t0, t1) * np.asarray(model_gain)[:, None]
+
+
+def log_filter(tl: TimelineArrays, ticks: np.ndarray,
+               tau: np.ndarray) -> np.ndarray:
+    """Batched first-order filter y' = (P - y)/tau for G devices.
+
+    The scalar ``OnboardSensor._filtered_at`` walks the piecewise-constant
+    segments in a per-device Python loop; here one scan advances a vector
+    of G filter states per step.  With a shared timeline (single-row bank)
+    the loop length is the number of timeline edges — independent of fleet
+    size; with per-device rows the scan walks each row's own padded edge
+    sequence, masking the zero-width padding steps so the state carries
+    through unchanged.  Before the first real edge the state is exactly
+    ``idle_w`` (the ``t_lo`` padding only ever covers idle), so readings
+    are bitwise identical to the scalar filter for any padding choice.
+    """
+    g, _ = ticks.shape
+    tau = np.asarray(tau, dtype=np.float64)
+    t_lo = (min(float(np.min(ticks)), float(np.min(tl.t_start)))
+            - 5.0 * float(np.max(tau)))
+    t_hi = max(float(np.max(ticks)), float(np.max(tl.t_end))) + 1e-9
+    r = tl.n_rows
+    ext_e = np.concatenate([np.full((r, 1), t_lo), tl.edges,
+                            np.full((r, 1), t_hi)], axis=1)
+    ext_p = np.concatenate([tl.idle_w[:, None], tl.powers,
+                            tl.idle_w[:, None]], axis=1)
+    n_seg = ext_p.shape[1]
+    dts = np.diff(ext_e, axis=1)
+
+    y = np.empty((g, n_seg + 1))
+    y[:, 0] = np.broadcast_to(tl.idle_w, (g,))
+    for i in range(n_seg):
+        dt = dts[:, i]
+        sp = ext_p[:, i]
+        step = sp + (y[:, i] - sp) * np.exp(-dt / tau)
+        y[:, i + 1] = np.where(dt > 0, step, y[:, i])
+
+    idx = np.clip(searchsorted_rows(ext_e, ticks, side="right") - 1,
+                  0, n_seg - 1)
+    y_at = np.take_along_axis(y, idx, axis=1)
+    sp_at = np.take_along_axis(np.broadcast_to(ext_p, (g, n_seg)), idx,
+                               axis=1)
+    e_at = np.take_along_axis(np.broadcast_to(ext_e, (g, n_seg + 1)), idx,
+                              axis=1)
+    return sp_at + (y_at - sp_at) * np.exp(-(ticks - e_at) / tau[:, None])
+
+
+def poll_counts(sched: ReadingSchedule, grid: PollGrid, a: np.ndarray,
+                b: np.ndarray) -> Tuple[np.ndarray, np.ndarray,
+                                        np.ndarray, np.ndarray]:
+    """Closed-form poll counting over uniform grids: the core of
+    ``SensorBank.integrate_polled``.
+
+    Because the poll grid is uniform and the published readings are a
+    step function over the tick grid, the number of poll instants falling
+    inside each reading interval has a closed form — no [N, n_poll]
+    reading matrix is ever materialised.  Returns
+
+    * ``counts`` [N, M]  — poll instants covered by each reading slot
+      within the selected index range,
+    * ``slot_b`` [N]     — the reading slot current at the final selected
+      poll instant (for the partial last step),
+    * ``tail_dt`` [N]    — ``b - r(j1)``, the partial step the final poll
+      instant integrates over,
+    * ``nonempty`` [N]   — whether any poll instant landed in [a, b].
+
+    The caller contracts ``period · Σ_k v_k · counts_k + v_{slot_b} ·
+    tail_dt`` (zeroed where empty), which matches
+    ``meter._integrate_readings`` on the equivalent polled series.
+    """
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = a.shape[0]
+    period_s = grid.period_s
+    # per-device poll ends reproduce each scalar sensor's finite grid
+    m_i = np.floor((np.asarray(grid.t1, dtype=np.float64) - grid.t0)
+                   / period_s).astype(np.int64)
+
+    def q(idx):
+        # true wall-clock query instant, same expression as poll()
+        return grid.t0 + period_s * idx
+
+    def r(idx):
+        # reported (possibly re-synchronised) poll timestamp
+        return (grid.t0 + period_s * idx) + grid.grid_offset
+
+    # per-device selected index range [j0, j1] on the shared grid,
+    # settling FP boundary cases against the actual grid values
+    j0 = np.ceil((a - grid.grid_offset - grid.t0) / period_s).astype(np.int64)
+    j1 = np.floor((b - grid.grid_offset - grid.t0) / period_s).astype(np.int64)
+    for _ in range(2):
+        j0 = np.where(r(j0 - 1) >= a, j0 - 1, j0)
+        j0 = np.where(r(j0) < a, j0 + 1, j0)
+        j1 = np.where(r(j1 + 1) <= b, j1 + 1, j1)
+        j1 = np.where(r(j1) > b, j1 - 1, j1)
+    j0 = np.maximum(j0, 0)
+    j1 = np.minimum(j1, m_i - 1)
+
+    ticks = sched.ticks
+    m = ticks.shape[1]
+    slot = np.arange(m)[None, :]
+    # lo[k]: first poll index whose reading is slot k, i.e. smallest j
+    # with q(j) >= tick_k (two FP settling passes, like query())
+    lo = np.ceil((ticks - grid.t0) / period_s).astype(np.int64)
+    for _ in range(2):
+        lo = np.where(q(lo - 1) >= ticks, lo - 1, lo)
+        lo = np.where(q(lo) < ticks, lo + 1, lo)
+    hi = np.concatenate([lo[:, 1:] - 1, np.full((n, 1), _FAR)], axis=1)
+    # query() clamps to [first, last]: the first reading extends back to
+    # -inf, the last forward to +inf
+    lo = np.where(slot == sched.first[:, None], np.int64(0), lo)
+    hi = np.where(slot == sched.last[:, None], _FAR, hi)
+    counts = (np.minimum(hi, (j1 - 1)[:, None])
+              - np.maximum(lo, j0[:, None]) + 1)
+    valid = (slot >= sched.first[:, None]) & (slot <= sched.last[:, None])
+    counts = np.where(valid, np.maximum(counts, 0), 0)
+
+    slot_b = query_slots(sched, q(j1.astype(np.float64))[:, None])[:, 0]
+    tail_dt = b - r(j1.astype(np.float64))
+    return counts, slot_b, tail_dt, j1 >= j0
+
+
+def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:
+    """Reading slot current at wall-clock times ``tq`` [N, K]: the
+    arithmetic index (same ``phase + T·k`` expression that built the
+    grid), settled against the stored tick values and clamped to each
+    device's valid range — identical to ``SensorBank.query``'s indexing.
+    """
+    T = sched.update_period_s[:, None]
+    phase = sched.phase[:, None]
+    m = sched.ticks.shape[1]
+    j = np.floor((tq - phase) / T).astype(np.int64) - sched.k0[:, None]
+    j = np.clip(j, 0, m - 1)
+    # the arithmetic index can be off by one ulp at tick boundaries;
+    # settle it against the actual stored tick values (two passes are
+    # enough: the estimate is within ±1 of the true slot)
+    for _ in range(2):
+        tj = np.take_along_axis(sched.ticks, j, axis=1)
+        j = np.where((tj > tq) & (j > 0), j - 1, j)
+    for _ in range(2):
+        jn = np.minimum(j + 1, m - 1)
+        tn = np.take_along_axis(sched.ticks, jn, axis=1)
+        j = np.where((tn <= tq) & (jn > j), jn, j)
+    return np.clip(j, sched.first[:, None], sched.last[:, None])

@@ -1,0 +1,80 @@
+"""Array containers shared by every execution backend.
+
+:class:`TimelineArrays` is the padded ``[R, S]`` form of a
+:class:`~repro.core.ground_truth.TimelineBank` — a plain ``NamedTuple`` of
+arrays, which makes it a JAX pytree for free: it can be passed straight
+into ``jax.jit``-compiled kernels (leaves trace as ``jnp`` arrays) while
+staying a zero-cost tuple of ``np.ndarray`` views on the NumPy path.
+
+The container carries no behaviour on purpose: backends implement the
+kernels as pure functions over these arrays, so the same signature works
+for NumPy, JAX, and any future array namespace.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class TimelineArrays(NamedTuple):
+    """Padded piecewise-constant traces: ``R`` rows of up to ``S`` segments.
+
+    ``edges`` is ``[R, S+1]`` (non-decreasing per row, padding repeats the
+    final valid edge), ``powers`` ``[R, S]`` (padding holds the row's idle
+    power), ``idle_w`` and ``n_segs`` are ``[R]``.  Invariants are
+    normalised by :class:`~repro.core.ground_truth.TimelineBank`; backends
+    may assume them.
+    """
+
+    edges: np.ndarray
+    powers: np.ndarray
+    idle_w: np.ndarray
+    n_segs: np.ndarray
+
+    @property
+    def n_rows(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def t_start(self) -> np.ndarray:
+        return self.edges[:, 0]
+
+    @property
+    def t_end(self) -> np.ndarray:
+        return self.edges[:, -1]
+
+
+class ReadingSchedule(NamedTuple):
+    """A fleet's published-reading schedule as padded ``[N, M]`` arrays.
+
+    ``ticks`` holds every device's publication instants
+    (``phase + T * k``, leading/trailing slots masked rather than
+    filtered); ``first``/``last`` are each device's first/last valid slot,
+    ``k0`` the tick index of slot 0.  Together with ``phase`` and
+    ``update_period_s`` this is everything a kernel needs to map a
+    wall-clock instant to the reading slot that covers it.
+    """
+
+    ticks: np.ndarray
+    first: np.ndarray
+    last: np.ndarray
+    k0: np.ndarray
+    phase: np.ndarray
+    update_period_s: np.ndarray
+
+
+class PollGrid(NamedTuple):
+    """A uniform ``nvidia-smi -lms``-style poll grid shared by a fleet.
+
+    ``t0`` and ``period_s`` are scalars; ``t1`` is per-device (each scalar
+    sensor's grid ends with its own trial), so device ``i`` owns poll
+    indices ``0 .. floor((t1[i] - t0) / period_s) - 1``.  ``grid_offset``
+    shifts the *reported* timestamps (the §5 re-synchronisation step)
+    while queries still happen at the true wall-clock instant.
+    """
+
+    t0: float
+    t1: np.ndarray
+    period_s: float
+    grid_offset: float = 0.0

@@ -33,10 +33,19 @@ Timelines are *heterogeneous-first*: ``attach`` takes either one shared
 :class:`~repro.core.ground_truth.TimelineBank` giving every device its own
 trace — a fleet where each GPU runs a different job.  Internally both paths
 feed the same three transient kernels; the shared timeline is simply the
-degenerate single-row bank broadcast across devices.  A JAX ``lax.scan``
-drop-in for the logarithmic filter was considered and rejected: JAX defaults
-to float32, which breaks the one-quantum equivalence contract; the
-device-vectorised NumPy scan is within ~2× of it on CPU fleets anyway.
+degenerate single-row bank broadcast across devices.
+
+Execution backends
+------------------
+The transient kernels and the closed-form poll counting are pure array
+functions living in :mod:`repro.core.engine_backend`, with a NumPy
+reference implementation and a ``jax.jit``/``vmap`` implementation
+(``lax.associative_scan`` for the filter recurrence, traced under x64 so
+the one-quantum equivalence contract holds).  Pick one per bank with
+``SensorBank(..., backend="numpy"|"jax"|"auto")``; everything around the
+kernels (RNG streams, schedule layout, quantisation) stays NumPy, so the
+per-device seed contract is backend-independent.  See
+``docs/backends.md``.
 """
 from __future__ import annotations
 
@@ -46,8 +55,9 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import profiles as _profiles
-from repro.core.ground_truth import (ActivityTimeline, TimelineBank,
-                                     batch_searchsorted)
+from repro.core.engine_backend import get_backend, resolve_backend
+from repro.core.engine_backend.pytrees import PollGrid, ReadingSchedule
+from repro.core.ground_truth import ActivityTimeline, TimelineBank
 from repro.core.sensor import (OnboardSensor, SensorProfile,
                                SensorUnsupported, _sum_timelines)
 
@@ -78,9 +88,12 @@ class SensorBank:
     def __init__(self, profile_list: Sequence[SensorProfile],
                  seeds: Optional[Sequence[int]] = None,
                  host_timeline: Optional[ActivityTimeline] = None,
-                 seed_mode: str = "per_device", base_seed: int = 0):
+                 seed_mode: str = "per_device", base_seed: int = 0,
+                 backend: Optional[str] = None):
         if seed_mode not in ("per_device", "fleet"):
             raise ValueError(f"unknown seed_mode '{seed_mode}'")
+        self.backend = resolve_backend(backend)
+        self._be = get_backend(self.backend)
         self.profiles: List[SensorProfile] = list(profile_list)
         n = len(self.profiles)
         if n == 0:
@@ -151,7 +164,8 @@ class SensorBank:
                      seeds: Optional[Sequence[int]] = None,
                      base_seed: int = 0,
                      host_timeline: Optional[ActivityTimeline] = None,
-                     seed_mode: str = "per_device") -> "SensorBank":
+                     seed_mode: str = "per_device",
+                     backend: Optional[str] = None) -> "SensorBank":
         """Build a bank from `profiles.CATALOG` names.
 
         ``names`` is one name (with ``n`` copies) or an explicit per-device
@@ -165,7 +179,7 @@ class SensorBank:
         if seeds is None:
             seeds = np.arange(len(prof)) + base_seed
         return cls(prof, seeds=seeds, host_timeline=host_timeline,
-                   seed_mode=seed_mode)
+                   seed_mode=seed_mode, backend=backend)
 
     # -- introspection ----------------------------------------------------
     @property
@@ -202,8 +216,26 @@ class SensorBank:
         nb.profiles = [self.profiles[i] for i in idx]
         nb.host_timeline = self.host_timeline
         nb.seed_mode = self.seed_mode
+        nb.backend = self.backend
+        nb._be = self._be
         for f in self._ROW_FIELDS:
             setattr(nb, f, getattr(self, f)[idx])
+        nb._ticks = nb._values = nb._first = nb._last = nb._k0 = None
+        return nb
+
+    def with_backend(self, backend: Optional[str]) -> "SensorBank":
+        """The same bank rows (hidden params shared, not re-drawn) bound
+        to another execution backend.  The reading schedule is reset — a
+        backend choice must never leak a stale schedule computed by the
+        other implementation."""
+        nb = object.__new__(SensorBank)
+        nb.profiles = self.profiles
+        nb.host_timeline = self.host_timeline
+        nb.seed_mode = self.seed_mode
+        nb.backend = resolve_backend(backend)
+        nb._be = get_backend(nb.backend)
+        for f in self._ROW_FIELDS:
+            setattr(nb, f, getattr(self, f))
         nb._ticks = nb._values = nb._first = nb._last = nb._k0 = None
         return nb
 
@@ -306,13 +338,15 @@ class SensorBank:
                     tl = bank_tl.rows(rr)
                 t_eval = ticks[rr] - s[rr, None]
                 if kind == "boxcar":
-                    raw[rr] = tl.mean_power(t_eval - self.window_s[rr, None],
-                                            t_eval)
+                    raw[rr] = self._be.boxcar_means(
+                        tl.arrays, t_eval - self.window_s[rr, None], t_eval)
                 elif kind == "estimation":
-                    raw[rr] = (tl.mean_power(t_eval - T[rr, None], t_eval)
-                               * self._model_gain[rr, None])
+                    raw[rr] = self._be.estimation_means(
+                        tl.arrays, t_eval - T[rr, None], t_eval,
+                        self._model_gain[rr])
                 else:
-                    raw[rr] = _log_filter_bank(tl, t_eval, self.tau_s[rr])
+                    raw[rr] = self._be.log_filter(tl.arrays, t_eval,
+                                                  self.tau_s[rr])
 
         vals = self._gain[:, None] * raw + self._offset[:, None]
         vals = vals + self._noise(m, first, count)
@@ -342,14 +376,21 @@ class SensorBank:
         return out
 
     # -- query API --------------------------------------------------------
+    @property
+    def _schedule(self) -> ReadingSchedule:
+        """The attached reading schedule as the backend pytree."""
+        if self._ticks is None:
+            raise RuntimeError("bank not attached to a timeline")
+        return ReadingSchedule(self._ticks, self._first, self._last,
+                               self._k0, self._phase, self.update_period_s)
+
     def query(self, t: Union[float, np.ndarray]) -> np.ndarray:
         """Latest published reading per device at time(s) ``t``.
 
         ``t`` may be a scalar (returns [N]), a shared [K] query grid
         (returns [N, K]), or per-device times [N, K].
         """
-        if self._ticks is None:
-            raise RuntimeError("bank not attached to a timeline")
+        sched = self._schedule
         t = np.asarray(t, dtype=np.float64)
         scalar = (t.ndim == 0)
         if t.ndim <= 1:
@@ -360,22 +401,7 @@ class SensorBank:
         else:
             raise ValueError(f"bad query shape {t.shape}")
 
-        T = self.update_period_s[:, None]
-        phase = self._phase[:, None]
-        m = self._ticks.shape[1]
-        j = np.floor((tq - phase) / T).astype(np.int64) - self._k0[:, None]
-        j = np.clip(j, 0, m - 1)
-        # the arithmetic index can be off by one ulp at tick boundaries;
-        # settle it against the actual stored tick values (two passes are
-        # enough: the estimate is within ±1 of the true slot)
-        for _ in range(2):
-            tj = np.take_along_axis(self._ticks, j, axis=1)
-            j = np.where((tj > tq) & (j > 0), j - 1, j)
-        for _ in range(2):
-            jn = np.minimum(j + 1, m - 1)
-            tn = np.take_along_axis(self._ticks, jn, axis=1)
-            j = np.where((tn <= tq) & (jn > j), jn, j)
-        j = np.clip(j, self._first[:, None], self._last[:, None])
+        j = self._be.query_slots(sched, tq)
         out = np.take_along_axis(self._values, j, axis=1)
         return out[:, 0] if scalar else out
 
@@ -424,114 +450,27 @@ class SensorBank:
         may be per-device (each scalar sensor's grid ends with its own
         trial).
         """
-        if self._ticks is None:
-            raise RuntimeError("bank not attached to a timeline")
+        sched = self._schedule
         n = self.n_devices
         a = _as_array(a, n)
         b = _as_array(b, n)
-        # per-device poll ends reproduce each scalar sensor's finite grid
-        m_i = np.floor((_as_array(poll_t1, n) - poll_t0)
-                       / period_s).astype(np.int64)
-
-        def q(idx):
-            # true wall-clock query instant, same expression as poll()
-            return poll_t0 + period_s * idx
-
-        def r(idx):
-            # reported (possibly re-synchronised) poll timestamp
-            return (poll_t0 + period_s * idx) + grid_offset
-
-        # per-device selected index range [j0, j1] on the shared grid,
-        # settling FP boundary cases against the actual grid values
-        j0 = np.ceil((a - grid_offset - poll_t0) / period_s).astype(np.int64)
-        j1 = np.floor((b - grid_offset - poll_t0) / period_s).astype(np.int64)
-        for _ in range(2):
-            j0 = np.where(r(j0 - 1) >= a, j0 - 1, j0)
-            j0 = np.where(r(j0) < a, j0 + 1, j0)
-            j1 = np.where(r(j1 + 1) <= b, j1 + 1, j1)
-            j1 = np.where(r(j1) > b, j1 - 1, j1)
-        j0 = np.maximum(j0, 0)
-        j1 = np.minimum(j1, m_i - 1)
-
-        ticks = self._ticks
-        m = ticks.shape[1]
-        slot = np.arange(m)[None, :]
-        # lo[k]: first poll index whose reading is slot k, i.e. smallest j
-        # with q(j) >= tick_k (two FP settling passes, like query())
-        lo = np.ceil((ticks - poll_t0) / period_s).astype(np.int64)
-        for _ in range(2):
-            lo = np.where(q(lo - 1) >= ticks, lo - 1, lo)
-            lo = np.where(q(lo) < ticks, lo + 1, lo)
-        hi = np.concatenate([lo[:, 1:] - 1,
-                             np.full((n, 1), np.iinfo(np.int64).max // 2)],
-                            axis=1)
-        # query() clamps to [first, last]: the first reading extends back to
-        # -inf, the last forward to +inf
-        lo = np.where(slot == self._first[:, None], np.int64(0), lo)
-        hi = np.where(slot == self._last[:, None],
-                      np.iinfo(np.int64).max // 2, hi)
-        count = (np.minimum(hi, (j1 - 1)[:, None])
-                 - np.maximum(lo, j0[:, None]) + 1)
-        valid = (slot >= self._first[:, None]) & (slot <= self._last[:, None])
-        count = np.where(valid, np.maximum(count, 0), 0)
+        grid = PollGrid(float(poll_t0), _as_array(poll_t1, n),
+                        float(period_s), float(grid_offset))
+        # the closed-form poll counting is the backend kernel; the
+        # (cheap) weighted contraction below stays NumPy so ``transform``
+        # may be any Python callable over the reading matrix
+        counts, slot_b, tail_dt, nonempty = self._be.poll_counts(
+            sched, grid, a, b)
 
         vals = self._values
         if transform is not None:
             vals = transform(vals)
-        total = np.sum(vals * count, axis=1) * period_s
+        total = np.sum(vals * counts, axis=1) * period_s
 
         # final poll instant integrates over the partial step b - r(j1)
-        nonempty = j1 >= j0
-        vb = self.query(q(j1.astype(np.float64))[:, None])[:, 0]
-        if transform is not None:
-            vb = transform(vb)
-        total += np.where(nonempty, vb * (b - r(j1.astype(np.float64))), 0.0)
+        vb = np.take_along_axis(vals, slot_b[:, None], axis=1)[:, 0]
+        total += np.where(nonempty, vb * tail_dt, 0.0)
         return np.where(nonempty, total, 0.0)
-
-
-def _log_filter_bank(bank: TimelineBank, ticks: np.ndarray,
-                     tau: np.ndarray) -> np.ndarray:
-    """Batched first-order filter y' = (P - y)/tau for G devices.
-
-    The scalar ``OnboardSensor._filtered_at`` walks the piecewise-constant
-    segments in a per-device Python loop; here one scan advances a vector
-    of G filter states per step.  With a shared timeline (single-row bank)
-    the loop length is the number of timeline edges — independent of fleet
-    size; with per-device rows the scan walks each row's own padded edge
-    sequence, masking the zero-width padding steps so the state carries
-    through unchanged.  Before the first real edge the state is exactly
-    ``idle_w`` (the ``t_lo`` padding only ever covers idle), so readings
-    are bitwise identical to the scalar filter for any padding choice.
-    """
-    g, _ = ticks.shape
-    tau = np.asarray(tau, dtype=np.float64)
-    t_lo = (min(float(np.min(ticks)), float(np.min(bank.t_start)))
-            - 5.0 * float(np.max(tau)))
-    t_hi = max(float(np.max(ticks)), float(np.max(bank.t_end))) + 1e-9
-    r = bank.n_rows
-    ext_e = np.concatenate([np.full((r, 1), t_lo), bank.edges,
-                            np.full((r, 1), t_hi)], axis=1)
-    ext_p = np.concatenate([bank.idle_w[:, None], bank.powers,
-                            bank.idle_w[:, None]], axis=1)
-    n_seg = ext_p.shape[1]
-    dts = np.diff(ext_e, axis=1)
-
-    y = np.empty((g, n_seg + 1))
-    y[:, 0] = np.broadcast_to(bank.idle_w, (g,))
-    for i in range(n_seg):
-        dt = dts[:, i]
-        sp = ext_p[:, i]
-        step = sp + (y[:, i] - sp) * np.exp(-dt / tau)
-        y[:, i + 1] = np.where(dt > 0, step, y[:, i])
-
-    idx = np.clip(batch_searchsorted(ext_e, ticks, side="right") - 1,
-                  0, n_seg - 1)
-    y_at = np.take_along_axis(y, idx, axis=1)
-    sp_at = np.take_along_axis(np.broadcast_to(ext_p, (g, n_seg)), idx,
-                               axis=1)
-    e_at = np.take_along_axis(np.broadcast_to(ext_e, (g, n_seg + 1)), idx,
-                              axis=1)
-    return sp_at + (y_at - sp_at) * np.exp(-(ticks - e_at) / tau[:, None])
 
 
 # ---------------------------------------------------------------------------
@@ -612,7 +551,8 @@ class FleetAuditResult:
 def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
                 workload=None, seed: int = 0,
                 good_practice: bool = False, n_trials: int = 2,
-                seed_mode: str = "per_device") -> FleetAuditResult:
+                seed_mode: str = "per_device",
+                backend: Optional[str] = None) -> FleetAuditResult:
     """Monte-Carlo audit: N devices, each with hidden gain/offset/phase,
     measure naively (and optionally with the §5 protocol) and return the
     per-device error distribution.
@@ -622,6 +562,10 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
     workloads — a mixed fleet where every device runs its own job (see
     :func:`repro.core.load.mixed_fleet_workloads`) and the error spread
     becomes a function of workload shape, not just seed noise.
+
+    ``backend`` selects the execution backend for the array kernels
+    (``"numpy"`` default / ``"jax"`` / ``"auto"``); results agree within
+    one reporting quantum, so error statistics are backend-independent.
 
     10,000 devices run in seconds: everything after bank construction is
     [N, M] array arithmetic.
@@ -640,7 +584,8 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
              else list(profile))
     if len(names) != n_devices:
         raise ValueError(f"{len(names)} profile names for {n_devices} devices")
-    bank = SensorBank.from_catalog(names, base_seed=seed, seed_mode=seed_mode)
+    bank = SensorBank.from_catalog(names, base_seed=seed, seed_mode=seed_mode,
+                                   backend=backend)
 
     ws = as_workload_set(workload, n_devices)
     if ws is None:

@@ -28,6 +28,9 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.common.config import Config
+from repro.core.engine_backend.numpy_backend import (
+    searchsorted_rows as batch_searchsorted, timeline_integral)
+from repro.core.engine_backend.pytrees import TimelineArrays
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,39 +160,10 @@ def from_segments(segments: Iterable[Tuple[float, float]],
     return ActivityTimeline(np.asarray(edges), np.asarray(powers), idle_w)
 
 
-def batch_searchsorted(a: np.ndarray, v: np.ndarray,
-                       side: str = "right") -> np.ndarray:
-    """Row-wise ``np.searchsorted``: sorted rows ``a`` [R, S] against query
-    rows ``v`` [G, M], where R == G or R == 1 (row broadcast).
-
-    A fixed-iteration vectorised binary search with *exact* comparisons —
-    no offset/flattening tricks that would perturb float values — so the
-    result is bitwise what ``np.searchsorted(a[i], v[i], side)`` returns
-    per row.  Cost is ``ceil(log2 S)`` gather passes over [G, M].
-    """
-    if side not in ("left", "right"):
-        raise ValueError(f"bad side '{side}'")
-    a = np.asarray(a)
-    v = np.asarray(v)
-    r, s = a.shape
-    g = v.shape[0]
-    if r not in (1, g):
-        raise ValueError(f"cannot broadcast {r} rows against {g} queries")
-    if r == 1 and g > 1:
-        a = np.broadcast_to(a, (g, s))
-    lo = np.zeros(v.shape, dtype=np.int64)
-    hi = np.full(v.shape, s, dtype=np.int64)
-    for _ in range(int(np.ceil(np.log2(max(s, 2)))) + 1):
-        active = lo < hi
-        if not np.any(active):
-            break
-        mid = (lo + hi) >> 1
-        # mid < s wherever active; the clip only feeds settled lanes
-        amid = np.take_along_axis(a, np.minimum(mid, s - 1), axis=1)
-        go = (amid <= v) if side == "right" else (amid < v)
-        lo = np.where(active & go, mid + 1, lo)
-        hi = np.where(active & ~go, mid, hi)
-    return lo
+# Row-wise exact binary search now lives with the other pure array
+# kernels in the backend package; re-exported here because this is its
+# historical home and the substrate's tests pin its bitwise contract.
+# (`batch_searchsorted` is `engine_backend.numpy_backend.searchsorted_rows`.)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,6 +272,13 @@ class TimelineBank:
         return self.edges.shape[0]
 
     @property
+    def arrays(self) -> TimelineArrays:
+        """The padded array (pytree) view consumed by the execution
+        backends (:mod:`repro.core.engine_backend`) — zero-copy."""
+        return TimelineArrays(self.edges, self.powers, self.idle_w,
+                              self.n_segs)
+
+    @property
     def t_start(self) -> np.ndarray:
         return self.edges[:, 0]
 
@@ -364,37 +345,21 @@ class TimelineBank:
         out = np.where(inside, vals, idle[:, None])
         return out.reshape(out_shape)
 
-    def _cum_energy(self) -> np.ndarray:
-        seg = self.powers * np.diff(self.edges, axis=1)
-        return np.concatenate(
-            [np.zeros((self.n_rows, 1)), np.cumsum(seg, axis=1)], axis=1)
-
     def integral(self, t0, t1) -> np.ndarray:
-        """Exact per-row ∫P_i dt over [t0_i, t1_i], idle outside coverage."""
+        """Exact per-row ∫P_i dt over [t0_i, t1_i], idle outside coverage.
+
+        The array math lives in the backend kernel
+        (:func:`repro.core.engine_backend.numpy_backend.timeline_integral`)
+        shared with the fleet engine; this method only normalises query
+        shapes."""
         tq0, sh0 = self._prep(t0)
         tq1, sh1 = self._prep(t1)
         tq0, tq1 = np.broadcast_arrays(tq0, tq1)
         out_shape = sh1 if len(sh1) >= len(sh0) else sh0
-        g = tq0.shape[0]
-        e, p, idle, ns = self._row_arrays(g)
-        cum = self._cum_energy()
-        if cum.shape[0] != g:
-            cum = np.broadcast_to(cum, (g, cum.shape[1]))
-        first = e[:, 0][:, None]
-        last = e[:, -1][:, None]
-        hi_idx = np.maximum(ns - 1, 0)[:, None]
-
-        def eval_I(t):
-            tc = np.clip(t, first, last)
-            idx = np.clip(batch_searchsorted(e, tc, "right") - 1, 0, hi_idx)
-            inner = (np.take_along_axis(cum, idx, axis=1)
-                     + np.take_along_axis(p, idx, axis=1)
-                     * (tc - np.take_along_axis(e, idx, axis=1)))
-            before = np.minimum(t - first, 0.0) * idle[:, None]
-            after = np.maximum(t - last, 0.0) * idle[:, None]
-            return inner + before + after
-
-        return (eval_I(tq1) - eval_I(tq0)).reshape(out_shape)
+        if self.n_rows not in (1, tq0.shape[0]):
+            raise ValueError(f"{tq0.shape[0]} query rows for "
+                             f"{self.n_rows} bank rows")
+        return timeline_integral(self.arrays, tq0, tq1).reshape(out_shape)
 
     def mean_power(self, t0, t1) -> np.ndarray:
         dt = np.maximum(np.asarray(t1, dtype=np.float64)

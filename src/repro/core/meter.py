@@ -376,7 +376,8 @@ def measure_naive_batch(bank: "SensorBank",
                                         WorkloadSet],
                         start_offset_s: float = 0.3,
                         host_baseline_w: Optional[float] = None,
-                        poll_period_s: float = 0.001) -> np.ndarray:
+                        poll_period_s: float = 0.001,
+                        backend: Optional[str] = None) -> np.ndarray:
     """Batched :func:`measure_naive`: every device's sensor integrated at
     once; returns per-device joules [N].
 
@@ -385,8 +386,12 @@ def measure_naive_batch(bank: "SensorBank",
     per-device workloads — a heterogeneous fleet measured in one pass.
     Device ``i`` reproduces ``measure_naive(bank.scalar_reference(i),
     workload_i)`` on its own timeline (with ``host_baseline_w`` passed
-    through for module-scope devices only).
+    through for module-scope devices only).  ``backend`` overrides the
+    bank's execution backend for this measurement
+    (``"numpy"``/``"jax"``/``"auto"``, see :mod:`repro.core.engine_backend`).
     """
+    if backend is not None:
+        bank = bank.with_backend(backend)
     baseline = _check_scope_bank(bank, host_baseline_w)
     base = _baseline_rows(bank, baseline)
     if baseline and np.any(base):
@@ -418,7 +423,8 @@ def measure_good_practice_batch(
         calib: Union[CalibrationRecord, Dict[str, CalibrationRecord]],
         cfg: GoodPracticeConfig = GoodPracticeConfig(),
         host_baseline_w: Optional[float] = None,
-        seeds: Optional[np.ndarray] = None) -> BatchedEnergyEstimate:
+        seeds: Optional[np.ndarray] = None,
+        backend: Optional[str] = None) -> BatchedEnergyEstimate:
     """Batched §5 protocol: each trial dispatches the whole fleet's reading
     matrix at once instead of looping devices.
 
@@ -434,7 +440,11 @@ def measure_good_practice_batch(
     per-device repetition trains are stacked into a
     :class:`TimelineBank` per profile group, and repetition counts, rise
     discards and gap corrections all become per-device vectors.
+    ``backend`` overrides the bank's execution backend for this
+    measurement (the per-profile sub-banks inherit it).
     """
+    if backend is not None:
+        bank = bank.with_backend(backend)
     n = bank.n_devices
     baseline = _check_scope_bank(bank, host_baseline_w)
     ws = as_workload_set(workload, n)

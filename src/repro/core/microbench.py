@@ -37,17 +37,23 @@ def estimate_update_period(sensor: OnboardSensor,
 
     The paper queries at ~1 ms with a 20 ms square-wave load and takes the
     median length of runs of identical readings.
+
+    Only *complete* runs — bounded by a reading change on both sides —
+    enter the median.  The first run starts at the poll grid's origin,
+    not at a reading boundary (the sensor's phase truncates it by up to
+    one period), and the last run is cut off by the capture end; both
+    would bias short captures low.
     """
     wave = loads.square_wave(period_s=0.020,
                              n_cycles=int(duration_s / 0.020),
                              p_high=p_high, p_low=p_low, seed=11)
     sensor.attach(wave, t_end=duration_s)
     ts, vals = sensor.poll(0.0, duration_s, period_s=query_period_s)
-    # run lengths of identical consecutive readings
+    # run lengths of identical consecutive readings, between changes only
     change = np.flatnonzero(np.diff(vals) != 0.0)
-    if len(change) < 3:
+    if len(change) < 4:        # need >= 3 complete runs for a median
         return float("nan")
-    run_lengths = np.diff(np.concatenate([[-1], change]))
+    run_lengths = np.diff(change)
     periods = run_lengths * query_period_s
     return float(np.median(periods))
 

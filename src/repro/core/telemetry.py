@@ -92,15 +92,31 @@ class FleetLedger:
         return SHUNT_TOLERANCE * energy_j
 
     def summary(self) -> FleetSummary:
+        """Fold object-path ledgers and array batches into one summary.
+
+        ``mean_power_w`` treats registered groups as *concurrent*: each
+        group (one per-device ledger, or one registered batch) converts
+        its energy to power over its *own* duration, and the fleet draw
+        is the sum.  Folding with a single shared duration (the previous
+        behaviour used ``max`` across groups) understates every group
+        that ran shorter than the longest one, which skewed both
+        ``mean_power_w`` and the annualised-uncertainty projection
+        whenever merged fleets ran for different durations.
+        """
+        if not self.ledgers and not self._batches:
+            # an empty ledger reports a clean all-zero summary rather
+            # than leaning on div-by-zero guards downstream
+            return FleetSummary(0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
         totals = []
         sigmas = []
-        duration = 0.0
+        mean_p = 0.0
         n_devices = len(self.ledgers)
         for dev, led in self.ledgers.items():
             e = led.total_corrected_j
             totals.append(e)
             sigmas.append(self._device_sigma(dev, e))
-            duration = max(duration, led.total_duration_s)
+            if led.total_duration_s > 0:
+                mean_p += e / led.total_duration_s
         total = float(np.sum(totals)) if totals else 0.0
         sig_sq = float(np.sum(np.square(sigmas))) if sigmas else 0.0
         sig_wc = float(np.sum(sigmas)) if sigmas else 0.0
@@ -109,10 +125,10 @@ class FleetLedger:
             total += float(np.sum(e))
             sig_sq += float(np.sum(np.square(s)))
             sig_wc += float(np.sum(s))
-            duration = max(duration, dur)
+            if dur > 0:
+                mean_p += float(np.sum(e)) / dur
         sig_ind = float(np.sqrt(sig_sq))
         kwh = total / 3.6e6
-        mean_p = total / duration if duration > 0 else 0.0
         # annualised uncertainty if this fleet ran at this mean power all year
         annual_kwh_sigma = (sig_wc / max(total, 1e-9)) * mean_p * 8760.0 / 1000.0
         return FleetSummary(

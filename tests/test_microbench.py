@@ -33,6 +33,54 @@ def test_update_period_property(T, seed):
     assert est == pytest.approx(T, rel=0.2)
 
 
+class _StubSensor:
+    """Duck-typed sensor with a hand-built reading series: readings
+    change at given times, so the estimator's run-length policy can be
+    pinned without seeding luck."""
+
+    def __init__(self, change_times, duration_s):
+        self.change_times = np.asarray(change_times)
+        self.duration_s = duration_s
+
+    def attach(self, timeline, t_end=None):
+        pass
+
+    def poll(self, t0, t1, period_s=0.001):
+        n = int(np.floor((t1 - t0) / period_s))
+        ts = t0 + period_s * np.arange(n)
+        # reading value = number of change times passed (all distinct)
+        vals = np.searchsorted(self.change_times, ts, side="right").astype(
+            np.float64)
+        return ts, vals
+
+
+def test_update_period_uses_complete_runs_only():
+    """Regression: the phase-truncated first run (poll start → first
+    change) and the capture-truncated last run must not enter the median.
+    Complete runs here are [0.1, 0.2, 0.2] s → median 0.2; counting the
+    0.03 s truncated first run used to drag it to 0.15."""
+    s = _StubSensor([0.03, 0.13, 0.33, 0.53], duration_s=0.60)
+    est = microbench.estimate_update_period(s, duration_s=0.60)
+    assert est == pytest.approx(0.2, abs=1e-9)
+
+
+def test_update_period_short_capture_returns_nan():
+    """Fewer than three complete runs cannot support a median: captures
+    whose only extra information is a partial run report nan instead of
+    a phase-biased estimate."""
+    s = _StubSensor([0.03, 0.13, 0.23], duration_s=0.30)
+    assert np.isnan(microbench.estimate_update_period(s, duration_s=0.30))
+
+
+def test_update_period_accurate_on_short_capture():
+    """With the partial runs dropped, even a ~0.75 s capture of a 100 ms
+    sensor lands on T regardless of the hidden phase."""
+    for seed in range(6):
+        s = OnboardSensor(profiles.get("a100"), seed=seed)
+        est = microbench.estimate_update_period(s, duration_s=0.75)
+        assert est == pytest.approx(0.100, rel=0.05)
+
+
 # ---------------------------------------------------------------------------
 # 4.2 transient response
 # ---------------------------------------------------------------------------

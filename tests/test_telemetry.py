@@ -1,4 +1,6 @@
 """Fleet telemetry, ledger persistence, data-centre projection."""
+import json
+
 import numpy as np
 import pytest
 
@@ -60,6 +62,61 @@ def test_calibrated_devices_tighten_fleet_sigma():
         0.01 * 500.0 + 0.05 * 500.0, rel=1e-6)
 
 
+def test_mean_power_weights_per_group_durations():
+    """Regression: merged fleets that ran for different durations must
+    convert energy → power per group.  One batch of 100 J over 10 s
+    (10 W) plus one of 100 J over 100 s (1 W) is an 11 W fleet; the old
+    ``max``-duration fold reported 200 J / 100 s = 2 W."""
+    fleet = FleetLedger()
+    fleet.register_batch(np.array([100.0]), duration_s=10.0)
+    fleet.register_batch(np.array([100.0]), duration_s=100.0)
+    s = fleet.summary()
+    assert s.mean_power_w == pytest.approx(11.0)
+    assert s.total_j == pytest.approx(200.0)
+
+
+def test_mean_power_mixes_object_and_batch_durations():
+    fleet = FleetLedger()
+    led = EnergyLedger(device_id="d0")
+    led.append(0, 0.0, 5.0, 110.0, 100.0, 5.0)      # 100 J over 5 s = 20 W
+    fleet.register(led)
+    fleet.register_batch(np.array([50.0, 50.0]), duration_s=10.0)  # 10 W
+    s = fleet.summary()
+    assert s.mean_power_w == pytest.approx(30.0)
+
+
+def test_annualised_uncertainty_tracks_weighted_power():
+    """The $/yr figure derives from mean power; it must follow the
+    duration-weighted value."""
+    fleet = FleetLedger(price_usd_per_kwh=1.0)
+    fleet.register_batch(np.array([100.0]), duration_s=10.0)
+    fleet.register_batch(np.array([100.0]), duration_s=100.0)
+    s = fleet.summary()
+    expected_kwh = (s.sigma_worstcase_j / s.total_j) * 11.0 * 8760.0 / 1000.0
+    assert s.annual_cost_uncertainty_usd == pytest.approx(expected_kwh)
+
+
+def test_empty_ledger_summary_is_all_zero():
+    s = FleetLedger().summary()
+    assert s.n_devices == 0
+    assert s.total_j == 0.0
+    assert s.mean_power_w == 0.0
+    assert s.kwh == 0.0
+    assert s.cost_usd == 0.0
+    assert s.sigma_independent_j == 0.0
+    assert s.sigma_worstcase_j == 0.0
+    assert s.annual_cost_uncertainty_usd == 0.0
+
+
+def test_zero_duration_batches_contribute_no_power():
+    """duration_s=0 (unknown runtime) registers energy but no power."""
+    fleet = FleetLedger()
+    fleet.register_batch(np.array([100.0]))
+    s = fleet.summary()
+    assert s.total_j == pytest.approx(100.0)
+    assert s.mean_power_w == 0.0
+
+
 def test_datacenter_projection_order_of_magnitude():
     """The paper's headline: 10k GPUs × ±5 % of 700 W ≈ $1M/yr."""
     proj = datacenter_projection(n_gpus=10_000, tdp_w=700.0, gain_tol=0.05,
@@ -79,6 +136,37 @@ def test_calibration_store_roundtrip(tmp_path):
     assert got is not None
     assert got.gain == pytest.approx(0.96)
     assert got.sampled_fraction == pytest.approx(0.25)
+
+
+def test_from_json_tolerates_schema_drift():
+    """Regression: persisted stores outlive the code that wrote them.
+    A record with a removed (unknown) field, or written before a field
+    with a default existed, must still load."""
+    rec = CalibrationRecord("dev1", "a100", 0.1, 0.025, "instant", 0.25,
+                            gain=0.97, sampled_fraction=0.25)
+    d = json.loads(rec.to_json())
+    d["retired_field"] = 123            # forward-compat: field was removed
+    del d["sampled_fraction"]           # backward-compat: field was added
+    del d["created_at"]
+    got = CalibrationRecord.from_json(json.dumps(d))
+    assert got.device_id == "dev1"
+    assert got.gain == pytest.approx(0.97)
+    assert got.sampled_fraction == 1.0  # dataclass default
+    assert got.created_at == 0.0
+    assert not hasattr(got, "retired_field")
+
+
+def test_from_json_missing_required_field_raises():
+    rec = CalibrationRecord("dev1", "a100", 0.1, 0.025, "instant", 0.25)
+    d = json.loads(rec.to_json())
+    del d["update_period_s"]            # required: no dataclass default
+    with pytest.raises(ValueError, match="update_period_s"):
+        CalibrationRecord.from_json(json.dumps(d))
+
+
+def test_from_json_rejects_non_object():
+    with pytest.raises(ValueError, match="JSON object"):
+        CalibrationRecord.from_json("[1, 2, 3]")
 
 
 def test_store_characterises_once(tmp_path):
