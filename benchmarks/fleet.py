@@ -9,10 +9,17 @@ trajectory has data points.
 Backend comparison (ISSUE 3): the same heterogeneous naive audit is
 timed under every selected execution backend
 (:mod:`repro.core.engine_backend`), then the jax backend runs a
-fleet-scale audit (100k devices by default).  CLI::
+fleet-scale audit (100k devices by default).
+
+Array-native synthesis + streaming audits (ISSUE 4): workload
+generation uses the bank-native samplers (`mixed_fleet_workloads(...,
+as_bank=True)`), timed against the per-device object path; the
+``--mega-devices`` run audits a million-device heterogeneous fleet in
+bounded-memory slabs (`fleet_audit(workload=FleetScenarioSpec(...),
+chunk_devices=...)`).  CLI::
 
     python benchmarks/fleet.py --backend both --n-devices 10000 \
-        --scale-devices 100000
+        --scale-devices 100000 --mega-devices 1000000
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from repro.core.telemetry import FleetLedger, datacenter_projection
 
 N_DEVICES = 10_000
 SCALE_DEVICES = 100_000
+MEGA_CHUNK = 100_000
 JSON_PATH = os.environ.get("BENCH_FLEET_JSON", "BENCH_fleet.json")
 
 
@@ -60,6 +68,13 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--scale-devices", type=int, default=SCALE_DEVICES,
                     help="fleet size for the jax-backend scale audit "
                          f"(default {SCALE_DEVICES}; 0 disables)")
+    ap.add_argument("--mega-devices", type=int, default=0,
+                    help="fleet size for the chunked streaming audit "
+                         "(default 0 = disabled; the committed "
+                         "BENCH_fleet.json uses 1000000)")
+    ap.add_argument("--mega-chunk", type=int, default=MEGA_CHUNK,
+                    help=f"device slab size for --mega-devices "
+                         f"(default {MEGA_CHUNK})")
     return ap.parse_args(argv)
 
 
@@ -136,10 +151,18 @@ def run(argv=None) -> None:
 
     # heterogeneous path: every device its own timeline (mixed scenarios:
     # training pods, Poisson inference serving, idle/maintenance, diurnal)
+    # — synthesised array-natively (ISSUE 4), timed against the
+    # per-device-object path it replaced (same timelines bitwise)
     t0 = time.perf_counter()
-    ws = WorkloadSet(loads.mixed_fleet_workloads(n, seed=7))
-    ws.timeline_bank      # stack the [N, S] substrate outside the audits
+    ws_obj = WorkloadSet(loads.mixed_fleet_workloads(n, seed=7))
+    ws_obj.timeline_bank  # stack the [N, S] substrate outside the audits
+    wall_gen_obj = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ws = loads.mixed_fleet_workloads(n, seed=7, as_bank=True)
     wall_gen = time.perf_counter() - t0
+    emit(f"fleet_audit/workload_gen_{n}", wall_gen * 1e6 / n,
+         f"bank_s={wall_gen:.3f};objects_s={wall_gen_obj:.3f};"
+         f"speedup={wall_gen_obj / max(wall_gen, 1e-9):.1f}x")
     # naive-only pass first (same seeds → identical naive results), so
     # each metric's us-per-device reflects only its own protocol's cost
     t0 = time.perf_counter()
@@ -192,24 +215,96 @@ def run(argv=None) -> None:
              f"wall_s_cold={wall_cold:.2f}")
 
     # -- jax at fleet scale: the ROADMAP's 100k-device heterogeneous audit
+    scale_stats = None
     if "jax" in backends and args.scale_devices > 0:
         ns = args.scale_devices
         t0 = time.perf_counter()
-        ws_scale = WorkloadSet(loads.mixed_fleet_workloads(ns, seed=7))
-        ws_scale.timeline_bank
+        ws_scale = loads.mixed_fleet_workloads(ns, seed=7, as_bank=True)
         wall_gen_s = time.perf_counter() - t0
+        # the object path this replaced, for the ISSUE 4 ≥10× criterion
+        t0 = time.perf_counter()
+        WorkloadSet(loads.mixed_fleet_workloads(ns, seed=7)).timeline_bank
+        wall_gen_obj_s = time.perf_counter() - t0
         wall_scale, res_scale = _audit_stats(
             ns, _profile_names(ns), ws_scale, "jax")
-        backend_stats["jax"]["scale"] = {
+        scale_stats = {
             "n_devices": ns,
             "wall_s_workload_gen": round(wall_gen_s, 4),
+            "wall_s_workload_gen_objects": round(wall_gen_obj_s, 4),
+            "workload_gen_speedup": round(
+                wall_gen_obj_s / max(wall_gen_s, 1e-9), 1),
             "wall_s": round(wall_scale, 4),
             "devices_per_sec": round(ns / wall_scale, 1),
             "naive_mean_abs_err": res_scale.stats()["mean_abs_err"],
         }
+        backend_stats["jax"]["scale"] = scale_stats
         emit(f"fleet_audit/backend_jax_scale_{ns}", wall_scale * 1e6 / ns,
              f"devices_per_sec={round(ns / wall_scale, 1)};"
-             f"wall_s={wall_scale:.2f}")
+             f"wall_s={wall_scale:.2f};"
+             f"gen_speedup={scale_stats['workload_gen_speedup']}x")
+
+        # chunked-vs-unchunked consistency at a reduced size (streaming
+        # moments merge across ragged slabs; per-device within float
+        # accumulation of the padded grids)
+        nc = min(ns, 10_000)
+        spec_c = loads.FleetScenarioSpec(n=nc, seed=7)
+        ref_c = fleet_audit(nc, profile=_profile_names(nc), workload=spec_c)
+        t0 = time.perf_counter()
+        got_c = fleet_audit(nc, profile=_profile_names(nc), workload=spec_c,
+                            chunk_devices=max(nc // 8, 1))
+        wall_chunked = time.perf_counter() - t0
+        dev = float(np.max(np.abs(got_c.naive_j - ref_c.naive_j)
+                           / np.abs(ref_c.naive_j)))
+        sm_delta = abs(got_c.streamed["naive"]["overall"]["mean_abs_err"]
+                       - got_c.stats()["mean_abs_err"])
+        emit(f"fleet_audit/chunked_consistency_{nc}",
+             wall_chunked * 1e6 / nc,
+             f"max_rel_dev_vs_unchunked={dev:.3e};"
+             f"streamed_vs_exact_mean_abs={sm_delta:.3e}")
+        chunk_block = {
+            "n_devices": nc,
+            "chunk_devices": max(nc // 8, 1),
+            "wall_s": round(wall_chunked, 4),
+            "max_rel_dev_vs_unchunked": dev,
+            "streamed_vs_exact_mean_abs": sm_delta,
+        }
+    else:
+        chunk_block = None
+
+    # -- streaming million-device audit: FleetScenarioSpec slabs keep
+    # peak memory bounded regardless of fleet size (ISSUE 4)
+    mega_block = None
+    if args.mega_devices > 0:
+        import resource      # Unix-only; needed for this block alone
+        nm = args.mega_devices
+        chunk = min(args.mega_chunk, nm)
+        # cyclic profile mix keeps every slab heterogeneous
+        pattern = ["a100", "a100", "h100_instant", "v100"]
+        names_m = [pattern[i % 4] for i in range(nm)]
+        spec = loads.FleetScenarioSpec(n=nm, seed=7)
+        rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        t0 = time.perf_counter()
+        res_m = fleet_audit(nm, profile=names_m, workload=spec,
+                            chunk_devices=chunk)
+        wall_m = time.perf_counter() - t0
+        rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        st_m = res_m.stats()
+        mega_block = {
+            "n_devices": nm,
+            "chunk_devices": chunk,
+            "n_chunks": (nm + chunk - 1) // chunk,
+            "wall_s": round(wall_m, 2),
+            "devices_per_sec": round(nm / wall_m, 1),
+            "peak_rss_mb": round(rss1 / 1024.0, 1),
+            "peak_rss_before_mb": round(rss0 / 1024.0, 1),
+            "naive": st_m,
+            "by_scenario_streamed":
+                res_m.streamed["naive"]["by_scenario"],
+        }
+        emit(f"fleet_audit/mega_{nm}", wall_m * 1e6 / nm,
+             f"devices_per_sec={round(nm / wall_m, 1)};"
+             f"wall_s={wall_m:.1f};chunks={mega_block['n_chunks']};"
+             f"peak_rss_mb={mega_block['peak_rss_mb']}")
 
     payload = {
         "n_devices": n,
@@ -225,6 +320,9 @@ def run(argv=None) -> None:
         },
         "heterogeneous": {
             "wall_s_workload_gen": round(wall_gen, 4),
+            "wall_s_workload_gen_objects": round(wall_gen_obj, 4),
+            "workload_gen_speedup": round(
+                wall_gen_obj / max(wall_gen, 1e-9), 1),
             "wall_s_naive": round(wall_naive_h, 4),
             "wall_s_total": round(wall_hetero, 4),
             "devices_per_sec": round(n / wall_hetero, 1),
@@ -238,6 +336,10 @@ def run(argv=None) -> None:
         },
         "hetero_over_shared_wall": round(ratio, 3),
     }
+    if chunk_block is not None:
+        payload["chunked"] = chunk_block
+    if mega_block is not None:
+        payload["mega"] = mega_block
     with open(JSON_PATH, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")

@@ -17,6 +17,12 @@ pytree containers in :mod:`~repro.core.engine_backend.pytrees`
 (``TimelineArrays``, ``ReadingSchedule``, ``PollGrid``).  Select one with
 ``SensorBank(..., backend="jax")`` / ``fleet_audit(..., backend="auto")``
 or grab it directly via :func:`get_backend`.  See ``docs/backends.md``.
+
+The package also hosts :mod:`~repro.core.engine_backend.vecrng` — N
+lock-step per-seed RNG streams, bitwise-compatible with
+``np.random.default_rng`` — the substrate of the array-native workload
+synthesis and the engine's vectorized noise/jitter draws
+(``docs/scaling.md``).
 """
 from __future__ import annotations
 

@@ -246,3 +246,23 @@ def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:
     with enable_x64():
         return np.asarray(_query_slots_impl(
             sched, jnp.asarray(tq, jnp.float64)))
+
+
+@jax.jit
+def _err_moments_impl(e):
+    mean = jnp.mean(e)
+    ae = jnp.abs(e)
+    return mean, jnp.sum((e - mean) ** 2), jnp.mean(ae), jnp.max(ae)
+
+
+def err_moments(e: np.ndarray):
+    """One slab's ``(count, mean, M2, mean_abs, max_abs)`` reduction (see
+    the numpy backend) as a fused jitted kernel."""
+    e = np.asarray(e, dtype=np.float64)
+    if e.size == 0:
+        return 0, 0.0, 0.0, 0.0, 0.0
+    with enable_x64():
+        mean, m2, mean_abs, max_abs = _err_moments_impl(
+            jnp.asarray(e, jnp.float64))
+    return (int(e.size), float(mean), float(m2), float(mean_abs),
+            float(max_abs))

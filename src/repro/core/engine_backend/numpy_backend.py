@@ -258,6 +258,22 @@ def poll_counts(sched: ReadingSchedule, grid: PollGrid, a: np.ndarray,
     return counts, slot_b, tail_dt, j1 >= j0
 
 
+def err_moments(e: np.ndarray) -> Tuple[int, float, float, float, float]:
+    """One slab's error-moment reduction for the streaming fleet audit:
+    ``(count, mean, M2, mean_abs, max_abs)``.  Slabs merge by Chan's
+    parallel-Welford update (:class:`repro.core.fleet_engine.\
+StreamingMoments`), so a chunked audit never reduces over all N errors
+    at once."""
+    e = np.asarray(e, dtype=np.float64)
+    n = int(e.size)
+    if n == 0:
+        return 0, 0.0, 0.0, 0.0, 0.0
+    mean = float(np.mean(e))
+    m2 = float(np.sum((e - mean) ** 2))
+    ae = np.abs(e)
+    return n, mean, m2, float(np.mean(ae)), float(np.max(ae))
+
+
 def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:
     """Reading slot current at wall-clock times ``tq`` [N, K]: the
     arithmetic index (same ``phase + T·k`` expression that built the

@@ -1,0 +1,581 @@
+"""Vectorized per-seed RNG streams, bitwise-compatible with numpy.
+
+Every per-device randomness contract in this repo is expressed as "device
+``i`` draws from ``np.random.default_rng(seed_i)``" — hidden sensor
+parameters, reading noise, poll jitter, scenario workload shapes.  The
+scalar form is exact but unbatchable: constructing N ``Generator`` objects
+costs ~15 µs each, which at 100k devices is more wall-time than the whole
+audit they feed (``BENCH_fleet.json`` measured 11.2 s of workload
+synthesis against 7.9 s of audit).
+
+:class:`VecStreams` removes the object-per-device cost without touching
+the numbers: it advances N *independent* PCG64 states in lock-step as
+``[N]`` uint64 arrays, replaying numpy's own algorithms bit-for-bit —
+
+* the ``SeedSequence`` entropy-mixing hash (O'Neill's ``seed_seq_fe``,
+  32-bit arithmetic, vectorized here over seeds);
+* the PCG64 XSL-RR generator (128-bit LCG as hi/lo uint64 pairs with an
+  explicit 64×64→128 multiply);
+* ``next_double`` / ``uniform`` (fixed one-word consumption);
+* the ziggurat ``standard_normal`` / ``standard_exponential`` samplers
+  (variable consumption: rejected lanes retry on their *own* streams
+  while settled lanes stop consuming — acceptance tables in
+  :mod:`._ziggurat` are bit-exact extractions of numpy's compiled
+  constants, see ``tools/gen_vecrng_tables.py``);
+* ``poisson`` (count-by-uniform-products below λ=10, the PTRS transformed
+  rejection above, including numpy's ``loggam`` Stirling evaluation).
+
+Equivalence contract: ``VecStreams(seeds).method(...)`` equals
+``np.random.default_rng(seeds[i]).method(...)`` lane-for-lane, bitwise,
+for every method above (pinned by ``tests/test_vecrng.py``).  Two known
+ulp-level caveats are handled explicitly:
+
+* the ziggurat *tail* paths call libm's ``log1p`` through ``math`` on the
+  (rare, ~3·10⁻⁴) tail lanes — numpy's vectorized ``np.log1p`` ufunc
+  differs from the C scalar ``npy_log1p`` by 1 ulp on ~7 % of inputs,
+  which would desynchronize the stream;
+* acceptance thresholds derived rather than extracted (``ki``/``fe``…)
+  could in principle sit one ulp off numpy's, which only matters for a
+  draw landing exactly on the boundary ulp (~2⁻⁵² per draw).
+
+The wedge/PTRS accept decisions use ``np.exp``/``np.log``; a 1-ulp ufunc
+vs libm difference there flips a comparison only when the two sides agree
+to ~10⁻¹⁶ relative — none observed across the 10⁷-draw parity sweep.
+
+Like the rest of :mod:`repro.core.engine_backend`, this module depends
+only on numpy and sits at the bottom of the dependency graph.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.engine_backend._ziggurat import (EXP_FE, EXP_KE, EXP_WE,
+                                                 NORMAL_FI, NORMAL_KI,
+                                                 NORMAL_WI)
+
+_U32 = np.uint32
+_U64 = np.uint64
+
+# -- SeedSequence constants (numpy/random/bit_generator.pyx) ----------------
+_INIT_A = _U32(0x43b0d7e5)
+_MULT_A = _U32(0x931e8875)
+_INIT_B = _U32(0x8b51f9dd)
+_MULT_B = _U32(0x58f38ded)
+_MIX_MULT_L = _U32(0xca01f9dd)
+_MIX_MULT_R = _U32(0x4973f715)
+_XSHIFT = _U32(16)
+_POOL_SIZE = 4
+
+# -- PCG64 (XSL-RR 128/64) constants ----------------------------------------
+_PCG_MULT_HI = _U64(0x2360ed051fc65da4)
+_PCG_MULT_LO = _U64(0x4385df649fccf645)
+
+_MASK32 = _U64(0xffffffff)
+_INV53 = 1.0 / 9007199254740992.0            # 2**-53
+
+# -- ziggurat scalar constants (numpy's literals) ---------------------------
+NOR_R = 3.6541528853610088                   # ziggurat_nor_r
+NOR_INV_R = 0.2736612373297583               # ziggurat_nor_inv_r == fl(1/R)
+#   (solved against libm log1p over 502 observed tail draws — exact on all)
+EXP_R = 7.697117470131050                    # ziggurat_exp_r
+
+_LOGGAM_A = (8.333333333333333e-02, -2.777777777777778e-03,
+             7.936507936507937e-04, -5.952380952380952e-04,
+             8.417508417508418e-04, -1.917526917526918e-03,
+             6.410256410256410e-03, -2.955065359477124e-02,
+             1.796443723688307e-01, -1.392432216905900e+00)
+_LOG_2PI = 1.8378770664093453e+00
+
+
+def seedseq_state(seeds: np.ndarray, n_words_64: int) -> np.ndarray:
+    """Vectorized ``np.random.SeedSequence(seed).generate_state(n, uint64)``
+    for an ``[N]`` array of integer seeds below 2**64; returns ``[N, n]``.
+
+    Bitwise identical per row (the entropy of an int below 2**32 is one
+    32-bit word; the pool fill pads with zeros, so always hashing a
+    high word — zero where absent — reproduces numpy's variable-length
+    coercion exactly).
+    """
+    seeds = np.asarray(seeds, dtype=np.uint64)
+    n = seeds.shape[0]
+    lo = (seeds & _MASK32).astype(_U32)
+    hi = (seeds >> _U64(32)).astype(_U32)
+    with np.errstate(over="ignore"):
+        hash_const = np.full(n, _INIT_A, dtype=_U32)
+
+        def hashmix(value):
+            nonlocal hash_const
+            value = value ^ hash_const
+            hash_const = hash_const * _MULT_A
+            value = value * hash_const
+            value ^= value >> _XSHIFT
+            return value
+
+        def mix(x, y):
+            r = (x * _MIX_MULT_L) - (y * _MIX_MULT_R)
+            r ^= r >> _XSHIFT
+            return r
+
+        pool = np.zeros((n, _POOL_SIZE), dtype=_U32)
+        pool[:, 0] = hashmix(lo)
+        pool[:, 1] = hashmix(hi)
+        pool[:, 2] = hashmix(np.zeros(n, dtype=_U32))
+        pool[:, 3] = hashmix(np.zeros(n, dtype=_U32))
+        for i_src in range(_POOL_SIZE):
+            for i_dst in range(_POOL_SIZE):
+                if i_src != i_dst:
+                    pool[:, i_dst] = mix(pool[:, i_dst],
+                                         hashmix(pool[:, i_src]))
+
+        hash_const = np.full(n, _INIT_B, dtype=_U32)
+        out32 = np.empty((n, n_words_64 * 2), dtype=_U32)
+        for i_dst in range(n_words_64 * 2):
+            v = pool[:, i_dst % _POOL_SIZE].copy()
+            v ^= hash_const
+            hash_const = hash_const * _MULT_B
+            v = v * hash_const
+            v ^= v >> _XSHIFT
+            out32[:, i_dst] = v
+    o = out32.astype(_U64).reshape(n, n_words_64, 2)
+    return o[:, :, 0] | (o[:, :, 1] << _U64(32))
+
+
+def _mul128(ahi, alo, bhi, blo):
+    """(hi, lo) of ``a * b mod 2**128`` for uint64 hi/lo pairs."""
+    with np.errstate(over="ignore"):
+        a0 = alo & _MASK32
+        a1 = alo >> _U64(32)
+        b0 = blo & _MASK32
+        b1 = blo >> _U64(32)
+        p00 = a0 * b0
+        p01 = a0 * b1
+        p10 = a1 * b0
+        mid = (p00 >> _U64(32)) + (p01 & _MASK32) + (p10 & _MASK32)
+        lo = (p00 & _MASK32) | (mid << _U64(32))
+        hi = (a1 * b1 + (p01 >> _U64(32)) + (p10 >> _U64(32))
+              + (mid >> _U64(32)))
+        hi = hi + alo * bhi + ahi * blo
+    return hi, lo
+
+
+def _add128(ahi, alo, bhi, blo):
+    with np.errstate(over="ignore"):
+        lo = alo + blo
+        hi = ahi + bhi + (lo < alo).astype(_U64)
+    return hi, lo
+
+
+def _output(state_hi, state_lo):
+    """PCG64 XSL-RR output function."""
+    with np.errstate(over="ignore"):
+        rot = state_hi >> _U64(58)
+        x = state_hi ^ state_lo
+        return (x >> rot) | (x << ((_U64(64) - rot) & _U64(63)))
+
+
+class VecStreams:
+    """``[N]`` independent ``default_rng(seed_i)``-equivalent streams.
+
+    Every draw method advances each lane exactly as the scalar generator
+    would — including variable ziggurat/poisson consumption per lane —
+    so interleaving draw kinds keeps lane ``i`` bitwise on
+    ``default_rng(seeds[i])``'s trajectory.  ``mask`` arguments restrict
+    a draw to a subset of lanes; masked-off lanes neither consume nor
+    produce (their output slot is 0).
+    """
+
+    def __init__(self, seeds: np.ndarray):
+        st = seedseq_state(seeds, 4)
+        n = st.shape[0]
+        with np.errstate(over="ignore"):
+            self._inc_hi = (st[:, 2] << _U64(1)) | (st[:, 3] >> _U64(63))
+            self._inc_lo = (st[:, 3] << _U64(1)) | _U64(1)
+        self._hi = np.zeros(n, dtype=_U64)
+        self._lo = np.zeros(n, dtype=_U64)
+        self._step()
+        self._hi, self._lo = _add128(self._hi, self._lo, st[:, 0], st[:, 1])
+        self._step()
+
+    @property
+    def n_lanes(self) -> int:
+        return self._hi.shape[0]
+
+    # -- raw stream -------------------------------------------------------
+    def _step(self, mask: Optional[np.ndarray] = None) -> None:
+        hi, lo = _mul128(self._hi, self._lo, _PCG_MULT_HI, _PCG_MULT_LO)
+        hi, lo = _add128(hi, lo, self._inc_hi, self._inc_lo)
+        if mask is None:
+            self._hi, self._lo = hi, lo
+        else:
+            self._hi = np.where(mask, hi, self._hi)
+            self._lo = np.where(mask, lo, self._lo)
+
+    def _next_raw(self, mask: Optional[np.ndarray] = None) -> np.ndarray:
+        self._step(mask)
+        return _output(self._hi, self._lo)
+
+    def _next_double(self, mask: Optional[np.ndarray] = None) -> np.ndarray:
+        return ((self._next_raw(mask) >> _U64(11)).astype(np.float64)
+                * _INV53)
+
+    # -- lane subsetting (used to retry rejected lanes compactly) ---------
+    def _gather(self, idx: np.ndarray) -> "VecStreams":
+        sub = object.__new__(VecStreams)
+        sub._hi = self._hi[idx]
+        sub._lo = self._lo[idx]
+        sub._inc_hi = self._inc_hi[idx]
+        sub._inc_lo = self._inc_lo[idx]
+        return sub
+
+    def _scatter(self, idx: np.ndarray, sub: "VecStreams") -> None:
+        self._hi[idx] = sub._hi
+        self._lo[idx] = sub._lo
+
+    # -- fixed-consumption draws ------------------------------------------
+    def random(self, mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """One ``Generator.random()`` double per lane."""
+        return self._next_double(mask)
+
+    def uniform(self, low, high,
+                mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """One ``Generator.uniform(low, high)`` per lane; ``low``/``high``
+        may be scalars or ``[N]`` arrays (per-lane bounds)."""
+        low = np.asarray(low, dtype=np.float64)
+        high = np.asarray(high, dtype=np.float64)
+        return low + (high - low) * self._next_double(mask)
+
+    def _bit_transforms(self, n_bits: int):
+        """Affine maps ``state -> A^(2^b)·state + c_b`` for b = 0..n_bits-1
+        (binary lifting, exact mod 2**128).  ``A`` is lane-independent
+        ([1] arrays); ``c`` carries the per-lane increment ([N])."""
+        n = self.n_lanes
+        bits = []
+        ah, al = np.full(1, _PCG_MULT_HI), np.full(1, _PCG_MULT_LO)
+        ch, cl = self._inc_hi.copy(), self._inc_lo.copy()
+        for _ in range(n_bits):
+            bits.append(((ah, al), (ch, cl)))
+            nh, nl = _mul128(np.broadcast_to(ah, (n,)),
+                             np.broadcast_to(al, (n,)), ch, cl)
+            ch, cl = _add128(nh, nl, ch, cl)      # A·c + c
+            ah, al = _mul128(ah, al, ah, al)      # A²
+        return bits
+
+    def _advance(self, counts: np.ndarray) -> None:
+        """Jump lane ``i`` forward by ``counts[i]`` steps (exact)."""
+        counts = np.asarray(counts, dtype=np.int64)
+        if not np.any(counts):
+            return
+        n = self.n_lanes
+        for b, ((pah, pal), (pch, pcl)) in enumerate(
+                self._bit_transforms(int(counts.max()).bit_length())):
+            sel = ((counts >> b) & 1).astype(bool)
+            if not np.any(sel):
+                continue
+            hi, lo = _mul128(np.broadcast_to(pah, (n,)),
+                             np.broadcast_to(pal, (n,)), self._hi, self._lo)
+            hi, lo = _add128(hi, lo, pch, pcl)
+            self._hi = np.where(sel, hi, self._hi)
+            self._lo = np.where(sel, lo, self._lo)
+
+    def raw_block(self, m: int) -> np.ndarray:
+        """``[N, m]`` raw words *without* advancing lane states; column
+        ``j`` is each lane's ``j``-th upcoming word.  Runs in ~2·√(m)
+        lock-step rounds: boundary states every ``stride`` columns are
+        built by repeated stride-step jumps, then ``stride`` single
+        steps advance all boundaries in parallel.  Pure — commit
+        consumption afterwards with :meth:`_advance`.
+        """
+        n = self.n_lanes
+        stride = max(8, min(256, 1 << (max(int(m - 1).bit_length(), 2) // 2)))
+        k = (m + stride - 1) // stride
+        (ah, al), (ch, cl) = self._bit_transforms(
+            stride.bit_length())[stride.bit_length() - 1]
+        bh = np.empty((n, k), dtype=_U64)
+        bl = np.empty((n, k), dtype=_U64)
+        bh[:, 0], bl[:, 0] = self._hi, self._lo
+        for q in range(1, k):
+            hi, lo = _mul128(np.broadcast_to(ah, (n,)),
+                             np.broadcast_to(al, (n,)),
+                             bh[:, q - 1], bl[:, q - 1])
+            bh[:, q], bl[:, q] = _add128(hi, lo, ch, cl)
+        raws = np.empty((stride, n, k), dtype=_U64)
+        inc_h = self._inc_hi[:, None]
+        inc_l = self._inc_lo[:, None]
+        for j in range(stride):
+            hi, lo = _mul128(bh, bl, _PCG_MULT_HI, _PCG_MULT_LO)
+            bh, bl = _add128(hi, lo, inc_h, inc_l)
+            raws[j] = _output(bh, bl)
+        return raws.transpose(1, 2, 0).reshape(n, k * stride)[:, :m]
+
+    def uniform_block(self, low, high, counts) -> np.ndarray:
+        """``[N, M]`` padded uniforms: lane ``i`` consumes ``counts[i]``
+        draws — elementwise equal to
+        ``default_rng(seed_i).uniform(low_i, high_i, size=counts[i])``.
+
+        Uniform draws consume exactly one word each, so the whole block
+        comes from :meth:`raw_block` (~2·√M lock-step rounds instead of
+        an M-round Python loop); lane states end exactly ``counts[i]``
+        steps ahead.  Peak memory is O(N·M); chunk at the call site for
+        very long blocks.
+        """
+        counts = np.asarray(counts, dtype=np.int64)
+        m = int(counts.max()) if counts.size else 0
+        n = self.n_lanes
+        if m == 0:
+            return np.zeros((n, 0))
+        low = np.asarray(low, dtype=np.float64)
+        high = np.asarray(high, dtype=np.float64)
+        if low.ndim == 1:
+            low = low[:, None]
+        if high.ndim == 1:
+            high = high[:, None]
+        raws = self.raw_block(m)
+        u = (raws >> _U64(11)).astype(np.float64) * _INV53
+        out = low + (high - low) * u
+        cols = np.arange(m)[None, :]
+        out[cols >= counts[:, None]] = 0.0
+        self._advance(counts)        # commit exactly counts[i] words/lane
+        return out
+
+    # -- ziggurat samplers ------------------------------------------------
+    def _standard_normal_once(self) -> Tuple[np.ndarray, np.ndarray]:
+        """One ziggurat attempt on every lane; returns (value, settled)."""
+        rr = self._next_raw()
+        idx = (rr & _U64(0xff)).astype(np.int64)
+        rs = rr >> _U64(8)
+        sign = (rs & _U64(1)).astype(bool)
+        rabs = (rs >> _U64(1)) & _U64(0x000fffffffffffff)
+        x = rabs.astype(np.float64) * NORMAL_WI[idx]
+        x = np.where(sign, -x, x)
+        accept = rabs < NORMAL_KI[idx]
+        out = np.where(accept, x, 0.0)
+        done = accept.copy()
+
+        tail = ~accept & (idx == 0)
+        if np.any(tail):
+            t_idx = np.flatnonzero(tail)
+            sub = self._gather(t_idx)
+            t_rabs = rabs[t_idx]
+            val = np.empty(len(t_idx))
+            need = np.ones(len(t_idx), dtype=bool)
+            while np.any(need):
+                u1 = sub._next_double(need)
+                u2 = sub._next_double(need)
+                # libm log1p: np.log1p strays 1 ulp on ~7 % of inputs
+                l1 = np.array([math.log1p(-v) for v in u1])
+                l2 = np.array([math.log1p(-v) for v in u2])
+                xx = -NOR_INV_R * l1
+                yy = -l2
+                ok = need & (yy + yy > xx * xx)
+                v = np.where((t_rabs >> _U64(8)) & _U64(1) != 0,
+                             -(NOR_R + xx), NOR_R + xx)
+                val = np.where(ok, v, val)
+                need &= ~ok
+            self._scatter(t_idx, sub)
+            out[t_idx] = val
+            done[t_idx] = True
+
+        wedge = ~accept & (idx > 0)
+        if np.any(wedge):
+            w_idx = np.flatnonzero(wedge)
+            sub = self._gather(w_idx)
+            u = sub._next_double()
+            self._scatter(w_idx, sub)
+            xi = idx[w_idx]
+            xw = x[w_idx]
+            ok = ((NORMAL_FI[xi - 1] - NORMAL_FI[xi]) * u + NORMAL_FI[xi]
+                  < np.exp(-0.5 * xw * xw))
+            out[w_idx] = np.where(ok, xw, 0.0)
+            done[w_idx] = ok
+        return out, done
+
+    def standard_normal(self, mask: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+        """One ``Generator.standard_normal()`` per lane."""
+        n = self.n_lanes
+        out = np.zeros(n)
+        active = np.arange(n) if mask is None else np.flatnonzero(mask)
+        sub = self._gather(active) if len(active) != n else self
+        while True:
+            vals, done = sub._standard_normal_once()
+            out[active[done]] = vals[done]
+            if np.all(done):
+                break
+            remaining = np.flatnonzero(~done)
+            if sub is not self or len(active) != n:
+                self._scatter(active, sub)   # persist consumed state
+            active = active[remaining]
+            sub = self._gather(active)
+        if sub is not self:
+            self._scatter(active, sub)
+        return out
+
+    def normal(self, scale, mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """One ``Generator.normal(0.0, scale)`` per lane (``loc + scale·z``
+        with ``loc = 0.0``, matching numpy's ``random_normal`` exactly —
+        including the ``0.0 + (-0.0)`` normalisation)."""
+        z = self.standard_normal(mask)
+        return 0.0 + np.asarray(scale, dtype=np.float64) * z
+
+    def normal_block(self, scale, counts) -> np.ndarray:
+        """``[N, M]`` padded normals: lane ``i`` equals
+        ``default_rng(seed_i).normal(0.0, scale_i, size=counts[i])``.
+
+        Normal draws consume a variable number of words (ziggurat
+        rejections), so the block walks column-by-column with per-lane
+        masks — each column is one lock-step vectorized draw.
+        """
+        counts = np.asarray(counts, dtype=np.int64)
+        m = int(counts.max()) if counts.size else 0
+        out = np.zeros((self.n_lanes, m))
+        scale = np.asarray(scale, dtype=np.float64)
+        for j in range(m):
+            mask = counts > j
+            out[:, j] = np.where(mask, self.normal(scale, mask), 0.0)
+        return out
+
+    def standard_exponential(self, mask: Optional[np.ndarray] = None
+                             ) -> np.ndarray:
+        """One ``Generator.standard_exponential()`` per lane."""
+        n = self.n_lanes
+        out = np.zeros(n)
+        active = np.arange(n) if mask is None else np.flatnonzero(mask)
+        while len(active):
+            sub = self._gather(active)
+            rr = sub._next_raw() >> _U64(3)
+            idx = (rr & _U64(0xff)).astype(np.int64)
+            rv = rr >> _U64(8)
+            x = rv.astype(np.float64) * EXP_WE[idx]
+            accept = rv < EXP_KE[idx]
+            done = accept.copy()
+            vals = np.where(accept, x, 0.0)
+            tail = ~accept & (idx == 0)
+            if np.any(tail):
+                u = sub._next_double(tail)
+                t_idx = np.flatnonzero(tail)
+                lt = np.zeros(len(u))
+                lt[t_idx] = [math.log1p(-u[t]) for t in t_idx]
+                vals = np.where(tail, EXP_R - lt, vals)
+                done |= tail
+            wedge = ~accept & (idx > 0)
+            if np.any(wedge):
+                u = sub._next_double(wedge)
+                ok = wedge & (((EXP_FE[idx - 1] - EXP_FE[idx]) * u
+                               + EXP_FE[idx]) < np.exp(-x))
+                vals = np.where(ok, x, vals)
+                done |= ok
+            self._scatter(active, sub)
+            out[active[done]] = vals[done]
+            active = active[~done]
+        return out
+
+    def exponential_block(self, scale, counts) -> np.ndarray:
+        """``[N, M]`` padded exponentials: lane ``i`` equals
+        ``default_rng(seed_i).exponential(scale_i, size=counts[i])``."""
+        counts = np.asarray(counts, dtype=np.int64)
+        m = int(counts.max()) if counts.size else 0
+        out = np.zeros((self.n_lanes, m))
+        scale = np.asarray(scale, dtype=np.float64)
+        for j in range(m):
+            mask = counts > j
+            z = self.standard_exponential(mask)
+            out[:, j] = np.where(mask, scale * z, 0.0)
+        return out
+
+    # -- poisson ----------------------------------------------------------
+    def poisson(self, lam: Union[float, np.ndarray],
+                mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """One ``Generator.poisson(lam)`` per lane; ``lam`` scalar or [N].
+
+        Replays numpy's ``random_poisson`` dispatch per lane: the
+        uniform-product count method below λ = 10, PTRS transformed
+        rejection at λ ≥ 10, zero at λ = 0 (no consumption).
+        """
+        n = self.n_lanes
+        lam = np.broadcast_to(np.asarray(lam, dtype=np.float64), (n,))
+        out = np.zeros(n, dtype=np.int64)
+        base = np.ones(n, dtype=bool) if mask is None else mask.astype(bool)
+
+        mult = base & (lam > 0) & (lam < 10)
+        if np.any(mult):
+            idx = np.flatnonzero(mult)
+            sub = self._gather(idx)
+            lam_s = lam[idx]
+            # exp(-lam) through libm when lam is one repeated value (the
+            # common scalar-λ call); ufunc exp otherwise
+            if np.all(lam_s == lam_s[0]):
+                enlam = np.full(len(idx), math.exp(-float(lam_s[0])))
+            else:
+                enlam = np.exp(-lam_s)
+            X = np.zeros(len(idx), dtype=np.int64)
+            prod = np.ones(len(idx))
+            need = np.ones(len(idx), dtype=bool)
+            while np.any(need):
+                u = sub._next_double(need)
+                prod = np.where(need, prod * u, prod)
+                cont = need & (prod > enlam)
+                X = np.where(cont, X + 1, X)
+                need = cont
+            self._scatter(idx, sub)
+            out[idx] = X
+
+        ptrs = base & (lam >= 10)
+        if np.any(ptrs):
+            idx = np.flatnonzero(ptrs)
+            sub = self._gather(idx)
+            out[idx] = _poisson_ptrs(sub, lam[idx])
+            self._scatter(idx, sub)
+        return out
+
+
+def _loggam(x: np.ndarray) -> np.ndarray:
+    """Vectorized replica of numpy's ``random_loggam`` (Stirling series
+    with pull-up below 7), matching the C evaluation op-for-op."""
+    x = np.asarray(x, dtype=np.float64)
+    n = np.where(x <= 7.0, (7.0 - x).astype(np.int64), 0)
+    x0 = x + n
+    x2 = (1.0 / x0) * (1.0 / x0)
+    gl0 = np.full(x.shape, _LOGGAM_A[9])
+    for k in range(8, -1, -1):
+        gl0 = gl0 * x2 + _LOGGAM_A[k]
+    gl = (gl0 / x0 + 0.5 * _LOG_2PI + (x0 - 0.5) * np.log(x0) - x0)
+    for k in range(1, 7):
+        m = (x <= 7.0) & (k <= n)
+        gl = np.where(m, gl - np.log(np.where(m, x0 - 1.0, 1.0)), gl)
+        x0 = np.where(m, x0 - 1.0, x0)
+    return np.where((x == 1.0) | (x == 2.0), 0.0, gl)
+
+
+def _poisson_ptrs(sub: VecStreams, lam: np.ndarray) -> np.ndarray:
+    """PTRS (transformed rejection) sampler on a gathered lane subset."""
+    slam = np.sqrt(lam)
+    loglam = np.log(lam)
+    b = 0.931 + 2.53 * slam
+    a = -0.059 + 0.02483 * b
+    invalpha = 1.1239 + 1.1328 / (b - 3.4)
+    vr = 0.9277 - 3.6224 / (b - 2)
+    n = len(lam)
+    out = np.zeros(n, dtype=np.int64)
+    need = np.ones(n, dtype=bool)
+    while np.any(need):
+        U = sub._next_double(need) - 0.5
+        V = sub._next_double(need)
+        us = 0.5 - np.abs(U)
+        k = np.floor((2.0 * a / us + b) * U + lam + 0.43).astype(np.int64)
+        fast = need & (us >= 0.07) & (V <= vr)
+        out = np.where(fast, k, out)
+        need &= ~fast
+        retry = need & ((k < 0) | ((us < 0.013) & (V > us)))
+        test = need & ~retry
+        if np.any(test):
+            with np.errstate(divide="ignore"):
+                lhs = (np.log(V) + np.log(invalpha)
+                       - np.log(a / (us * us) + b))
+            rhs = -lam + k * loglam - _loggam((k + 1).astype(np.float64))
+            ok = test & (lhs <= rhs)
+            out = np.where(ok, k, out)
+            need &= ~ok
+    return out

@@ -106,40 +106,52 @@ class SensorBank:
         self.host_timeline = host_timeline
         self.seed_mode = seed_mode
 
-        # -- stacked profile fields --------------------------------------
+        # -- stacked profile fields (grouped by identity: a fleet has few
+        # distinct profiles, so each field is gathered from a small
+        # per-profile table instead of N attribute lookups) --------------
         prof = self.profiles
-        self.update_period_s = np.array([p.update_period_s for p in prof])
-        self.window_s = np.array([p.window_s if p.window_s is not None
-                                  else p.update_period_s for p in prof])
-        self.tau_s = np.array([p.tau_s for p in prof])
-        self.quantum_w = np.array([p.quantum_w for p in prof])
-        self.noise_w = np.array([p.noise_w for p in prof])
-        self.sampled_fraction = np.array([p.sampled_fraction for p in prof])
-        self.transient = np.array([p.transient for p in prof])
-        self.module_scope = np.array([p.scope == "module" for p in prof])
-        self.supported = np.array([p.supported for p in prof])
+        uniq: Dict[int, int] = {}      # keyed by object identity: distinct
+        codes = np.fromiter((uniq.setdefault(id(p), len(uniq))   # profiles
+                             for p in prof), dtype=np.int64, count=n)
+        by_code = [None] * len(uniq)   # sharing a name must not collapse
         for p in prof:
+            by_code[uniq[id(p)]] = p
+
+        def field(fn, dtype=np.float64):
+            return np.array([fn(p) for p in by_code], dtype=dtype)[codes]
+
+        self.update_period_s = field(lambda p: p.update_period_s)
+        self.window_s = field(lambda p: p.window_s if p.window_s is not None
+                              else p.update_period_s)
+        self.tau_s = field(lambda p: p.tau_s)
+        self.quantum_w = field(lambda p: p.quantum_w)
+        self.noise_w = field(lambda p: p.noise_w)
+        self.sampled_fraction = field(lambda p: p.sampled_fraction)
+        self.transient = field(lambda p: p.transient, dtype=object)
+        self.module_scope = field(lambda p: p.scope == "module", dtype=bool)
+        self.supported = field(lambda p: p.supported, dtype=bool)
+        for p in by_code:
             if p.transient not in _TRANSIENTS:
                 raise ValueError(f"unknown transient '{p.transient}'")
 
         # -- hidden per-device truth -------------------------------------
-        gain_tol = np.array([p.gain_tol for p in prof])
-        off_tol = np.array([p.offset_tol_w for p in prof])
-        model_err = np.array([p.model_error for p in prof])
+        gain_tol = field(lambda p: p.gain_tol)
+        off_tol = field(lambda p: p.offset_tol_w)
+        model_err = field(lambda p: p.model_error)
         if seed_mode == "per_device":
             # replicate OnboardSensor.__post_init__ draw-for-draw so the
-            # hidden truth matches the scalar reference device-by-device
-            gain = np.empty(n)
-            offset = np.empty(n)
-            phase = np.empty(n)
-            mgain = np.ones(n)
-            for i, (p, s) in enumerate(zip(prof, self.seeds)):
-                rng = np.random.default_rng(int(s))
-                gain[i] = 1.0 + rng.uniform(-p.gain_tol, p.gain_tol)
-                offset[i] = rng.uniform(-p.offset_tol_w, p.offset_tol_w)
-                phase[i] = rng.uniform(0.0, p.update_period_s)
-                if p.transient == "estimation":
-                    mgain[i] = 1.0 + rng.uniform(-p.model_error, p.model_error)
+            # hidden truth matches the scalar reference device-by-device;
+            # VecStreams lanes are bitwise default_rng(seed) streams, so
+            # this is the same loop, N lanes at a time
+            from repro.core.engine_backend.vecrng import VecStreams
+            streams = VecStreams(self.seeds)
+            gain = 1.0 + streams.uniform(-gain_tol, gain_tol)
+            offset = streams.uniform(-off_tol, off_tol)
+            phase = streams.uniform(0.0, self.update_period_s)
+            est = self.transient == "estimation"
+            mgain = np.where(
+                est, 1.0 + streams.uniform(-model_err, model_err, mask=est),
+                1.0)
         else:
             rng = np.random.default_rng(int(base_seed))
             gain = 1.0 + rng.uniform(-1.0, 1.0, n) * gain_tol
@@ -359,17 +371,23 @@ class SensorBank:
 
     def _noise(self, m: int, first: np.ndarray,
                count: np.ndarray) -> np.ndarray:
-        """Reading jitter aligned to each device's valid tick slots."""
+        """Reading jitter aligned to each device's valid tick slots.
+
+        The per-device mode draws from N lock-step ``default_rng(seed+1)``
+        streams (:class:`~repro.core.engine_backend.vecrng.VecStreams`) —
+        same stream, same draw count, bitwise the same values as the
+        scalar sensor's ``attach()``, with no per-device ``Generator``
+        construction."""
         n = self.n_devices
         out = np.zeros((n, m))
         if self.seed_mode == "per_device":
-            # same default_rng(seed + 1) stream, same draw count, as the
-            # scalar sensor's attach()
-            for i in range(n):
-                noise = np.random.default_rng(
-                    int(self.seeds[i]) + 1).normal(
-                        0.0, self.noise_w[i], size=int(count[i]))
-                out[i, first[i]:first[i] + count[i]] = noise
+            from repro.core.engine_backend.vecrng import VecStreams
+            noise = VecStreams(self.seeds + 1).normal_block(
+                self.noise_w, count)
+            cols = np.arange(noise.shape[1])[None, :]
+            valid = cols < count[:, None]
+            rows = np.broadcast_to(np.arange(n)[:, None], valid.shape)
+            out[rows[valid], (first[:, None] + cols)[valid]] = noise[valid]
         else:
             rng = np.random.default_rng(int(self.seeds[0]) + 1)
             out = rng.normal(0.0, 1.0, size=(n, m)) * self.noise_w[:, None]
@@ -384,11 +402,15 @@ class SensorBank:
         return ReadingSchedule(self._ticks, self._first, self._last,
                                self._k0, self._phase, self.update_period_s)
 
-    def query(self, t: Union[float, np.ndarray]) -> np.ndarray:
+    def query(self, t: Union[float, np.ndarray],
+              chunk_devices: Optional[int] = None) -> np.ndarray:
         """Latest published reading per device at time(s) ``t``.
 
         ``t`` may be a scalar (returns [N]), a shared [K] query grid
-        (returns [N, K]), or per-device times [N, K].
+        (returns [N, K]), or per-device times [N, K].  ``chunk_devices``
+        bounds the slot-index intermediates to device slabs (the [N, K]
+        result is still returned whole); per-device values are identical
+        under any chunking.
         """
         sched = self._schedule
         t = np.asarray(t, dtype=np.float64)
@@ -401,27 +423,53 @@ class SensorBank:
         else:
             raise ValueError(f"bad query shape {t.shape}")
 
-        j = self._be.query_slots(sched, tq)
-        out = np.take_along_axis(self._values, j, axis=1)
+        if chunk_devices is None or chunk_devices >= self.n_devices:
+            j = self._be.query_slots(sched, tq)
+            out = np.take_along_axis(self._values, j, axis=1)
+        else:
+            out = np.empty(tq.shape)
+            for lo in range(0, self.n_devices, chunk_devices):
+                hi = min(lo + chunk_devices, self.n_devices)
+                sub = ReadingSchedule(
+                    sched.ticks[lo:hi], sched.first[lo:hi],
+                    sched.last[lo:hi], sched.k0[lo:hi],
+                    sched.phase[lo:hi], sched.update_period_s[lo:hi])
+                j = self._be.query_slots(sub, tq[lo:hi])
+                out[lo:hi] = np.take_along_axis(self._values[lo:hi], j,
+                                                axis=1)
         return out[:, 0] if scalar else out
 
     def poll(self, t0: float, t1: float, period_s: float = 0.001,
-             jitter_s: float = 0.0) -> tuple[np.ndarray, np.ndarray]:
+             jitter_s: float = 0.0,
+             chunk_devices: Optional[int] = None
+             ) -> tuple[np.ndarray, np.ndarray]:
         """Fleet-wide `nvidia-smi -lms`: shared query grid, [N, M] readings.
 
         With ``jitter_s`` the per-device grids deviate like the real tool
         (per-device ``default_rng(seed + 2)`` streams, as the scalar
-        sensor) and the returned times are [N, M].
+        sensor) and the returned times are [N, M]; the jitter matrix is
+        drawn by lock-step vectorized streams
+        (:class:`~repro.core.engine_backend.vecrng.VecStreams`), bitwise
+        what the scalar per-device loop produced.  Work proceeds in
+        device slabs of ``chunk_devices`` rows (default: sized so
+        intermediates stay around ~128 MB), so polling 10k devices no
+        longer builds multi-GB [N, M] scratch matrices.
         """
         n = int(np.floor((t1 - t0) / period_s))
         ts = t0 + period_s * np.arange(n)
+        if chunk_devices is None:
+            chunk_devices = max(1, 16_000_000 // max(n, 1))
         if jitter_s > 0:
+            from repro.core.engine_backend.vecrng import VecStreams
             mat = np.empty((self.n_devices, n))
-            for i in range(self.n_devices):
-                rng = np.random.default_rng(int(self.seeds[i]) + 2)
-                mat[i] = np.sort(ts + rng.uniform(0, jitter_s, size=n))
-            return mat, self.query(mat)
-        return ts, self.query(ts)
+            for lo in range(0, self.n_devices, chunk_devices):
+                hi = min(lo + chunk_devices, self.n_devices)
+                streams = VecStreams(self.seeds[lo:hi] + 2)
+                jit = streams.uniform_block(0.0, jitter_s,
+                                            np.full(hi - lo, n))
+                mat[lo:hi] = np.sort(ts[None, :] + jit, axis=1)
+            return mat, self.query(mat, chunk_devices=chunk_devices)
+        return ts, self.query(ts, chunk_devices=chunk_devices)
 
     def integrate_polled(self, poll_t0: float,
                          poll_t1: Union[float, np.ndarray],
@@ -490,6 +538,55 @@ def _err_stats(e: np.ndarray) -> Dict[str, float]:
     }
 
 
+class StreamingMoments:
+    """Mergeable error-moment accumulator for chunked fleet audits.
+
+    Each device slab contributes one backend ``err_moments`` reduction
+    (count, mean, M2, mean of |e|, max |e|); slabs merge by Chan's
+    parallel-Welford update, so the audit never needs all N errors in
+    one reduction.  ``stats()`` returns the moment-derived subset of
+    :func:`_err_stats` — means/std/worst agree with the exact vector
+    computation to float accumulation order; percentiles are not
+    moment-expressible and stay with the exact path.
+    """
+
+    __slots__ = ("n", "mean", "m2", "mean_abs", "max_abs")
+
+    def __init__(self):
+        self.n = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+        self.mean_abs = 0.0
+        self.max_abs = 0.0
+
+    def update(self, e: np.ndarray, backend=None) -> "StreamingMoments":
+        be = backend if backend is not None else get_backend("numpy")
+        nb, mean_b, m2_b, mean_abs_b, max_abs_b = be.err_moments(e)
+        if nb == 0:
+            return self
+        na = self.n
+        tot = na + nb
+        delta = mean_b - self.mean
+        self.mean += delta * nb / tot
+        self.m2 += m2_b + delta * delta * na * nb / tot
+        self.mean_abs += (mean_abs_b - self.mean_abs) * nb / tot
+        self.max_abs = max(self.max_abs, max_abs_b)
+        self.n = tot
+        return self
+
+    def stats(self) -> Dict[str, float]:
+        if self.n == 0:
+            return {"mean_err": 0.0, "mean_abs_err": 0.0, "std_err": 0.0,
+                    "worst_abs": 0.0, "n_devices": 0}
+        return {
+            "mean_err": float(self.mean),
+            "mean_abs_err": float(self.mean_abs),
+            "std_err": float(np.sqrt(max(self.m2 / self.n, 0.0))),
+            "worst_abs": float(self.max_abs),
+            "n_devices": int(self.n),
+        }
+
+
 @dataclasses.dataclass
 class FleetAuditResult:
     """Per-device error distribution of a fleet-wide energy audit.
@@ -507,7 +604,9 @@ class FleetAuditResult:
     naive_err: np.ndarray              # [N] relative errors
     gp_j: Optional[np.ndarray] = None  # [N] good-practice estimates
     gp_err: Optional[np.ndarray] = None
-    scenarios: Optional[List[str]] = None   # [N] workload labels
+    scenarios: Optional[np.ndarray] = None  # [N] workload labels
+    chunk_devices: Optional[int] = None     # slab size of a chunked audit
+    streamed: Optional[Dict[str, Dict]] = None  # merged StreamingMoments
 
     def stats(self, errs: Optional[np.ndarray] = None) -> Dict[str, float]:
         e = self.naive_err if errs is None else errs
@@ -524,11 +623,11 @@ class FleetAuditResult:
         e = self.naive_err if errs is None else errs
         labels = np.asarray(self.scenarios)
         out: Dict[str, Dict[str, float]] = {}
-        for label in sorted(set(self.scenarios)):
+        for label in np.unique(labels):
             sel = e[labels == label]
             st = _err_stats(sel)
             st["n_devices"] = int(sel.shape[0])
-            out[label] = st
+            out[str(label)] = st
         return out
 
     def uncertainty(self) -> Dict[str, float]:
@@ -552,20 +651,33 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
                 workload=None, seed: int = 0,
                 good_practice: bool = False, n_trials: int = 2,
                 seed_mode: str = "per_device",
-                backend: Optional[str] = None) -> FleetAuditResult:
+                backend: Optional[str] = None,
+                chunk_devices: Optional[int] = None) -> FleetAuditResult:
     """Monte-Carlo audit: N devices, each with hidden gain/offset/phase,
     measure naively (and optionally with the §5 protocol) and return the
     per-device error distribution.
 
-    ``workload`` is one shared :class:`~repro.core.meter.Workload`, or a
+    ``workload`` is one shared :class:`~repro.core.meter.Workload`, a
     sequence / :class:`~repro.core.meter.WorkloadSet` of N per-device
     workloads — a mixed fleet where every device runs its own job (see
-    :func:`repro.core.load.mixed_fleet_workloads`) and the error spread
-    becomes a function of workload shape, not just seed noise.
+    :func:`repro.core.load.mixed_fleet_workloads`) — or a
+    :class:`~repro.core.load.FleetScenarioSpec` recipe, in which case
+    each device slab's timelines are synthesised on demand.
 
     ``backend`` selects the execution backend for the array kernels
     (``"numpy"`` default / ``"jax"`` / ``"auto"``); results agree within
     one reporting quantum, so error statistics are backend-independent.
+
+    ``chunk_devices`` streams the audit over device slabs of that size:
+    peak memory is bounded by one slab's [chunk, M] matrices (plus O(N)
+    per-device results), per-device estimates match the unchunked audit
+    within float accumulation (each slab's reading grid pads to the
+    slab max, permuting the padded-width summation tree — ≲1e-12
+    relative; bitwise when the padding coincides), and error statistics
+    are merged across slabs by :class:`StreamingMoments` (exposed as
+    ``result.streamed``; the exact vector stats remain available through
+    ``result.stats()``).  This is what makes million-device
+    heterogeneous audits practical — see ``docs/scaling.md``.
 
     10,000 devices run in seconds: everything after bank construction is
     [N, M] array arithmetic.
@@ -584,36 +696,105 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
              else list(profile))
     if len(names) != n_devices:
         raise ValueError(f"{len(names)} profile names for {n_devices} devices")
-    bank = SensorBank.from_catalog(names, base_seed=seed, seed_mode=seed_mode,
-                                   backend=backend)
 
-    ws = as_workload_set(workload, n_devices)
-    if ws is None:
-        truth = workload.true_energy_j
-        scenarios = None
+    spec = workload if isinstance(workload, loads.FleetScenarioSpec) else None
+    if spec is not None:
+        if spec.n != n_devices:
+            raise ValueError(f"FleetScenarioSpec covers {spec.n} devices, "
+                             f"audit asked for {n_devices}")
+        ws_full = None
     else:
-        workload = ws
-        truth = ws.true_energies_j
-        scenarios = list(ws.scenarios)
-    naive = measure_naive_batch(bank, workload,
-                                host_baseline_w=0.0 if np.any(
-                                    bank.module_scope) else None)
-    res = FleetAuditResult(
-        n_devices=n_devices, profile_names=names, true_j=truth,
-        naive_j=naive, naive_err=(naive - truth) / truth,
-        scenarios=scenarios)
+        ws_full = as_workload_set(workload, n_devices)
+    shared = spec is None and ws_full is None
+    labelled = not shared
 
+    if chunk_devices is None:
+        slabs = [(0, n_devices)]
+    else:
+        if chunk_devices < 1:
+            raise ValueError(f"chunk_devices must be >= 1, "
+                             f"got {chunk_devices}")
+        if seed_mode == "fleet" and chunk_devices < n_devices:
+            raise ValueError(
+                "chunk_devices requires seed_mode='per_device': the "
+                "'fleet' mode draws one shared RNG stream across the "
+                "whole bank, which a per-slab bank would restart — "
+                "per-device results would differ from the unchunked "
+                "audit and correlate across slabs")
+        slabs = [(lo, min(lo + chunk_devices, n_devices))
+                 for lo in range(0, n_devices, chunk_devices)]
+
+    calibs: Dict[str, "CalibrationRecord"] = {}
     if good_practice:
-        calibs = {}
         for name in set(names):
             p = _profiles.get(name)
             calibs[name] = CalibrationRecord(
                 "fleet", name, p.update_period_s, p.window_s, "instant",
                 2.5 * p.update_period_s,
                 sampled_fraction=p.sampled_fraction)
-        est = measure_good_practice_batch(
-            bank, workload, calibs, GoodPracticeConfig(n_trials=n_trials),
-            host_baseline_w=0.0 if np.any(bank.module_scope) else None)
-        res.gp_j = est.joules_per_rep
-        res.gp_err = (est.joules_per_rep - truth) / truth
-    return res
+
+    be = get_backend(resolve_backend(backend))
+    naive_j = np.empty(n_devices)
+    naive_err = np.empty(n_devices)
+    truth_v = np.empty(n_devices) if not shared else None
+    scenarios = np.empty(n_devices, dtype=object) if labelled else None
+    gp_j = np.empty(n_devices) if good_practice else None
+    gp_err = np.empty(n_devices) if good_practice else None
+    sm: Dict[str, Dict] = {
+        "naive": {"overall": StreamingMoments(), "by_scenario": {}}}
+    if good_practice:
+        sm["good_practice"] = {"overall": StreamingMoments(),
+                               "by_scenario": {}}
+
+    def _stream(key: str, err: np.ndarray, labels) -> None:
+        sm[key]["overall"].update(err, be)
+        if labels is None:
+            return
+        for label in np.unique(labels):
+            sm[key]["by_scenario"].setdefault(
+                str(label), StreamingMoments()).update(
+                    err[labels == label], be)
+
+    for lo, hi in slabs:
+        bank = SensorBank.from_catalog(
+            names[lo:hi], seeds=np.arange(lo, hi) + seed,
+            seed_mode=seed_mode, backend=backend)
+        if spec is not None:
+            ws = spec.workload_set(lo, hi)
+        elif ws_full is not None:
+            ws = ws_full if len(slabs) == 1 else ws_full.rows(lo, hi)
+        else:
+            ws = None
+        wl = workload if ws is None else ws
+        baseline = 0.0 if np.any(bank.module_scope) else None
+        naive = measure_naive_batch(bank, wl, host_baseline_w=baseline)
+        tr = workload.true_energy_j if ws is None else ws.true_energies_j
+        err = (naive - tr) / tr
+        labels = None if ws is None else np.asarray(ws.scenarios)
+        naive_j[lo:hi] = naive
+        naive_err[lo:hi] = err
+        if truth_v is not None:
+            truth_v[lo:hi] = tr
+        if scenarios is not None:
+            scenarios[lo:hi] = labels
+        _stream("naive", err, labels)
+
+        if good_practice:
+            est = measure_good_practice_batch(
+                bank, wl, calibs, GoodPracticeConfig(n_trials=n_trials),
+                host_baseline_w=baseline, seeds=np.arange(lo, hi))
+            gp_j[lo:hi] = est.joules_per_rep
+            ge = (est.joules_per_rep - tr) / tr
+            gp_err[lo:hi] = ge
+            _stream("good_practice", ge, labels)
+
+    streamed = {key: {"overall": v["overall"].stats(),
+                      "by_scenario": {k: s.stats() for k, s in
+                                      sorted(v["by_scenario"].items())}}
+                for key, v in sm.items()}
+    return FleetAuditResult(
+        n_devices=n_devices, profile_names=names,
+        true_j=(workload.true_energy_j if shared else truth_v),
+        naive_j=naive_j, naive_err=naive_err,
+        gp_j=gp_j, gp_err=gp_err, scenarios=scenarios,
+        chunk_devices=chunk_devices, streamed=streamed)

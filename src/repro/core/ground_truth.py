@@ -421,14 +421,19 @@ class GroundTruthMeter:
 
     def energy_batch(self, bank: TimelineBank,
                      t0: Optional[np.ndarray] = None,
-                     t1: Optional[np.ndarray] = None) -> np.ndarray:
+                     t1: Optional[np.ndarray] = None,
+                     chunk_rows: Optional[int] = None) -> np.ndarray:
         """Per-row PMD energies [N] for a whole :class:`TimelineBank`.
 
         Row ``i`` draws its ADC noise from ``default_rng(seed + i)``, so it
         equals ``GroundTruthMeter(..., seed=seed + i).energy(bank.row(i))``
         bitwise — one meter per device, not one shared noise stream.  The
         trace sampling itself (the expensive part) is one batched
-        ``power_at`` over a padded [N, M] grid.
+        ``power_at`` over a padded [chunk, M] grid, processed in row
+        slabs of ``chunk_rows`` (default: sized to keep the 5 kHz sample
+        grid around ~128 MB) so fleet-scale banks never materialise the
+        full [N, M] trace matrix; results are identical under any
+        chunking.
         """
         n = bank.n_rows
         t0 = bank.t_start if t0 is None else np.broadcast_to(
@@ -438,18 +443,22 @@ class GroundTruthMeter:
         counts = np.maximum(
             2, np.round((t1 - t0) * self.sample_hz).astype(np.int64))
         m = int(counts.max())
-        # row i's first counts[i] instants match the scalar trace() grid
-        ts = t0[:, None] + np.arange(m)[None, :] / self.sample_hz
-        p = bank.power_at(ts)
+        if chunk_rows is None:
+            chunk_rows = max(1, 16_000_000 // max(m, 1))
         volts = (np.round(self.rail_volts / self.volt_per_level)
                  * self.volt_per_level)
-        amps = p / self.rail_volts
-        amps = np.round(amps / self.amp_per_level) * self.amp_per_level
-        watts = volts * amps
         out = np.empty(n)
-        for i in range(n):
-            k = int(counts[i])
-            rng = np.random.default_rng(self.seed + i)
-            w = watts[i, :k] + rng.normal(0.0, self.noise_w, size=k)
-            out[i] = np.trapezoid(w, ts[i, :k])
+        for lo in range(0, n, chunk_rows):
+            hi = min(lo + chunk_rows, n)
+            # row i's first counts[i] instants match the scalar trace() grid
+            ts = t0[lo:hi, None] + np.arange(m)[None, :] / self.sample_hz
+            p = bank.rows(np.arange(lo, hi)).power_at(ts)
+            amps = p / self.rail_volts
+            amps = np.round(amps / self.amp_per_level) * self.amp_per_level
+            watts = volts * amps
+            for g, i in enumerate(range(lo, hi)):
+                k = int(counts[i])
+                rng = np.random.default_rng(self.seed + i)
+                w = watts[g, :k] + rng.normal(0.0, self.noise_w, size=k)
+                out[i] = np.trapezoid(w, ts[g, :k])
         return out

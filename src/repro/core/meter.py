@@ -67,33 +67,71 @@ class WorkloadSet:
     Device ``i`` of a :class:`~repro.core.fleet_engine.SensorBank` runs
     ``workloads[i]`` — its own timeline, duration and analytic truth.  The
     batched measurement protocols accept this in place of a single shared
-    :class:`Workload`; timelines are stacked once into a
-    :class:`TimelineBank` and reused across trials.
+    :class:`Workload`.
+
+    Two constructions, one contract:
+
+    * from a sequence of :class:`Workload` objects — timelines are
+      stacked once into a :class:`TimelineBank` and reused across trials;
+    * bank-native (``WorkloadSet(bank=..., scenarios=...)``) — the
+      :class:`TimelineBank` *is* the source of truth (durations and
+      analytic energies are computed vectorized from it, identical to
+      the per-object values by the bank's bitwise row contract), and
+      ``Workload`` views are materialised lazily only if indexed.  This
+      is what :func:`repro.core.load.mixed_fleet_workloads(as_bank=True)
+      <repro.core.load.mixed_fleet_workloads>` returns: no per-device
+      Python objects anywhere on the fleet-audit hot path.
     """
 
-    def __init__(self, workloads: Sequence[Workload]):
-        self.workloads: List[Workload] = list(workloads)
-        if not self.workloads:
+    def __init__(self, workloads: Optional[Sequence[Workload]] = None, *,
+                 bank: Optional[TimelineBank] = None,
+                 scenarios: Optional[Sequence[str]] = None):
+        if (workloads is None) == (bank is None):
+            raise ValueError("pass exactly one of workloads= or bank=")
+        if bank is not None:
+            self._workloads: Optional[List[Workload]] = None
+            self._bank = bank
+            self.durations_s = bank.duration_s
+            self.true_energies_j = bank.energy()
+            if scenarios is None:
+                scenarios = [f"workload[{i}]" for i in range(bank.n_rows)]
+            elif len(scenarios) != bank.n_rows:
+                raise ValueError(f"{len(scenarios)} scenario labels for "
+                                 f"{bank.n_rows} bank rows")
+            self.scenarios = np.asarray(scenarios, dtype=object)
+            return
+        self._workloads = list(workloads)
+        if not self._workloads:
             raise ValueError("empty WorkloadSet")
-        self.durations_s = np.array([w.duration_s for w in self.workloads])
+        self.durations_s = np.array([w.duration_s for w in self._workloads])
         self.true_energies_j = np.array(
-            [w.true_energy_j for w in self.workloads])
-        self.scenarios: List[str] = [w.scenario_label
-                                     for w in self.workloads]
+            [w.true_energy_j for w in self._workloads])
+        self.scenarios = np.asarray(
+            [w.scenario_label for w in self._workloads], dtype=object)
         self._bank: Optional[TimelineBank] = None
 
     def __len__(self) -> int:
-        return len(self.workloads)
+        return (len(self._workloads) if self._workloads is not None
+                else self._bank.n_rows)
 
     def __getitem__(self, i: int) -> Workload:
-        return self.workloads[i]
+        if self._workloads is not None:
+            return self._workloads[i]
+        return Workload(f"{self.scenarios[i]}[{i}]", self._bank.row(i),
+                        scenario=str(self.scenarios[i]))
+
+    def rows(self, lo: int, hi: int) -> "WorkloadSet":
+        """The device slab ``lo .. hi-1`` as its own set (bank rows are
+        sliced, not re-derived — used by chunked fleet audits)."""
+        return WorkloadSet(bank=self.timeline_bank.rows(np.arange(lo, hi)),
+                           scenarios=self.scenarios[lo:hi])
 
     @property
     def timeline_bank(self) -> TimelineBank:
         """The stacked [N, S] timeline substrate (built once, cached)."""
         if self._bank is None:
             self._bank = TimelineBank.from_timelines(
-                [w.timeline for w in self.workloads])
+                [w.timeline for w in self._workloads])
         return self._bank
 
 
@@ -473,11 +511,11 @@ def measure_good_practice_batch(
                                    np.isfinite(cal.rise_time_s)) else 0.0
 
         # per-device randomised trial start offsets (same default_rng(seed)
-        # stream as the scalar protocol, drawn n_trials at a time)
-        starts = np.empty((len(rows), cfg.n_trials))
-        for g, i in enumerate(rows):
-            rng = np.random.default_rng(int(seeds[i]))
-            starts[g] = 0.3 + rng.uniform(0.0, 1.0, size=cfg.n_trials)
+        # stream as the scalar protocol, drawn n_trials at a time, via
+        # lock-step vectorized streams — bitwise the per-device draws)
+        from repro.core.engine_backend.vecrng import VecStreams
+        starts = 0.3 + VecStreams(seeds[rows]).uniform_block(
+            0.0, 1.0, np.full(len(rows), cfg.n_trials))
 
         base = _baseline_rows(sub, baseline)
 
@@ -519,14 +557,16 @@ def measure_good_practice_batch(
                 np.ceil(rise / np.maximum(dur, 1e-6)).astype(np.int64),
                 reps - 1)
             kept = reps - n_skip
-            off_begin = np.empty(len(rows))
-            off_end = np.empty(len(rows))
-            gaps_inside = np.empty(len(rows))
-            for g, i in enumerate(rows):
-                r_g, s_g, d_g = int(reps[g]), int(n_skip[g]), float(dur[g])
-                off_begin[g] = _train_offset(s_g, d_g, shifts, r_g, W)
-                off_end[g] = _train_offset(r_g, d_g, shifts, r_g, W)
-                gaps_inside[g] = _gaps_between(s_g, r_g, shifts, r_g)
+            # vectorized _train_offset/_gaps_between (same arithmetic)
+            if shifts > 0:
+                group = np.maximum(1, reps // shifts)
+                gb = np.minimum(n_skip // group, (reps - 1) // group)
+                ge = np.minimum(reps // group, (reps - 1) // group)
+            else:
+                gb = ge = np.zeros(len(rows), dtype=np.int64)
+            off_begin = n_skip * dur + gb * W
+            off_end = reps * dur + ge * W
+            gaps_inside = (ge - gb).astype(np.float64)
             tb0 = _train_bank(ws, rows, reps, shifts, W)
             idle = tb0.idle_w
             reps_out[rows] = reps

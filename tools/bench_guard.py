@@ -1,0 +1,89 @@
+"""Guard fleet-benchmark throughput against a committed baseline.
+
+``benchmarks/fleet.py`` writes ``BENCH_fleet.json``; this tool compares
+the smoke-size throughput numbers (``devices_per_sec``) and the
+workload-generation wall time (``wall_s_workload_gen``) against
+``benchmarks/baselines/fleet_smoke.json`` with a generous multiplicative
+tolerance, so a CI run fails only on order-of-magnitude regressions
+(shared runners are far too noisy for tight thresholds).
+
+Baseline format::
+
+    {
+      "tolerance_factor": 4.0,
+      "floors":   {"heterogeneous.devices_per_sec": 1500.0, ...},
+      "ceilings": {"heterogeneous.wall_s_workload_gen": 0.12, ...}
+    }
+
+``floors`` fail when ``measured < baseline / factor`` (throughput
+collapsed); ``ceilings`` fail when ``measured > baseline * factor``
+(latency exploded).  Keys are dotted paths into the bench JSON; a key
+missing from the bench file fails the guard (the metric silently
+disappearing is itself a regression).
+
+Usage::
+
+    python tools/bench_guard.py [--bench BENCH_fleet.json] \
+        [--baseline benchmarks/baselines/fleet_smoke.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _lookup(tree: dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check(bench: dict, baseline: dict) -> list:
+    factor = float(baseline.get("tolerance_factor", 4.0))
+    failures = []
+    for key, floor in baseline.get("floors", {}).items():
+        got = _lookup(bench, key)
+        if got is None:
+            failures.append(f"{key}: missing from bench output")
+        elif float(got) < float(floor) / factor:
+            failures.append(f"{key}: {got:.1f} < floor {floor:.1f} "
+                            f"/ {factor:g} (throughput regression)")
+    for key, ceiling in baseline.get("ceilings", {}).items():
+        got = _lookup(bench, key)
+        if got is None:
+            failures.append(f"{key}: missing from bench output")
+        elif float(got) > float(ceiling) * factor:
+            failures.append(f"{key}: {got:.3f}s > ceiling {ceiling:.3f}s "
+                            f"× {factor:g} (latency regression)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", default="BENCH_fleet.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/fleet_smoke.json")
+    args = ap.parse_args(argv)
+    with open(args.bench) as fh:
+        bench = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = check(bench, baseline)
+    if failures:
+        print("bench_guard: FAIL")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    checked = (len(baseline.get("floors", {}))
+               + len(baseline.get("ceilings", {})))
+    print(f"bench_guard: OK ({checked} metrics within "
+          f"{baseline.get('tolerance_factor', 4.0):g}x of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

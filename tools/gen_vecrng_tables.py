@@ -1,0 +1,149 @@
+"""Regenerate ``repro.core.engine_backend._ziggurat`` from the local numpy.
+
+The vectorized per-seed RNG (:mod:`repro.core.engine_backend.vecrng`)
+replays ``np.random.Generator``'s ziggurat samplers bitwise, which needs
+the exact 256-entry acceptance tables compiled into numpy
+(``numpy/random/src/distributions/ziggurat_constants.h``).  Those tables
+are not exposed at the Python level and recomputing them from the
+Marsaglia–Tsang recurrence lands tens of ulps away (numpy's header was
+generated at a different precision), so this script *extracts* them
+empirically instead:
+
+* ``wi``/``we`` (the strip widths) are pinned exactly: every accepted
+  first draw of a fresh ``default_rng(seed)`` satisfies
+  ``value == fl(rabs * wi[idx])`` for the known raw 64-bit word, and a
+  few hundred such exact-product constraints per strip leave exactly one
+  float64 candidate;
+* ``ki``/``ke`` (the acceptance thresholds) and ``fi``/``fe`` (the pdf
+  ordinates) are derived from the extracted widths with the published
+  generation formulas — a potential off-by-one-ulp there only matters
+  when a draw lands exactly on the threshold ulp (~2⁻⁵² per draw), and
+  the deep-parity test sweep (`tests/test_vecrng.py`) guards the result.
+
+Run from the repo root (writes the module in place)::
+
+    PYTHONPATH=src python tools/gen_vecrng_tables.py
+
+The output module is committed; re-running is only needed if numpy ever
+changes its ziggurat constants (it has not since the Generator API
+landed in 1.17).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.engine_backend.vecrng import (NOR_R, EXP_R, VecStreams,
+                                              _U64 as U64)
+
+OUT = "src/repro/core/engine_backend/_ziggurat.py"
+K = 400_000
+
+
+def _refine(ra: np.ndarray, ar: np.ndarray) -> float:
+    """The unique float64 ``w`` with ``fl(ra*w) == ar`` for all pairs."""
+    w0 = float(np.median(ar / ra))
+    cands = [w0]
+    up = down = w0
+    for _ in range(10):
+        up = np.nextafter(up, np.inf)
+        down = np.nextafter(down, -np.inf)
+        cands += [up, down]
+    ok = [c for c in cands if np.all(ra * c == ar)]
+    if len(ok) != 1:
+        raise RuntimeError(f"width not pinned uniquely ({len(ok)} candidates)")
+    return ok[0]
+
+
+def _extract_widths(first_value, idx, mant) -> np.ndarray:
+    out = np.zeros(256)
+    for b in range(256):
+        m = (idx == b) & (mant > 0)
+        ra = mant[m].astype(np.float64)
+        ar = first_value[m]
+        ratio = ar / ra
+        med = np.median(ratio)
+        inl = np.abs(ratio / med - 1.0) < 1e-9   # drop rejected-then-redrawn
+        out[b] = _refine(ra[inl], ar[inl])
+    return out
+
+
+def main() -> None:
+    seeds = np.arange(K, dtype=np.uint64)
+    streams = VecStreams(seeds)
+    raw0 = streams._next_raw()
+
+    # normal layout: [0:8) idx, [8] sign, [9:61) mantissa
+    idx = (raw0 & U64(0xff)).astype(np.int64)
+    mant = (raw0 >> U64(9)) & U64(0x000fffffffffffff)
+    refs = np.empty(K)
+    for s in range(K):
+        refs[s] = np.random.default_rng(s).standard_normal()
+    wi = _extract_widths(np.abs(refs), idx, mant)
+
+    # exponential layout: drop 3, [0:8) idx, rest mantissa
+    ri = raw0 >> U64(3)
+    eidx = (ri & U64(0xff)).astype(np.int64)
+    emant = ri >> U64(8)
+    erefs = np.empty(K)
+    for s in range(K):
+        erefs[s] = np.random.default_rng(s).standard_exponential()
+    we = _extract_widths(erefs, eidx, emant)
+
+    m1, m2 = 2.0 ** 52, 2.0 ** 53
+    x = wi * m1
+    ki = np.zeros(256, dtype=np.uint64)
+    ki[0] = np.uint64(NOR_R / wi[0])
+    for i in range(1, 255):
+        ki[i + 1] = np.uint64((x[i] / x[i + 1]) * m1)
+    fi = np.exp(-0.5 * x * x)
+    fi[0] = 1.0
+
+    xe = we * m2
+    ke = np.zeros(256, dtype=np.uint64)
+    ke[0] = np.uint64(EXP_R / we[0])
+    for i in range(1, 255):
+        ke[i + 1] = np.uint64((xe[i] / xe[i + 1]) * m2)
+    fe = np.exp(-xe)
+    fe[0] = 1.0
+
+    def fmt_u64(arr):
+        words = [f"0x{int(v):016x}" for v in arr]
+        lines = []
+        for i in range(0, 256, 4):
+            lines.append("    " + ", ".join(words[i:i + 4]) + ",")
+        return "\n".join(lines)
+
+    def fmt_f64(arr):
+        return fmt_u64(arr.view(np.uint64))
+
+    with open(OUT, "w") as fh:
+        fh.write('"""Ziggurat acceptance tables '
+                 '(generated — do not edit by hand).\n\n'
+                 "Bit-exact copies of numpy's compiled "
+                 "``ziggurat_constants.h`` tables, extracted\n"
+                 "empirically by ``tools/gen_vecrng_tables.py`` "
+                 "(see there for provenance).\n"
+                 "Float tables are stored as uint64 bit patterns so no "
+                 "decimal round-trip can\nperturb them.\n"
+                 '"""\n'
+                 "import numpy as np\n\n")
+        for name, arr, kind in (("NORMAL_KI", ki, "u"),
+                                ("NORMAL_WI", wi, "f"),
+                                ("NORMAL_FI", fi, "f"),
+                                ("EXP_KE", ke, "u"),
+                                ("EXP_WE", we, "f"),
+                                ("EXP_FE", fe, "f")):
+            body = fmt_u64(arr) if kind == "u" else fmt_f64(arr)
+            fh.write(f"_{name}_BITS = np.array([\n{body}\n"
+                     "], dtype=np.uint64)\n")
+            if kind == "u":
+                fh.write(f"{name} = _{name}_BITS\n\n")
+            else:
+                fh.write(f"{name} = _{name}_BITS.view(np.float64)\n\n")
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
