@@ -18,8 +18,15 @@ as_bank=True)`), timed against the per-device object path; the
 bounded-memory slabs (`fleet_audit(workload=FleetScenarioSpec(...),
 chunk_devices=...)`).  CLI::
 
+Streaming monitor (ISSUE 5): the heterogeneous fleet is also replayed
+as a *live* poll-sample stream through
+:class:`repro.core.stream.MonitorService` (per backend, pinned against
+the offline audit), and ``--stream-devices`` runs a scale replay with
+spec-synthesised device slabs at bounded memory.  CLI::
+
     python benchmarks/fleet.py --backend both --n-devices 10000 \
-        --scale-devices 100000 --mega-devices 1000000
+        --scale-devices 100000 --mega-devices 1000000 \
+        --stream-devices 100000
 """
 from __future__ import annotations
 
@@ -75,6 +82,13 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--mega-chunk", type=int, default=MEGA_CHUNK,
                     help=f"device slab size for --mega-devices "
                          f"(default {MEGA_CHUNK})")
+    ap.add_argument("--stream-devices", type=int, default=0,
+                    help="fleet size for the scale streaming-monitor "
+                         "replay (default 0 = disabled; the committed "
+                         "BENCH_fleet.json uses 100000)")
+    ap.add_argument("--stream-chunk", type=int, default=20_000,
+                    help="device slab size for --stream-devices "
+                         "(default 20000)")
     return ap.parse_args(argv)
 
 
@@ -271,6 +285,72 @@ def run(argv=None) -> None:
     else:
         chunk_block = None
 
+    # -- streaming monitor (ISSUE 5): replay the heterogeneous fleet as a
+    # live poll stream through MonitorService, per backend, and pin the
+    # stream-ingested window energies against the offline audit
+    from repro.core.stream import stream_fleet
+    stream_block = {"n_devices": n, "period_s": 0.001}
+    for be in backends:
+        # timed region is pure replay+ingest (no offline cross-check),
+        # so samples_per_sec is comparable across backends
+        t0 = time.perf_counter()
+        res_s = stream_fleet(n, profile=names, workload=ws, seed=7,
+                             backend=be)
+        wall_s = time.perf_counter() - t0
+        entry = {
+            "n_samples": int(res_s.n_samples),
+            "wall_s": round(wall_s, 4),
+            "samples_per_sec": round(res_s.n_samples / wall_s, 1),
+            "monitor_state_mb": round(res_s.monitor.nbytes() / 1e6, 2),
+        }
+        stream_block[be] = entry
+        emit(f"stream_monitor/backend_{be}_{n}", wall_s * 1e6 / n,
+             f"samples_per_sec={entry['samples_per_sec']};"
+             f"n_samples={entry['n_samples']};"
+             f"state_mb={entry['monitor_state_mb']}")
+    # untimed stream↔offline parity pin at a reduced size
+    nc = min(n, 2000)
+    res_p = stream_fleet(nc, profile=_profile_names(nc),
+                         workload=loads.mixed_fleet_workloads(
+                             nc, seed=7, as_bank=True),
+                         seed=7, compare=True)
+    stream_block["parity_n_devices"] = nc
+    stream_block["parity_max_rel_dev"] = float(np.max(
+        np.abs(res_p.naive_stream_j - res_p.naive_offline_j)
+        / np.abs(res_p.naive_offline_j)))
+    emit(f"stream_monitor/parity_{nc}", 0.0,
+         f"max_rel_dev={stream_block['parity_max_rel_dev']:.3e}")
+
+    # scale streaming replay: spec-synthesised slabs, bounded memory
+    if args.stream_devices > 0:
+        import resource
+        ns = args.stream_devices
+        spec = loads.FleetScenarioSpec(n=ns, seed=7)
+        rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        t0 = time.perf_counter()
+        res_sc = stream_fleet(
+            ns, profile=_profile_names(ns), workload=spec, seed=7,
+            chunk_devices=min(args.stream_chunk, ns), period_s=0.01,
+            monitor_kwargs=dict(ring_slots=4))
+        wall_sc = time.perf_counter() - t0
+        rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        stream_block["scale"] = {
+            "n_devices": ns,
+            "chunk_devices": min(args.stream_chunk, ns),
+            "period_s": 0.01,
+            "n_samples": int(res_sc.n_samples),
+            "wall_s": round(wall_sc, 2),
+            "samples_per_sec": round(res_sc.n_samples / wall_sc, 1),
+            "monitor_state_mb": round(res_sc.monitor.nbytes() / 1e6, 1),
+            "peak_rss_mb": round(rss1 / 1024.0, 1),
+            "peak_rss_before_mb": round(rss0 / 1024.0, 1),
+        }
+        emit(f"stream_monitor/scale_{ns}", wall_sc * 1e6 / ns,
+             f"samples_per_sec={stream_block['scale']['samples_per_sec']};"
+             f"wall_s={wall_sc:.1f};"
+             f"state_mb={stream_block['scale']['monitor_state_mb']};"
+             f"peak_rss_mb={stream_block['scale']['peak_rss_mb']}")
+
     # -- streaming million-device audit: FleetScenarioSpec slabs keep
     # peak memory bounded regardless of fleet size (ISSUE 4)
     mega_block = None
@@ -335,6 +415,7 @@ def run(argv=None) -> None:
                             for k in sorted(by_naive)},
         },
         "hetero_over_shared_wall": round(ratio, 3),
+        "streaming": stream_block,
     }
     if chunk_block is not None:
         payload["chunked"] = chunk_block

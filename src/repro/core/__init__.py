@@ -26,6 +26,8 @@ from repro.core.microbench import (CharacterisationResult, characterise,
                                    estimate_steady_state,
                                    estimate_update_period, measure_transient)
 from repro.core.sensor import OnboardSensor, SensorProfile, SensorUnsupported
+from repro.core.stream import (MonitorService, StreamCorrections,
+                               replay, stream_fleet)
 from repro.core.telemetry import (FleetLedger, FleetSummary,
                                   datacenter_projection)
 
@@ -44,5 +46,6 @@ __all__ = [
     "EnergyLedger", "LedgerEntry", "FleetLedger", "FleetSummary",
     "datacenter_projection",
     "available_backends", "get_backend", "resolve_backend",
+    "MonitorService", "StreamCorrections", "replay", "stream_fleet",
     "ChipPowerModel", "StepActivity", "steps_timeline",
 ]

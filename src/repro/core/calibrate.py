@@ -32,6 +32,23 @@ class CalibrationRecord:
     sampled_fraction: float = 1.0
     created_at: float = 0.0
 
+    @property
+    def correction_gain(self) -> float:
+        """The gain to invert when applying this calibration (1.0 when
+        the record was built without a ground-truth meter)."""
+        return self.gain if self.gain else 1.0
+
+    @property
+    def correction_offset_w(self) -> float:
+        return self.offset_w or 0.0
+
+    @property
+    def time_shift_s(self) -> float:
+        """The §5 re-synchronisation shift: a reading at ``t`` covers the
+        trailing averaging window, so reported timestamps move back by
+        the window (or one update period for window-less transients)."""
+        return self.window_s if self.window_s else self.update_period_s
+
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
 
@@ -63,6 +80,22 @@ class CalibrationRecord:
             raise ValueError("calibration record missing required "
                              f"field(s): {', '.join(missing)}")
         return cls(**{k: v for k, v in data.items() if k in fields})
+
+
+def nominal_record(device_id: str, profile) -> CalibrationRecord:
+    """A synthetic record from a profile's *nominal* catalog parameters.
+
+    No measured gain/offset (the device is uncalibrated — correction
+    inverts nothing); rise time defaults to 2.5 update periods.  This is
+    the record ``fleet_audit(good_practice=True)`` and the streaming
+    monitor's :func:`repro.core.stream.default_calibrations` both build
+    when no measured characterisation is supplied — one recipe, so the
+    offline protocol and the online monitor stay in lock-step.
+    """
+    return CalibrationRecord(
+        device_id, profile.name, profile.update_period_s,
+        profile.window_s, "instant", 2.5 * profile.update_period_s,
+        sampled_fraction=profile.sampled_fraction)
 
 
 def record_from_characterisation(device_id: str, profile_name: str,

@@ -19,6 +19,7 @@ by shape, so repeated trials of a fixed fleet re-use one compilation.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import numpy as np
@@ -236,7 +237,8 @@ def poll_counts(sched: ReadingSchedule, grid: PollGrid, a: np.ndarray,
         counts, slot_b, tail_dt, nonempty = _poll_counts_impl(
             sched, jnp.float64(grid.t0),
             jnp.asarray(grid.t1, jnp.float64),
-            jnp.float64(grid.period_s), jnp.float64(grid.grid_offset),
+            jnp.float64(grid.period_s),
+            jnp.asarray(grid.grid_offset, jnp.float64),
             jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64))
     return (np.asarray(counts), np.asarray(slot_b),
             np.asarray(tail_dt), np.asarray(nonempty))
@@ -246,6 +248,152 @@ def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:
     with enable_x64():
         return np.asarray(_query_slots_impl(
             sched, jnp.asarray(tq, jnp.float64)))
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def _step_integrate_impl(ts, vals, t0, t1, trapezoid: bool):
+    n, m = ts.shape
+    j0 = _searchsorted_rows(ts, t0[:, None], "left")[:, 0]
+    j1 = _searchsorted_rows(ts, t1[:, None], "right")[:, 0] - 1
+
+    nxt_finite = jnp.isfinite(ts[:, 1:])
+    dt = jnp.where(nxt_finite, ts[:, 1:] - ts[:, :-1], 0.0)
+    if trapezoid:
+        dens = 0.5 * (vals[:, :-1]
+                      + jnp.where(nxt_finite, vals[:, 1:], 0.0))
+    else:
+        dens = vals[:, :-1]
+    cum = jnp.concatenate(
+        [jnp.zeros((n, 1)), jnp.cumsum(dens * dt, axis=1)], axis=1)
+
+    j0c = jnp.clip(j0, 0, m - 1)[:, None]
+    j1c = jnp.clip(j1, 0, m - 1)[:, None]
+    core = (jnp.take_along_axis(cum, j1c, axis=1)
+            - jnp.take_along_axis(cum, j0c, axis=1))[:, 0]
+    tail = (jnp.take_along_axis(vals, j1c, axis=1)[:, 0]
+            * (t1 - jnp.take_along_axis(ts, j1c, axis=1)[:, 0]))
+    nonempty = (j1 >= j0) & (j0 < m)
+    return jnp.where(nonempty, core + tail, 0.0)
+
+
+def step_integrate(ts: np.ndarray, vals: np.ndarray, t0: np.ndarray,
+                   t1: np.ndarray, trapezoid: bool = False) -> np.ndarray:
+    """Batched rectangle/trapezoid step integration (see the numpy
+    backend's reference docstring) as one jitted kernel."""
+    ts = np.asarray(ts, dtype=np.float64)
+    if ts.shape[1] == 0:    # no samples at all: every window is 0
+        return np.zeros(ts.shape[0])
+    with enable_x64():
+        return np.asarray(_step_integrate_impl(
+            jnp.asarray(ts, jnp.float64), jnp.asarray(vals, jnp.float64),
+            jnp.asarray(t0, jnp.float64), jnp.asarray(t1, jnp.float64),
+            bool(trapezoid)))
+
+
+@functools.partial(jax.jit, static_argnums=(19,))
+def _stream_ingest_impl(t, v, seg, first, start_idx, end_idx, prev_t,
+                        prev_v, has_prev, run_t, n_changes, gain, offset,
+                        tshift, win_a, win_b, max_hold, env_lo, env_hi,
+                        trapezoid: bool):
+    k = t.shape[0]
+    u = prev_t.shape[0]
+    idx = jnp.arange(k)
+
+    shift_t = jnp.concatenate([jnp.zeros(1), t[:-1]])
+    shift_v = jnp.concatenate([jnp.zeros(1), v[:-1]])
+    pt = jnp.where(first, prev_t[seg], shift_t)
+    pv = jnp.where(first, prev_v[seg], shift_v)
+    has = jnp.where(first, has_prev[seg], True)
+
+    g = gain[seg]
+    off = offset[seg]
+    vc = (v - off) / g
+    pvc = (pv - off) / g
+    dt = t - pt
+    hold = jnp.minimum(dt, max_hold[seg])
+    dens_r = 0.5 * (pv + v) if trapezoid else pv
+    dens_c = 0.5 * (pvc + vc) if trapezoid else pvc
+    inc = jnp.where(has, dens_r * hold, 0.0)
+    inc_c = jnp.where(has, dens_c * hold, 0.0)
+
+    cs = jnp.cumsum(inc)
+    cum_e = cs - (cs[start_idx] - inc[start_idx])[seg]
+    csc = jnp.cumsum(inc_c)
+    cum_ec = csc - (csc[start_idx] - inc_c[start_idx])[seg]
+    d_energy = cum_e[end_idx]
+    d_energy_corr = cum_ec[end_idx]
+
+    a = win_a[seg]
+    b = win_b[seg]
+    w_inc = jnp.where(
+        has & (pt >= a),
+        dens_r * jnp.maximum(jnp.minimum(pt + hold, b) - pt, 0.0), 0.0)
+    pts = pt - tshift[seg]
+    w_inc_c = jnp.where(
+        has & (pts >= a),
+        dens_c * jnp.maximum(jnp.minimum(pts + hold, b) - pts, 0.0), 0.0)
+    d_win = jax.ops.segment_sum(w_inc, seg, num_segments=u)
+    d_win_corr = jax.ops.segment_sum(w_inc_c, seg, num_segments=u)
+
+    change = has & (v != pv)
+    ci = jnp.where(change, idx, -1)
+    acc = lax.cummax(ci)
+    acc_excl = jnp.concatenate([jnp.full(1, -1, dtype=acc.dtype),
+                                acc[:-1]])
+    gstart = start_idx[seg]
+    prev_chg = jnp.where(acc_excl >= gstart, acc_excl, -1)
+    run_start = jnp.where(prev_chg >= 0, t[jnp.maximum(prev_chg, 0)],
+                          run_t[seg])
+    run_dur = jnp.where(change, t - run_start, 0.0)
+    cchg = jnp.cumsum(change)
+    chg_before_slab = (cchg - (cchg[start_idx] - change[start_idx])[seg]
+                       - change)
+    run_rec = change & (n_changes[seg] + chg_before_slab >= 1)
+
+    new_run_t = jnp.where(acc[end_idx] >= start_idx,
+                          t[jnp.maximum(acc[end_idx], 0)], run_t)
+    new_n_changes = n_changes + jax.ops.segment_sum(
+        change.astype(jnp.int64), seg, num_segments=u)
+
+    counts = jax.ops.segment_sum(jnp.ones(k, dtype=jnp.int64), seg,
+                                 num_segments=u)
+    sum_vc = jax.ops.segment_sum(vc, seg, num_segments=u)
+    out = ((vc < env_lo[seg]) | (vc > env_hi[seg])).astype(jnp.int64)
+    n_out = jax.ops.segment_sum(out, seg, num_segments=u)
+
+    return (t[end_idx], v[end_idx], new_run_t, new_n_changes, counts,
+            d_energy, d_energy_corr, d_win, d_win_corr, sum_vc, n_out,
+            cum_e, cum_ec, vc, run_dur, run_rec)
+
+
+def stream_ingest(t, v, seg, first, start_idx, end_idx, prev_t, prev_v,
+                  has_prev, run_t, n_changes, gain, offset, tshift,
+                  win_a, win_b, max_hold, env_lo, env_hi,
+                  trapezoid: bool = False) -> Tuple:
+    """Streaming-monitor ingest slab (see the numpy backend's reference
+    docstring), fused into one jitted kernel; compiled once per
+    (K, U) slab shape, so a fixed-tick replay reuses one compilation."""
+    with enable_x64():
+        outs = _stream_ingest_impl(
+            jnp.asarray(t, jnp.float64), jnp.asarray(v, jnp.float64),
+            jnp.asarray(seg, jnp.int64), jnp.asarray(first, jnp.bool_),
+            jnp.asarray(start_idx, jnp.int64),
+            jnp.asarray(end_idx, jnp.int64),
+            jnp.asarray(prev_t, jnp.float64),
+            jnp.asarray(prev_v, jnp.float64),
+            jnp.asarray(has_prev, jnp.bool_),
+            jnp.asarray(run_t, jnp.float64),
+            jnp.asarray(n_changes, jnp.int64),
+            jnp.asarray(gain, jnp.float64),
+            jnp.asarray(offset, jnp.float64),
+            jnp.asarray(tshift, jnp.float64),
+            jnp.asarray(win_a, jnp.float64),
+            jnp.asarray(win_b, jnp.float64),
+            jnp.asarray(max_hold, jnp.float64),
+            jnp.asarray(env_lo, jnp.float64),
+            jnp.asarray(env_hi, jnp.float64),
+            bool(trapezoid))
+    return tuple(np.asarray(o) for o in outs)
 
 
 @jax.jit

@@ -17,6 +17,12 @@ Kernels
 * :func:`poll_counts`           — closed-form poll counting for
   ``integrate_polled`` (how many uniform poll instants land in each
   reading interval, plus the partial final step)
+* :func:`step_integrate`        — batched rectangle/trapezoid
+  integration of sampled reading series (the single source of truth
+  shared by ``meter._integrate_readings`` and the streaming monitor)
+* :func:`stream_ingest`         — the streaming monitor's hot path:
+  one slab of (device, t, reading) samples folded into per-device
+  online accumulators (energy, windowed energy, run tracking)
 
 No module in this file imports from the rest of :mod:`repro` — backends
 sit at the bottom of the dependency graph so ``ground_truth`` and
@@ -272,6 +278,174 @@ StreamingMoments`), so a chunked audit never reduces over all N errors
     m2 = float(np.sum((e - mean) ** 2))
     ae = np.abs(e)
     return n, mean, m2, float(np.mean(ae)), float(np.max(ae))
+
+
+def step_integrate(ts: np.ndarray, vals: np.ndarray, t0: np.ndarray,
+                   t1: np.ndarray, trapezoid: bool = False) -> np.ndarray:
+    """Batched ``meter._integrate_readings``: integrate each row's sampled
+    reading series over ``[t0_i, t1_i]``.
+
+    ``ts`` is [N, M] per-row *non-decreasing* sample times — pad unused
+    trailing slots with ``+inf`` — and ``vals`` [N, M] the readings.
+    Samples with ``t0 <= ts <= t1`` contribute; sample ``j`` holds until
+    the next sample (the last selected one holds to ``t1``), exactly the
+    scalar reference's rectangle rule.  ``trapezoid=True`` replaces each
+    interval's held value with the two endpoints' mean (the final partial
+    step stays rectangular — there is no sample beyond it).  Rows whose
+    window selects no sample integrate to 0.
+
+    Selection is two row-wise exact binary searches, the interior sum a
+    prefix-sum difference, so the whole thing is O(N·M) with no Python
+    loop — this is the one rectangle/trapezoid implementation shared by
+    the offline §5 protocol and the online streaming monitor.
+    """
+    ts = np.asarray(ts, dtype=np.float64)
+    vals = np.asarray(vals, dtype=np.float64)
+    t0 = np.asarray(t0, dtype=np.float64)
+    t1 = np.asarray(t1, dtype=np.float64)
+    n, m = ts.shape
+    if m == 0:      # no samples at all: every window integrates to 0
+        return np.zeros(n)
+    j0 = searchsorted_rows(ts, t0[:, None], "left")[:, 0]
+    j1 = searchsorted_rows(ts, t1[:, None], "right")[:, 0] - 1
+
+    nxt_finite = np.isfinite(ts[:, 1:])
+    # padding slots are +inf; mask the operands (not just the result) so
+    # no inf - inf is ever evaluated
+    dt = (np.where(nxt_finite, ts[:, 1:], 0.0)
+          - np.where(nxt_finite, ts[:, :-1], 0.0))
+    if trapezoid:
+        dens = 0.5 * (vals[:, :-1] + np.where(nxt_finite, vals[:, 1:], 0.0))
+    else:
+        dens = vals[:, :-1]
+    cum = np.concatenate([np.zeros((n, 1)), np.cumsum(dens * dt, axis=1)],
+                         axis=1)
+
+    j0c = np.clip(j0, 0, m - 1)[:, None]
+    j1c = np.clip(j1, 0, m - 1)[:, None]
+    core = (np.take_along_axis(cum, j1c, axis=1)
+            - np.take_along_axis(cum, j0c, axis=1))[:, 0]
+    tail = (np.take_along_axis(vals, j1c, axis=1)[:, 0]
+            * (t1 - np.take_along_axis(ts, j1c, axis=1)[:, 0]))
+    nonempty = (j1 >= j0) & (j0 < m)
+    return np.where(nonempty, core + tail, 0.0)
+
+
+def stream_ingest(t: np.ndarray, v: np.ndarray, seg: np.ndarray,
+                  first: np.ndarray, start_idx: np.ndarray,
+                  end_idx: np.ndarray, prev_t: np.ndarray,
+                  prev_v: np.ndarray, has_prev: np.ndarray,
+                  run_t: np.ndarray, n_changes: np.ndarray,
+                  gain: np.ndarray, offset: np.ndarray,
+                  tshift: np.ndarray, win_a: np.ndarray,
+                  win_b: np.ndarray, max_hold: np.ndarray,
+                  env_lo: np.ndarray, env_hi: np.ndarray,
+                  trapezoid: bool = False) -> Tuple:
+    """One slab of the streaming monitor's hot path.
+
+    Inputs are ``K`` accepted samples sorted by (device, time) and
+    compacted to ``U`` per-slab device groups: ``seg`` [K] is the group
+    id (0..U-1, contiguous and ascending), ``first`` [K] marks each
+    group's first sample, ``start_idx``/``end_idx`` [U] are the group
+    boundary positions (host-computed so the jax twin stays static-shape).
+    The remaining [U] vectors are the gathered per-device monitor state
+    (``prev_*``, ``has_prev``, ``run_t``, ``n_changes`` — ``run_t``
+    pre-initialised to the slab's first sample time for brand-new
+    devices) and correction parameters: ``gain``/``offset`` invert the
+    calibrated transform, ``tshift`` re-synchronises reported timestamps
+    (a reading at ``t`` covers ``[t - tshift, t]``), ``win_a``/``win_b``
+    bound each device's registered measurement window, ``max_hold`` caps
+    how long one reading may be extrapolated across a sampling gap
+    (``inf`` = plain rectangle), ``env_lo``/``env_hi`` the calibrated
+    plausibility envelope.
+
+    Returns, per group [U]: ``new_t, new_v, new_run_t, new_n_changes,
+    counts, d_energy, d_energy_corr, d_win, d_win_corr, sum_vc, n_out``
+    and, per sample [K]: ``cum_e, cum_ec`` (within-slab inclusive energy
+    prefixes for ring snapshots), ``vc`` (corrected readings),
+    ``run_dur, run_rec`` (completed-run durations and whether each is a
+    *complete* run — bounded by a reading change on both sides — for the
+    online update-period histogram).
+    """
+    t = np.asarray(t, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    k = t.shape[0]
+    u = prev_t.shape[0]
+    idx = np.arange(k)
+
+    # previous sample within the slab, or the stored state at group starts
+    shift_t = np.concatenate([[0.0], t[:-1]])
+    shift_v = np.concatenate([[0.0], v[:-1]])
+    pt = np.where(first, prev_t[seg], shift_t)
+    pv = np.where(first, prev_v[seg], shift_v)
+    has = np.where(first, has_prev[seg], True)
+
+    g = gain[seg]
+    off = offset[seg]
+    vc = (v - off) / g
+    pvc = (pv - off) / g
+    dt = t - pt
+    hold = np.minimum(dt, max_hold[seg])
+    dens_r = 0.5 * (pv + v) if trapezoid else pv
+    dens_c = 0.5 * (pvc + vc) if trapezoid else pvc
+    inc = np.where(has, dens_r * hold, 0.0)
+    inc_c = np.where(has, dens_c * hold, 0.0)
+
+    # within-group inclusive energy prefixes (global cumsum re-based at
+    # each group's start), so ring snapshots see exact running totals
+    cs = np.cumsum(inc)
+    cum_e = cs - (cs[start_idx] - inc[start_idx])[seg]
+    csc = np.cumsum(inc_c)
+    cum_ec = csc - (csc[start_idx] - inc_c[start_idx])[seg]
+    d_energy = cum_e[end_idx]
+    d_energy_corr = cum_ec[end_idx]
+
+    # registered measurement windows: the §5 naive/corrected protocol's
+    # [a, b] clipping, sample-by-sample (corrected uses reported times,
+    # i.e. raw times shifted back by the averaging window)
+    a = win_a[seg]
+    b = win_b[seg]
+    w_inc = np.where(has & (pt >= a),
+                     dens_r * np.maximum(np.minimum(pt + hold, b) - pt, 0.0),
+                     0.0)
+    pts = pt - tshift[seg]
+    w_inc_c = np.where(has & (pts >= a),
+                       dens_c * np.maximum(np.minimum(pts + hold, b) - pts,
+                                           0.0),
+                       0.0)
+    d_win = np.bincount(seg, weights=w_inc, minlength=u)
+    d_win_corr = np.bincount(seg, weights=w_inc_c, minlength=u)
+
+    # run tracking: a reading change closes the run started at the
+    # previous change; only runs bounded by changes on *both* sides are
+    # recorded (microbench's complete-runs rule, online)
+    change = has & (v != pv)
+    ci = np.where(change, idx, -1)
+    acc = np.maximum.accumulate(ci)
+    acc_excl = np.concatenate([[-1], acc[:-1]])
+    gstart = start_idx[seg]
+    prev_chg = np.where(acc_excl >= gstart, acc_excl, -1)
+    run_start = np.where(prev_chg >= 0, t[np.maximum(prev_chg, 0)],
+                         run_t[seg])
+    run_dur = np.where(change, t - run_start, 0.0)
+    cchg = np.cumsum(change)
+    chg_before_slab = cchg - (cchg[start_idx]
+                              - change[start_idx])[seg] - change
+    run_rec = change & (n_changes[seg] + chg_before_slab >= 1)
+
+    new_run_t = np.where(acc[end_idx] >= start_idx,
+                         t[np.maximum(acc[end_idx], 0)], run_t)
+    new_n_changes = n_changes + np.bincount(
+        seg, weights=change.astype(np.float64), minlength=u).astype(np.int64)
+
+    counts = np.bincount(seg, minlength=u).astype(np.int64)
+    sum_vc = np.bincount(seg, weights=vc, minlength=u)
+    out = ((vc < env_lo[seg]) | (vc > env_hi[seg])).astype(np.float64)
+    n_out = np.bincount(seg, weights=out, minlength=u).astype(np.int64)
+
+    return (t[end_idx], v[end_idx], new_run_t, new_n_changes, counts,
+            d_energy, d_energy_corr, d_win, d_win_corr, sum_vc, n_out,
+            cum_e, cum_ec, vc, run_dur, run_rec)
 
 
 def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:

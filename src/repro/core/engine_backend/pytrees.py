@@ -71,10 +71,12 @@ class PollGrid(NamedTuple):
     sensor's grid ends with its own trial), so device ``i`` owns poll
     indices ``0 .. floor((t1[i] - t0) / period_s) - 1``.  ``grid_offset``
     shifts the *reported* timestamps (the §5 re-synchronisation step)
-    while queries still happen at the true wall-clock instant.
+    while queries still happen at the true wall-clock instant — a
+    scalar, or a per-device [N] array when a fleet mixes averaging
+    windows (each sensor class re-synchronises by its own window).
     """
 
     t0: float
     t1: np.ndarray
     period_s: float
-    grid_offset: float = 0.0
+    grid_offset: "float | np.ndarray" = 0.0

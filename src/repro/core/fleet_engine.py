@@ -430,14 +430,51 @@ class SensorBank:
             out = np.empty(tq.shape)
             for lo in range(0, self.n_devices, chunk_devices):
                 hi = min(lo + chunk_devices, self.n_devices)
-                sub = ReadingSchedule(
-                    sched.ticks[lo:hi], sched.first[lo:hi],
-                    sched.last[lo:hi], sched.k0[lo:hi],
-                    sched.phase[lo:hi], sched.update_period_s[lo:hi])
-                j = self._be.query_slots(sub, tq[lo:hi])
+                j = self._be.query_slots(self._schedule_rows(lo, hi),
+                                         tq[lo:hi])
                 out[lo:hi] = np.take_along_axis(self._values[lo:hi], j,
                                                 axis=1)
         return out[:, 0] if scalar else out
+
+    def _schedule_rows(self, lo: int, hi: int) -> ReadingSchedule:
+        """The attached schedule restricted to device rows [lo, hi)."""
+        sched = self._schedule
+        return ReadingSchedule(
+            sched.ticks[lo:hi], sched.first[lo:hi], sched.last[lo:hi],
+            sched.k0[lo:hi], sched.phase[lo:hi],
+            sched.update_period_s[lo:hi])
+
+    def iter_poll_slabs(self, t0: float, t1: float,
+                        period_s: float = 0.001, tick_s: float = 0.5,
+                        chunk_devices: Optional[int] = None,
+                        device_base: int = 0):
+        """Yield ``(devices, times, readings)`` raw poll-sample slabs —
+        the live-stream emission a :class:`repro.core.stream.\
+MonitorService` consumes.
+
+        The uniform ``poll`` grid over ``[t0, t1)`` is cut into
+        wall-clock ticks of ``tick_s`` and, within a tick, into device
+        chunks (``chunk_devices`` defaults to keeping one slab around a
+        few million samples), so no ``[N, n_poll]`` matrix is ever
+        materialised: peak memory is one slab.  Slabs are flattened
+        device-major; ``device_base`` offsets the emitted device ids
+        (a bank that models rows ``[base, base+n)`` of a larger fleet).
+        """
+        n_polls = int(np.floor((t1 - t0) / period_s))
+        per_tick = max(1, int(round(tick_s / period_s)))
+        if chunk_devices is None:
+            chunk_devices = max(1, 4_000_000 // per_tick)
+        for j_lo in range(0, n_polls, per_tick):
+            j_hi = min(j_lo + per_tick, n_polls)
+            ts = t0 + period_s * np.arange(j_lo, j_hi)
+            m = j_hi - j_lo
+            for lo in range(0, self.n_devices, chunk_devices):
+                hi = min(lo + chunk_devices, self.n_devices)
+                tq = np.broadcast_to(ts[None, :], (hi - lo, m))
+                j = self._be.query_slots(self._schedule_rows(lo, hi), tq)
+                vals = np.take_along_axis(self._values[lo:hi], j, axis=1)
+                dev = np.repeat(np.arange(lo, hi) + device_base, m)
+                yield dev, np.tile(ts, hi - lo), vals.ravel()
 
     def poll(self, t0: float, t1: float, period_s: float = 0.001,
              jitter_s: float = 0.0,
@@ -477,7 +514,7 @@ class SensorBank:
                          a: Union[float, np.ndarray],
                          b: Union[float, np.ndarray],
                          transform=None,
-                         grid_offset: float = 0.0,
+                         grid_offset: Union[float, np.ndarray] = 0.0,
                          chunk: int = 2048) -> np.ndarray:
         """Step-integrate each device's polled series over [a_i, b_i].
 
@@ -494,16 +531,17 @@ class SensorBank:
         ``transform`` maps raw readings (e.g. baseline or calibration
         correction) before integration; ``grid_offset`` shifts the
         *reported* poll timestamps (the §5 re-synchronisation step) while
-        queries still happen at the true wall-clock instant; ``poll_t1``
-        may be per-device (each scalar sensor's grid ends with its own
-        trial).
+        queries still happen at the true wall-clock instant — a scalar,
+        or per-device [N] for fleets mixing averaging windows;
+        ``poll_t1`` may be per-device (each scalar sensor's grid ends
+        with its own trial).
         """
         sched = self._schedule
         n = self.n_devices
         a = _as_array(a, n)
         b = _as_array(b, n)
         grid = PollGrid(float(poll_t0), _as_array(poll_t1, n),
-                        float(period_s), float(grid_offset))
+                        float(period_s), _as_array(grid_offset, n))
         # the closed-form poll counting is the backend kernel; the
         # (cheap) weighted contraction below stays NumPy so ``transform``
         # may be any Python callable over the reading matrix
@@ -561,7 +599,14 @@ class StreamingMoments:
 
     def update(self, e: np.ndarray, backend=None) -> "StreamingMoments":
         be = backend if backend is not None else get_backend("numpy")
-        nb, mean_b, m2_b, mean_abs_b, max_abs_b = be.err_moments(e)
+        return self.merge(*be.err_moments(e))
+
+    def merge(self, nb: int, mean_b: float, m2_b: float,
+              mean_abs_b: float, max_abs_b: float) -> "StreamingMoments":
+        """Fold one pre-reduced moment block (Chan's parallel-Welford
+        update) — the primitive behind :meth:`update`, also fed directly
+        by callers that reduce their own slabs (the streaming monitor's
+        per-label bincount path)."""
         if nb == 0:
             return self
         na = self.n
@@ -726,12 +771,9 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
 
     calibs: Dict[str, "CalibrationRecord"] = {}
     if good_practice:
+        from repro.core.calibrate import nominal_record
         for name in set(names):
-            p = _profiles.get(name)
-            calibs[name] = CalibrationRecord(
-                "fleet", name, p.update_period_s, p.window_s, "instant",
-                2.5 * p.update_period_s,
-                sampled_fraction=p.sampled_fraction)
+            calibs[name] = nominal_record("fleet", _profiles.get(name))
 
     be = get_backend(resolve_backend(backend))
     naive_j = np.empty(n_devices)

@@ -167,14 +167,19 @@ class ModuleScopeError(RuntimeError):
 
 def _integrate_readings(ts: np.ndarray, vals: np.ndarray,
                         t0: float, t1: float) -> float:
-    """Step-integrate the polled reading series over [t0, t1]."""
-    sel = (ts >= t0) & (ts <= t1)
-    if not np.any(sel):
-        return 0.0
-    t = ts[sel]
-    v = vals[sel]
-    dt = np.diff(np.concatenate([t, [t1]]))
-    return float(np.sum(v * dt))
+    """Step-integrate the polled reading series over [t0, t1].
+
+    Thin scalar wrapper over the shared batched kernel
+    (:func:`repro.core.engine_backend.numpy_backend.step_integrate`) —
+    the single rectangle-rule implementation behind both this offline §5
+    protocol and the streaming monitor's online accumulation.
+    """
+    from repro.core.engine_backend.numpy_backend import step_integrate
+    return float(step_integrate(
+        np.asarray(ts, dtype=np.float64)[None, :],
+        np.asarray(vals, dtype=np.float64)[None, :],
+        np.array([t0], dtype=np.float64),
+        np.array([t1], dtype=np.float64))[0])
 
 
 def _check_scope(sensor: OnboardSensor, host_baseline_w: Optional[float]) -> float:
@@ -212,7 +217,7 @@ def measure_good_practice(sensor: OnboardSensor, workload: Workload,
     reps = int(_reps_for(dur, cfg))
 
     part_time = (calib.sampled_fraction < 0.999)
-    W = calib.window_s if calib.window_s else calib.update_period_s
+    W = calib.time_shift_s
     shifts = cfg.n_phase_shifts if part_time else 0
 
     trial_values: List[float] = []
@@ -505,7 +510,7 @@ def measure_good_practice_batch(
         sub = bank.subset(rows)
         cal = calibs[name]
         part_time = (cal.sampled_fraction < 0.999)
-        W = cal.window_s if cal.window_s else cal.update_period_s
+        W = cal.time_shift_s
         shifts = cfg.n_phase_shifts if part_time else 0
         rise = cal.rise_time_s if (cfg.discard_rise and
                                    np.isfinite(cal.rise_time_s)) else 0.0

@@ -28,6 +28,26 @@ from repro.core.sensor import OnboardSensor
 # 4.1 Power update period
 # ---------------------------------------------------------------------------
 
+def complete_run_durations(ts: np.ndarray, vals: np.ndarray) -> np.ndarray:
+    """Durations of *complete* runs of identical consecutive readings.
+
+    A run is complete when it is bounded by a reading change on both
+    sides: the first run starts at the poll grid's origin, not at a
+    reading boundary (the sensor's phase truncates it by up to one
+    period), and the last run is cut off by the capture end — both are
+    dropped, the rule shared by the offline estimator below and the
+    streaming monitor's online estimator
+    (:class:`repro.core.stream.OnlinePeriodEstimator`), which extracts
+    the same change-to-change durations sample-by-sample.
+    """
+    ts = np.asarray(ts, dtype=np.float64)
+    vals = np.asarray(vals)
+    change = np.flatnonzero(np.diff(vals) != 0.0)
+    if len(change) < 2:
+        return np.empty(0)
+    return np.diff(ts[change])
+
+
 def estimate_update_period(sensor: OnboardSensor,
                            query_period_s: float = 0.001,
                            duration_s: float = 8.0,
@@ -36,25 +56,18 @@ def estimate_update_period(sensor: OnboardSensor,
     """Drive a fast square wave and measure how often readings change.
 
     The paper queries at ~1 ms with a 20 ms square-wave load and takes the
-    median length of runs of identical readings.
-
-    Only *complete* runs — bounded by a reading change on both sides —
-    enter the median.  The first run starts at the poll grid's origin,
-    not at a reading boundary (the sensor's phase truncates it by up to
-    one period), and the last run is cut off by the capture end; both
-    would bias short captures low.
+    median length of runs of identical readings — complete runs only
+    (see :func:`complete_run_durations`); fewer than three cannot
+    support a median and report nan.
     """
     wave = loads.square_wave(period_s=0.020,
                              n_cycles=int(duration_s / 0.020),
                              p_high=p_high, p_low=p_low, seed=11)
     sensor.attach(wave, t_end=duration_s)
     ts, vals = sensor.poll(0.0, duration_s, period_s=query_period_s)
-    # run lengths of identical consecutive readings, between changes only
-    change = np.flatnonzero(np.diff(vals) != 0.0)
-    if len(change) < 4:        # need >= 3 complete runs for a median
+    periods = complete_run_durations(ts, vals)
+    if len(periods) < 3:
         return float("nan")
-    run_lengths = np.diff(change)
-    periods = run_lengths * query_period_s
     return float(np.median(periods))
 
 

@@ -1,0 +1,37 @@
+"""Streaming fleet monitor: online ingestion, correction, query serving.
+
+Everything else in :mod:`repro.core` is offline — ``fleet_audit``,
+``measure_*_batch`` and ``SensorBank.integrate_polled`` all need the
+full workload timeline before integrating.  This package is the *live*
+counterpart: raw per-device poll samples arrive tick by tick (in any
+order, with duplicates and gaps) and the paper's §5 corrections are
+applied as they arrive, so corrected energy queries are served while
+the fleet is still running.
+
+Layers (see ``docs/streaming.md``):
+
+* :mod:`~repro.core.stream.state` — stacked per-device accumulators and
+  the recent-sample ring buffer (no per-device Python objects);
+* :mod:`~repro.core.stream.estimators` — the online update-period
+  estimator and the stacked §5 correction parameters;
+* :mod:`~repro.core.stream.monitor` — :class:`MonitorService`, the
+  ingestion + query API (hot kernels live in
+  :mod:`repro.core.engine_backend`, one implementation per backend);
+* :mod:`~repro.core.stream.replay` — drivers that replay any
+  ``SensorBank`` / ``TimelineBank`` / ``FleetScenarioSpec`` fleet as a
+  live stream, pinned against the offline audit on the same schedules.
+"""
+from repro.core.stream.estimators import (OnlinePeriodEstimator,
+                                          StreamCorrections,
+                                          default_calibrations)
+from repro.core.stream.monitor import (FleetEnergy, IngestReport,
+                                       MonitorService)
+from repro.core.stream.replay import StreamFleetResult, replay, stream_fleet
+from repro.core.stream.state import DeviceState, IngestBuffer
+
+__all__ = [
+    "DeviceState", "IngestBuffer",
+    "OnlinePeriodEstimator", "StreamCorrections", "default_calibrations",
+    "FleetEnergy", "IngestReport", "MonitorService",
+    "StreamFleetResult", "replay", "stream_fleet",
+]

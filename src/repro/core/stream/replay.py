@@ -1,0 +1,240 @@
+"""Replay drivers: run any fleet as a live poll-sample stream.
+
+:func:`replay` pushes a :class:`~repro.core.fleet_engine.SensorBank`'s
+poll grid through a :class:`~repro.core.stream.monitor.MonitorService`
+tick by tick, optionally injecting the failure modes a real collection
+pipeline produces — shuffled arrival order, duplicated samples, dropped
+samples, and samples delayed into a later tick (which arrive late and
+are counted, not integrated).
+
+:func:`stream_fleet` is the end-to-end driver: it builds the same
+per-device sensor fleet as :func:`repro.core.fleet_engine.fleet_audit`
+(same profiles, seeds, hidden parameters, workload synthesis and attach
+geometry), streams it through a monitor in bounded-memory device slabs,
+and — with ``compare=True`` — computes the offline
+``integrate_polled`` ground truth on the very same reading schedules, so
+the stream/offline parity is measured on identical inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import load as loads
+from repro.core import profiles as _profiles
+from repro.core.fleet_engine import SensorBank
+from repro.core.meter import Workload, as_workload_set
+from repro.core.stream.estimators import (StreamCorrections,
+                                          default_calibrations)
+from repro.core.stream.monitor import MonitorService
+
+
+def replay(bank: SensorBank, monitor: MonitorService, t0: float, t1: float,
+           period_s: float = 0.001, tick_s: float = 0.5,
+           chunk_devices: Optional[int] = None, device_base: int = 0, *,
+           shuffle: bool = False, dup_fraction: float = 0.0,
+           drop_fraction: float = 0.0, delay_fraction: float = 0.0,
+           seed: int = 0,
+           progress: Optional[Callable] = None) -> Dict[str, int]:
+    """Stream ``bank``'s poll grid into ``monitor`` slab by slab.
+
+    The injection knobs model a lossy collection pipeline: ``shuffle``
+    permutes each slab (the monitor re-sorts), ``dup_fraction`` re-emits
+    that fraction of samples, ``drop_fraction`` removes samples
+    (sampling gaps), ``delay_fraction`` holds samples back one slab so
+    they arrive out of order across slabs (late — dropped and counted).
+    With all knobs at zero the replay is bit-exact: every poll instant
+    arrives exactly once, in order.  ``progress(monitor, t_emitted)``
+    is called after each ingested slab.  Returns the monitor's counter
+    snapshot after the replay.
+    """
+    rng = np.random.default_rng(seed)
+    held = None
+    for dev, ts, vs in bank.iter_poll_slabs(
+            t0, t1, period_s=period_s, tick_s=tick_s,
+            chunk_devices=chunk_devices, device_base=device_base):
+        if drop_fraction > 0.0:
+            keep = rng.random(len(dev)) >= drop_fraction
+            dev, ts, vs = dev[keep], ts[keep], vs[keep]
+        if dup_fraction > 0.0 and len(dev):
+            extra = rng.random(len(dev)) < dup_fraction
+            dev = np.concatenate([dev, dev[extra]])
+            ts = np.concatenate([ts, ts[extra]])
+            vs = np.concatenate([vs, vs[extra]])
+        if delay_fraction > 0.0 and len(dev):
+            hold = rng.random(len(dev)) < delay_fraction
+            new_held = (dev[hold], ts[hold], vs[hold])
+            dev, ts, vs = dev[~hold], ts[~hold], vs[~hold]
+        else:
+            new_held = None
+        if held is not None:
+            dev = np.concatenate([held[0], dev])
+            ts = np.concatenate([held[1], ts])
+            vs = np.concatenate([held[2], vs])
+        held = new_held
+        if shuffle and len(dev):
+            perm = rng.permutation(len(dev))
+            dev, ts, vs = dev[perm], ts[perm], vs[perm]
+        if len(dev):
+            monitor.ingest(dev, ts, vs)
+            if progress is not None:
+                progress(monitor, float(ts.max()))
+    if held is not None and len(held[0]):
+        monitor.ingest(*held)
+    return monitor.counters
+
+
+@dataclasses.dataclass
+class StreamFleetResult:
+    """A streamed fleet plus its offline cross-check (see
+    :func:`stream_fleet`)."""
+
+    monitor: MonitorService
+    n_devices: int
+    labels: np.ndarray                  # [N] workload labels
+    durations_s: np.ndarray             # [N] workload spans
+    win_a: np.ndarray                   # [N] §5 window starts
+    win_b: np.ndarray                   # [N] §5 window ends
+    naive_stream_j: np.ndarray          # [N] streamed window energy, raw
+    corrected_stream_j: np.ndarray      # [N] streamed, calibrated+shifted
+    naive_offline_j: Optional[np.ndarray] = None      # integrate_polled
+    corrected_offline_j: Optional[np.ndarray] = None  # integrate_polled
+    n_samples: int = 0
+
+
+def stream_fleet(n_devices: int,
+                 profile: Union[str, Sequence[str]] = "a100",
+                 workload=None, seed: int = 0,
+                 chunk_devices: Optional[int] = None,
+                 period_s: float = 0.001, tick_s: float = 0.5,
+                 start_offset_s: float = 0.3,
+                 host_baseline_w: Optional[float] = None,
+                 backend: Optional[str] = None,
+                 compare: bool = False,
+                 monitor_kwargs: Optional[dict] = None,
+                 progress: Optional[Callable] = None) -> StreamFleetResult:
+    """Monitor a synthetic fleet live, mirroring ``fleet_audit``'s setup.
+
+    Builds the same :class:`SensorBank` slabs as
+    ``fleet_audit(n_devices, profile, workload, seed, chunk_devices)``
+    — identical hidden parameters and reading schedules — registers each
+    device's §5 execution window ``[0.3, 0.3 + duration]``, and streams
+    the poll grid through a :class:`MonitorService`.  With
+    ``compare=True`` the offline ``integrate_polled`` references (raw
+    and calibrated+re-synchronised) are computed on the same schedules,
+    which is the subsystem's parity pin.
+
+    ``workload`` is one shared :class:`~repro.core.meter.Workload`, a
+    :class:`~repro.core.meter.WorkloadSet`/sequence, or a
+    :class:`~repro.core.load.FleetScenarioSpec` (slab-synthesised, so a
+    100k+-device fleet streams at bounded memory).
+    """
+    if workload is None:
+        workload = Workload("audit_burst", loads.multi_phase_workload(
+            [(0.130, 215.0), (0.070, 165.0)]))
+    names = ([profile] * n_devices if isinstance(profile, str)
+             else list(profile))
+    if len(names) != n_devices:
+        raise ValueError(f"{len(names)} profile names for "
+                         f"{n_devices} devices")
+    spec = workload if isinstance(workload, loads.FleetScenarioSpec) else None
+    if spec is not None and spec.n != n_devices:
+        raise ValueError(f"FleetScenarioSpec covers {spec.n} devices, "
+                         f"stream asked for {n_devices}")
+    ws_full = (None if spec is not None
+               else as_workload_set(workload, n_devices))
+
+    if chunk_devices is None:
+        slabs = [(0, n_devices)]
+    else:
+        if chunk_devices < 1:
+            raise ValueError(f"chunk_devices must be >= 1, "
+                             f"got {chunk_devices}")
+        slabs = [(lo, min(lo + chunk_devices, n_devices))
+                 for lo in range(0, n_devices, chunk_devices)]
+
+    def slab_ws(lo, hi):
+        if spec is not None:
+            return spec.workload_set(lo, hi)
+        if ws_full is not None:
+            return ws_full if len(slabs) == 1 else ws_full.rows(lo, hi)
+        return None
+
+    # pass 1 — durations and labels (cheap [N] vectors; workload banks
+    # are regenerated slab-by-slab in the stream pass)
+    durations = np.empty(n_devices)
+    labels = np.empty(n_devices, dtype=object)
+    for lo, hi in slabs:
+        ws = slab_ws(lo, hi)
+        if ws is None:
+            durations[lo:hi] = workload.duration_s
+            labels[lo:hi] = workload.scenario_label
+        else:
+            durations[lo:hi] = ws.durations_s
+            labels[lo:hi] = np.asarray(ws.scenarios)
+
+    module = np.array([_profiles.get(nm).scope == "module" for nm in names])
+    if np.any(module) and host_baseline_w is None:
+        from repro.core.meter import ModuleScopeError
+        raise ModuleScopeError(
+            "module-scope profiles need host_baseline_w to debit host "
+            "power from the stream")
+    baseline = np.where(module, host_baseline_w or 0.0, 0.0)
+    calibs = default_calibrations(names)
+    corr = StreamCorrections.from_calibrations(names, calibs,
+                                               baseline_w=baseline)
+    monitor = MonitorService(n_devices, corrections=corr, labels=labels,
+                             backend=backend, **(monitor_kwargs or {}))
+    win_a = np.full(n_devices, float(start_offset_s))
+    win_b = start_offset_s + durations
+    monitor.set_windows(win_a, win_b)
+
+    naive_off = np.empty(n_devices) if compare else None
+    corr_off = np.empty(n_devices) if compare else None
+
+    # pass 2 — build each slab's bank (identical to fleet_audit's), emit
+    # its poll grid as a live stream, optionally pin the offline result
+    for lo, hi in slabs:
+        bank = SensorBank.from_catalog(
+            names[lo:hi], seeds=np.arange(lo, hi) + seed, backend=backend)
+        ws = slab_ws(lo, hi)
+        if ws is None:
+            tl = workload.timeline.shift(start_offset_s
+                                         - workload.timeline.t_start)
+            bank.attach(tl, t_end=tl.t_end + 1.0)
+            grid_t1 = float(tl.t_end + 0.5)
+        else:
+            tlb = ws.timeline_bank
+            tlb = tlb.shift(start_offset_s - tlb.t_start)
+            bank.attach(tlb, t_end=tlb.t_end + 1.0)
+            grid_t1 = float(np.max(tlb.t_end) + 0.5)
+        replay(bank, monitor, 0.0, grid_t1, period_s=period_s,
+               tick_s=tick_s, device_base=lo, progress=progress)
+
+        if compare:
+            base_rows = baseline[lo:hi]
+            a = win_a[lo:hi]
+            b = win_b[lo:hi]
+            naive_off[lo:hi] = bank.integrate_polled(
+                0.0, grid_t1, period_s, a, b,
+                transform=lambda v, br=base_rows: v - br[:, None])
+            # the calibrated+re-synchronised reference: each sensor
+            # class re-synchronises by its own window (per-device
+            # grid_offset), one pass over the slab
+            gains = corr.gain[lo:hi]
+            offs = corr.offset_w[lo:hi]
+            corr_off[lo:hi] = bank.integrate_polled(
+                0.0, grid_t1, period_s, a, b,
+                transform=lambda v, br=base_rows, g=gains, o=offs:
+                    ((v - br[:, None]) - o[:, None]) / g[:, None],
+                grid_offset=-corr.time_shift_s[lo:hi])
+
+    return StreamFleetResult(
+        monitor=monitor, n_devices=n_devices, labels=labels,
+        durations_s=durations, win_a=win_a, win_b=win_b,
+        naive_stream_j=monitor.window_energy(corrected=False),
+        corrected_stream_j=monitor.window_energy(corrected=True),
+        naive_offline_j=naive_off, corrected_offline_j=corr_off,
+        n_samples=monitor.counters["accepted"])

@@ -1,0 +1,129 @@
+"""Stacked per-device state for the streaming fleet monitor.
+
+No per-device Python objects anywhere — the same array discipline as
+:class:`~repro.core.fleet_engine.SensorBank`: every accumulator is one
+[N] (or [N, R]) array, updated by scatter operations over the devices a
+slab actually touched.
+
+Two layers:
+
+* :class:`DeviceState` — the streaming accumulators: last accepted
+  sample, running raw/corrected energy, registered-window energy,
+  run-tracking state for the online update-period estimator, ingestion
+  counters, and the EWMA used for drift detection.
+* :class:`IngestBuffer` — a ring of each device's most recent samples
+  ``(t, reading, running raw energy, running corrected energy)``.  The
+  energy snapshots make any *recent* instant exactly reconstructible
+  (``energy_at = e[j] + v[j] · (t - t[j])``), which is what serves
+  windowed mid-run queries without keeping the full history.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeviceState:
+    """Streaming accumulators, one slot per device (see module doc)."""
+
+    last_t: np.ndarray          # [N] newest accepted sample time
+    last_v: np.ndarray          # [N] newest accepted (baselined) reading
+    has: np.ndarray             # [N] device has reported at least once
+    first_t: np.ndarray         # [N] first accepted sample time
+    n_samples: np.ndarray       # [N] accepted samples
+    n_dup: np.ndarray           # [N] duplicates dropped
+    n_late: np.ndarray          # [N] out-of-order (late) samples dropped
+    energy_j: np.ndarray        # [N] ∫ raw readings dt since first sample
+    energy_corr_j: np.ndarray   # [N] ∫ corrected readings dt
+    win_j: np.ndarray           # [N] raw energy clipped to the window
+    win_corr_j: np.ndarray      # [N] corrected energy clipped to the window
+    run_t: np.ndarray           # [N] time of the last reading change
+    n_changes: np.ndarray       # [N] reading changes seen (ever)
+    ewma_w: np.ndarray          # [N] EWMA of corrected readings (drift)
+    n_out: np.ndarray           # [N] readings outside the envelope
+
+    @classmethod
+    def zeros(cls, n: int) -> "DeviceState":
+        f = lambda: np.zeros(n)                       # noqa: E731
+        i = lambda: np.zeros(n, dtype=np.int64)       # noqa: E731
+        return cls(last_t=f(), last_v=f(),
+                   has=np.zeros(n, dtype=bool), first_t=f(),
+                   n_samples=i(), n_dup=i(), n_late=i(),
+                   energy_j=f(), energy_corr_j=f(),
+                   win_j=f(), win_corr_j=f(),
+                   run_t=f(), n_changes=i(), ewma_w=f(), n_out=i())
+
+    @property
+    def n_devices(self) -> int:
+        return self.last_t.shape[0]
+
+    def nbytes(self) -> int:
+        return sum(getattr(self, fld.name).nbytes
+                   for fld in dataclasses.fields(self))
+
+
+class IngestBuffer:
+    """Ring of each device's ``slots`` most recent accepted samples.
+
+    Writes happen once per ingest slab: the caller passes the slab's
+    per-sample within-group ordinals, and only each group's last
+    ``slots`` samples are written (earlier ones would be overwritten in
+    the same slab anyway), so scatter indices never collide.
+
+    ``slots=0`` disables the buffer — the monitor still answers live
+    queries, but windowed/past queries report not-covered.
+    """
+
+    def __init__(self, n_devices: int, slots: int):
+        if slots < 0:
+            raise ValueError(f"ring slots must be >= 0, got {slots}")
+        self.slots = int(slots)
+        self.n_written = np.zeros(n_devices, dtype=np.int64)
+        if self.slots:
+            self.t = np.full((n_devices, self.slots), np.inf)
+            self.v = np.zeros((n_devices, self.slots))
+            self.e_raw = np.zeros((n_devices, self.slots))
+            self.e_corr = np.zeros((n_devices, self.slots))
+
+    def nbytes(self) -> int:
+        n = self.n_written.nbytes
+        if self.slots:
+            n += self.t.nbytes + self.v.nbytes
+            n += self.e_raw.nbytes + self.e_corr.nbytes
+        return n
+
+    def write(self, dev: np.ndarray, ordinal: np.ndarray,
+              group_count: np.ndarray, t: np.ndarray, v: np.ndarray,
+              e_raw: np.ndarray, e_corr: np.ndarray,
+              u_dev: np.ndarray, counts: np.ndarray) -> None:
+        """Append one slab's accepted samples.
+
+        ``dev``/``ordinal``/``group_count`` are per-sample [K] (device
+        id, position within its device's group, that group's size);
+        ``u_dev``/``counts`` are the slab's distinct devices and their
+        sample counts [U].
+        """
+        if self.slots:
+            keep = ordinal >= group_count - self.slots
+            d = dev[keep]
+            slot = (self.n_written[d] + ordinal[keep]) % self.slots
+            self.t[d, slot] = t[keep]
+            self.v[d, slot] = v[keep]
+            self.e_raw[d, slot] = e_raw[keep]
+            self.e_corr[d, slot] = e_corr[keep]
+        self.n_written[u_dev] += counts
+
+    def sorted_view(self):
+        """``(t, v, e_raw, e_corr)`` [N, R] oldest→newest per row, unused
+        slots ``+inf`` — ready for row-wise binary search."""
+        if not self.slots:
+            raise RuntimeError("ring buffer disabled (slots=0)")
+        r = self.slots
+        start = np.where(self.n_written >= r, self.n_written % r, 0)
+        order = (start[:, None] + np.arange(r)[None, :]) % r
+        return (np.take_along_axis(self.t, order, axis=1),
+                np.take_along_axis(self.v, order, axis=1),
+                np.take_along_axis(self.e_raw, order, axis=1),
+                np.take_along_axis(self.e_corr, order, axis=1))

@@ -85,6 +85,31 @@ class FleetLedger:
                                   e.shape).copy()
         self._batches.append((e, s, float(duration_s), lab))
 
+    def register_monitor(self, monitor, t: Optional[float] = None,
+                         corrected: bool = True) -> None:
+        """Fold a live :class:`repro.core.stream.MonitorService` snapshot
+        into the ledger — the online counterpart of
+        :meth:`register_batch`.
+
+        Per-device energies come from ``monitor.fleet_energy(t)``
+        (devices outside ring coverage contribute nothing), sigmas use
+        the calibrated tolerance for gain-calibrated devices and the
+        shunt tolerance otherwise, and the monitor's workload labels
+        flow into :meth:`by_label`.
+        """
+        fe = monitor.fleet_energy(t, corrected=corrected)
+        e = np.where(fe.covered, np.nan_to_num(fe.per_device_j), 0.0)
+        tol = np.where(monitor.corrections.calibrated,
+                       CALIBRATED_TOLERANCE, SHUNT_TOLERANCE)
+        st = monitor.state
+        if np.any(st.has):
+            dur = float(np.max(st.last_t[st.has])
+                        - np.min(st.first_t[st.has]))
+        else:
+            dur = 0.0
+        self.register_batch(e, sigmas_j=tol * np.abs(e), duration_s=dur,
+                            labels=monitor.labels)
+
     def _device_sigma(self, device_id: str, energy_j: float) -> float:
         calib = self.calibrations.get(device_id)
         if calib is not None and calib.gain is not None:

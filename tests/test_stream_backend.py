@@ -1,0 +1,142 @@
+"""numpy↔jax parity for the streaming kernels (ISSUE 5).
+
+The streaming monitor's hot path — ``step_integrate`` and
+``stream_ingest`` — has one implementation per execution backend.  The
+jax kernels must reproduce the numpy reference on random slabs (raw
+kernel outputs) and end-to-end through ``MonitorService`` /
+``stream_fleet`` (the offline-parity pin must hold on both backends).
+Skipped without jax (e.g. the numpy-only core CI job); the CI jax
+matrix job runs this module explicitly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import load as loads
+from repro.core.engine_backend import get_backend, has_jax
+from repro.core.engine_backend import numpy_backend as nb
+from repro.core.stream import MonitorService, replay, stream_fleet
+from repro.core.fleet_engine import SensorBank
+from repro.core.meter import Workload
+
+needs_jax = pytest.mark.skipif(not has_jax(), reason="jax not installed")
+
+MIXED_NAMES = ["a100"] * 8 + ["v100"] * 4 + ["h100_instant"] * 4
+
+
+def _random_slab(rng, k=300, u=11):
+    dev = np.sort(rng.integers(0, u, k))
+    # make groups contiguous ids 0..u'-1
+    uniq, seg = np.unique(dev, return_inverse=True)
+    uu = len(uniq)
+    t = np.empty(k)
+    for g in range(uu):
+        m = seg == g
+        t[m] = np.sort(rng.uniform(0.0, 5.0, m.sum()))
+    v = rng.uniform(60.0, 250.0, k)
+    # force some exact value repeats so run tracking sees real runs
+    rep = rng.random(k) < 0.3
+    v[rep] = np.round(v[rep] / 25.0) * 25.0
+    first = np.r_[True, seg[1:] != seg[:-1]]
+    start_idx = np.flatnonzero(first)
+    end_idx = np.r_[start_idx[1:] - 1, k - 1]
+    state = dict(
+        prev_t=rng.uniform(-1.0, 0.0, uu),
+        prev_v=rng.uniform(60.0, 250.0, uu),
+        has_prev=rng.random(uu) > 0.3,
+        n_changes=rng.integers(0, 4, uu),
+        gain=rng.uniform(0.95, 1.05, uu),
+        offset=rng.uniform(-3.0, 3.0, uu),
+        tshift=np.full(uu, 0.025),
+        win_a=np.full(uu, 1.0),
+        win_b=np.full(uu, 4.0),
+        max_hold=np.where(rng.random(uu) < 0.5, np.inf, 0.5),
+        env_lo=np.full(uu, 0.0),
+        env_hi=np.full(uu, 240.0),
+    )
+    state["run_t"] = np.where(state["has_prev"], state["prev_t"],
+                              t[start_idx])
+    return (t, v, seg, first, start_idx, end_idx, state)
+
+
+@needs_jax
+@pytest.mark.parametrize("trapezoid", [False, True])
+def test_stream_ingest_kernel_parity(trapezoid):
+    jb = get_backend("jax")
+    rng = np.random.default_rng(42)
+    for trial in range(3):
+        t, v, seg, first, start_idx, end_idx, st = _random_slab(rng)
+        args = (t, v, seg, first, start_idx, end_idx,
+                st["prev_t"], st["prev_v"], st["has_prev"], st["run_t"],
+                st["n_changes"], st["gain"], st["offset"], st["tshift"],
+                st["win_a"], st["win_b"], st["max_hold"], st["env_lo"],
+                st["env_hi"], trapezoid)
+        outn = nb.stream_ingest(*args)
+        outj = jb.stream_ingest(*args)
+        assert len(outn) == len(outj)
+        for i, (a, b) in enumerate(zip(outn, outj)):
+            np.testing.assert_allclose(
+                np.asarray(a, dtype=np.float64),
+                np.asarray(b, dtype=np.float64),
+                rtol=1e-12, atol=1e-12,
+                err_msg=f"output {i} (trial {trial})")
+
+
+@needs_jax
+@pytest.mark.parametrize("trapezoid", [False, True])
+def test_step_integrate_kernel_parity(trapezoid):
+    jb = get_backend("jax")
+    rng = np.random.default_rng(7)
+    n, m = 13, 50
+    ts = np.sort(rng.uniform(0.0, 10.0, (n, m)), axis=1)
+    nv = rng.integers(1, m, n)
+    for i in range(n):
+        ts[i, nv[i]:] = np.inf
+    vals = rng.uniform(50.0, 250.0, (n, m))
+    t0 = rng.uniform(-1.0, 5.0, n)
+    t1 = t0 + rng.uniform(0.0, 8.0, n)
+    outn = nb.step_integrate(ts, vals, t0, t1, trapezoid=trapezoid)
+    outj = jb.step_integrate(ts, vals, t0, t1, trapezoid=trapezoid)
+    np.testing.assert_allclose(outj, outn, rtol=1e-12, atol=1e-12)
+
+
+@needs_jax
+def test_monitor_end_to_end_backend_parity():
+    """Same fleet replayed through a numpy-kernel and a jax-kernel
+    monitor: identical ingestion decisions, energies within float
+    accumulation order, and the offline parity pin holds on jax."""
+    n = len(MIXED_NAMES)
+    ws = loads.mixed_fleet_workloads(n, seed=7, as_bank=True)
+    rn = stream_fleet(n, profile=MIXED_NAMES, workload=ws, seed=0,
+                      backend="numpy", compare=True)
+    rj = stream_fleet(n, profile=MIXED_NAMES, workload=ws, seed=0,
+                      backend="jax", compare=True)
+    np.testing.assert_allclose(rj.naive_stream_j, rn.naive_stream_j,
+                               rtol=1e-11)
+    np.testing.assert_allclose(rj.corrected_stream_j,
+                               rn.corrected_stream_j, rtol=1e-11)
+    np.testing.assert_allclose(rj.naive_stream_j, rj.naive_offline_j,
+                               rtol=1e-11)
+    np.testing.assert_allclose(rj.corrected_stream_j,
+                               rj.corrected_offline_j, rtol=1e-11)
+    assert rn.monitor.counters == rj.monitor.counters
+
+
+@needs_jax
+def test_monitor_jax_messy_stream_matches_numpy():
+    bank = SensorBank.from_catalog(["a100"] * 5, seeds=np.arange(5))
+    wl = Workload("w", loads.multi_phase_workload([(0.13, 215.0),
+                                                   (0.07, 165.0)]))
+    tl = wl.timeline.shift(0.3)
+    bank.attach(tl, t_end=tl.t_end + 1.0)
+    mons = {}
+    for be in ("numpy", "jax"):
+        mon = MonitorService(5, backend=be)
+        replay(bank, mon, 0.0, 1.0, shuffle=True, dup_fraction=0.2,
+               delay_fraction=0.1, seed=5)
+        mons[be] = mon
+    assert mons["numpy"].counters == mons["jax"].counters
+    np.testing.assert_allclose(mons["jax"].state.energy_j,
+                               mons["numpy"].state.energy_j, rtol=1e-12)
+    np.testing.assert_allclose(mons["jax"].update_period_s(),
+                               mons["numpy"].update_period_s(),
+                               rtol=1e-9, equal_nan=True)
