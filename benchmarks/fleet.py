@@ -22,7 +22,12 @@ Streaming monitor (ISSUE 5): the heterogeneous fleet is also replayed
 as a *live* poll-sample stream through
 :class:`repro.core.stream.MonitorService` (per backend, pinned against
 the offline audit), and ``--stream-devices`` runs a scale replay with
-spec-synthesised device slabs at bounded memory.  CLI::
+spec-synthesised device slabs at bounded memory.
+
+Pallas kernel tier (ISSUE 6): ``--backend both`` now also times the
+fused-kernel ``pallas`` tier; ``tools/bench_guard.py`` dominance rules
+pin the accelerated tiers' streaming ingest above the numpy reference
+at both the main and ``--stream-devices`` scales.  CLI::
 
     python benchmarks/fleet.py --backend both --n-devices 10000 \
         --scale-devices 100000 --mega-devices 1000000 \
@@ -40,7 +45,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core import load as loads
 from repro.core.engine_backend import available_backends
-from repro.core.fleet_engine import fleet_audit
+from repro.core.fleet_engine import SensorBank, fleet_audit
 from repro.core.ledger import EnergyLedger
 from repro.core.meter import WorkloadSet
 from repro.core.telemetry import FleetLedger, datacenter_projection
@@ -65,10 +70,12 @@ def _profile_names(n: int) -> list:
 
 def _parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--backend", choices=("numpy", "jax", "both", "auto"),
+    ap.add_argument("--backend",
+                    choices=("numpy", "jax", "pallas", "both", "auto"),
                     default="both",
                     help="execution backend(s) to benchmark; 'both'/'auto' "
-                         "degrade to numpy-only when jax is missing")
+                         "run every available tier (numpy + jax + pallas) "
+                         "and degrade to numpy-only when jax is missing")
     ap.add_argument("--n-devices", type=int, default=N_DEVICES,
                     help="fleet size for the main audits "
                          f"(default {N_DEVICES})")
@@ -96,9 +103,59 @@ def _selected_backends(choice: str) -> list:
     avail = available_backends()
     if choice in ("both", "auto"):
         return list(avail)
-    if choice == "jax" and "jax" not in avail:
-        raise SystemExit("--backend jax requested but jax is not installed")
+    if choice in ("jax", "pallas") and choice not in avail:
+        raise SystemExit(f"--backend {choice} requested but jax is not "
+                         f"installed")
     return [choice]
+
+
+def _materialize_grid_slabs(n, names, ws, seed, period_s=0.001,
+                            tick_s=0.5, chunk_devices=None,
+                            start_offset_s=0.3):
+    """Pre-generate the clean rectangular poll slabs ``stream_fleet``
+    would emit (same banks, seeds and attach geometry), so the monitor's
+    ingest hot loop can be timed with no sensor simulation inside the
+    timed region."""
+    spec = ws if isinstance(ws, loads.FleetScenarioSpec) else None
+    if chunk_devices is None:
+        chunks = [(0, n)]
+    else:
+        chunks = [(lo, min(lo + chunk_devices, n))
+                  for lo in range(0, n, chunk_devices)]
+    slabs = []
+    for lo, hi in chunks:
+        wsc = (spec.workload_set(lo, hi) if spec is not None
+               else (ws if len(chunks) == 1 else ws.rows(lo, hi)))
+        bank = SensorBank.from_catalog(names[lo:hi],
+                                       seeds=np.arange(lo, hi) + seed)
+        tlb = wsc.timeline_bank
+        tlb = tlb.shift(start_offset_s - tlb.t_start)
+        bank.attach(tlb, t_end=tlb.t_end + 1.0)
+        t1 = float(np.max(tlb.t_end) + 0.5)
+        for dev, ts, vals in bank.iter_poll_slabs(
+                0.0, t1, period_s=period_s, tick_s=tick_s,
+                device_base=lo, grid=True):
+            if len(ts):
+                slabs.append((dev, ts, vals))
+    return slabs
+
+
+def _ingest_throughput(slabs, n, backend):
+    """Time a pure ingest pass over pre-materialised slabs (one untimed
+    warm-up pass first, so jit compilation is not billed to the tier)."""
+    from repro.core.stream import MonitorService
+
+    def one_pass():
+        mon = MonitorService(n, backend=backend)
+        mon.set_windows(np.full(n, 0.3), np.full(n, 1.0))
+        for dev, ts, vals in slabs:
+            mon.ingest_grid(dev, ts, vals)
+
+    one_pass()
+    t0 = time.perf_counter()
+    one_pass()
+    wall = time.perf_counter() - t0
+    return sum(v.size for _, _, v in slabs), wall
 
 
 def _audit_stats(n, names, ws, backend):
@@ -290,24 +347,32 @@ def run(argv=None) -> None:
     # stream-ingested window energies against the offline audit
     from repro.core.stream import stream_fleet
     stream_block = {"n_devices": n, "period_s": 0.001}
+    slabs = _materialize_grid_slabs(n, names, ws, seed=7)
     for be in backends:
-        # timed region is pure replay+ingest (no offline cross-check),
-        # so samples_per_sec is comparable across backends
+        # replay_samples_per_sec times the whole live pipeline (sensor
+        # simulation + ingest); ingest_samples_per_sec isolates the
+        # monitor's ingest hot loop on pre-materialised slabs — the
+        # ISSUE 6 metric the accelerated tiers must dominate
         t0 = time.perf_counter()
         res_s = stream_fleet(n, profile=names, workload=ws, seed=7,
                              backend=be)
         wall_s = time.perf_counter() - t0
+        n_ing, wall_ing = _ingest_throughput(slabs, n, be)
         entry = {
             "n_samples": int(res_s.n_samples),
             "wall_s": round(wall_s, 4),
             "samples_per_sec": round(res_s.n_samples / wall_s, 1),
+            "wall_s_ingest": round(wall_ing, 4),
+            "ingest_samples_per_sec": round(n_ing / wall_ing, 1),
             "monitor_state_mb": round(res_s.monitor.nbytes() / 1e6, 2),
         }
         stream_block[be] = entry
         emit(f"stream_monitor/backend_{be}_{n}", wall_s * 1e6 / n,
              f"samples_per_sec={entry['samples_per_sec']};"
+             f"ingest_samples_per_sec={entry['ingest_samples_per_sec']};"
              f"n_samples={entry['n_samples']};"
              f"state_mb={entry['monitor_state_mb']}")
+    del slabs
     # untimed stream↔offline parity pin at a reduced size
     nc = min(n, 2000)
     res_p = stream_fleet(nc, profile=_profile_names(nc),
@@ -321,35 +386,52 @@ def run(argv=None) -> None:
     emit(f"stream_monitor/parity_{nc}", 0.0,
          f"max_rel_dev={stream_block['parity_max_rel_dev']:.3e}")
 
-    # scale streaming replay: spec-synthesised slabs, bounded memory
+    # scale streaming replay: spec-synthesised slabs, bounded memory —
+    # per backend, so the ISSUE 6 ordering (accelerated tiers dominate
+    # numpy on ingest) is recorded at scale too
     if args.stream_devices > 0:
         import resource
         ns = args.stream_devices
         spec = loads.FleetScenarioSpec(n=ns, seed=7)
-        rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-        t0 = time.perf_counter()
-        res_sc = stream_fleet(
-            ns, profile=_profile_names(ns), workload=spec, seed=7,
-            chunk_devices=min(args.stream_chunk, ns), period_s=0.01,
-            monitor_kwargs=dict(ring_slots=4))
-        wall_sc = time.perf_counter() - t0
-        rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-        stream_block["scale"] = {
+        scale_stream = {
             "n_devices": ns,
             "chunk_devices": min(args.stream_chunk, ns),
             "period_s": 0.01,
-            "n_samples": int(res_sc.n_samples),
-            "wall_s": round(wall_sc, 2),
-            "samples_per_sec": round(res_sc.n_samples / wall_sc, 1),
-            "monitor_state_mb": round(res_sc.monitor.nbytes() / 1e6, 1),
-            "peak_rss_mb": round(rss1 / 1024.0, 1),
-            "peak_rss_before_mb": round(rss0 / 1024.0, 1),
         }
-        emit(f"stream_monitor/scale_{ns}", wall_sc * 1e6 / ns,
-             f"samples_per_sec={stream_block['scale']['samples_per_sec']};"
-             f"wall_s={wall_sc:.1f};"
-             f"state_mb={stream_block['scale']['monitor_state_mb']};"
-             f"peak_rss_mb={stream_block['scale']['peak_rss_mb']}")
+        slabs_sc = _materialize_grid_slabs(
+            ns, _profile_names(ns), spec, seed=7, period_s=0.01,
+            chunk_devices=min(args.stream_chunk, ns))
+        for be in backends:
+            rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+            t0 = time.perf_counter()
+            res_sc = stream_fleet(
+                ns, profile=_profile_names(ns), workload=spec, seed=7,
+                chunk_devices=min(args.stream_chunk, ns), period_s=0.01,
+                backend=be, monitor_kwargs=dict(ring_slots=4))
+            wall_sc = time.perf_counter() - t0
+            rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+            n_ing, wall_ing = _ingest_throughput(slabs_sc, ns, be)
+            scale_stream[be] = {
+                "n_samples": int(res_sc.n_samples),
+                "wall_s": round(wall_sc, 2),
+                "samples_per_sec": round(res_sc.n_samples / wall_sc, 1),
+                "wall_s_ingest": round(wall_ing, 4),
+                "ingest_samples_per_sec": round(n_ing / wall_ing, 1),
+                "devices_per_sec": round(ns / wall_sc, 1),
+                "monitor_state_mb": round(res_sc.monitor.nbytes() / 1e6,
+                                          1),
+                "peak_rss_mb": round(rss1 / 1024.0, 1),
+                "peak_rss_before_mb": round(rss0 / 1024.0, 1),
+            }
+            emit(f"stream_monitor/scale_{be}_{ns}", wall_sc * 1e6 / ns,
+                 f"samples_per_sec={scale_stream[be]['samples_per_sec']};"
+                 f"ingest_samples_per_sec="
+                 f"{scale_stream[be]['ingest_samples_per_sec']};"
+                 f"wall_s={wall_sc:.1f};"
+                 f"state_mb={scale_stream[be]['monitor_state_mb']};"
+                 f"peak_rss_mb={scale_stream[be]['peak_rss_mb']}")
+        del slabs_sc
+        stream_block["scale"] = scale_stream
 
     # -- streaming million-device audit: FleetScenarioSpec slabs keep
     # peak memory bounded regardless of fleet size (ISSUE 4)

@@ -11,6 +11,11 @@ per array backend:
 * :mod:`~repro.core.engine_backend.jax_backend` — ``jax.jit`` + ``vmap``
   kernels (``lax.associative_scan`` for the filter recurrence), traced
   under x64 so results stay within one reporting quantum of NumPy.
+* :mod:`~repro.core.engine_backend.pallas_backend` — fused Pallas
+  kernels for the streaming hot loops (``stream_ingest``,
+  ``stream_ingest_grid``, ``step_integrate``, ``log_filter``), with
+  ``interpret=True`` fallback on CPU-only hosts; gather-bound kernels
+  delegate to the jax tier.
 
 Backends are plain modules sharing one function signature set over the
 pytree containers in :mod:`~repro.core.engine_backend.pytrees`
@@ -39,7 +44,7 @@ __all__ = ["available_backends", "get_backend", "has_jax",
            "TimelineArrays", "numpy_backend"]
 
 _BACKENDS = {"numpy": numpy_backend}
-_KNOWN = ("numpy", "jax")
+_KNOWN = ("numpy", "jax", "pallas")
 
 
 _HAS_JAX: Optional[bool] = None
@@ -68,8 +73,12 @@ def has_jax() -> bool:
 
 
 def available_backends() -> Tuple[str, ...]:
-    """Names accepted by :func:`get_backend`, in preference order."""
-    return ("numpy", "jax") if has_jax() else ("numpy",)
+    """Names accepted by :func:`get_backend`, in preference order.
+
+    The pallas tier rides on the same jax install (its kernels fall back
+    to ``interpret=True`` without an accelerator), so both accelerated
+    tiers appear whenever jax imports."""
+    return ("numpy", "jax", "pallas") if has_jax() else ("numpy",)
 
 
 def resolve_backend(name: Optional[str]) -> str:
@@ -83,8 +92,8 @@ def resolve_backend(name: Optional[str]) -> str:
     if name not in _KNOWN:
         raise ValueError(
             f"unknown backend '{name}'; known: {', '.join(_KNOWN)}")
-    if name == "jax" and not has_jax():
-        raise ValueError("backend 'jax' requested but jax is not "
+    if name in ("jax", "pallas") and not has_jax():
+        raise ValueError(f"backend '{name}' requested but jax is not "
                          "installed; use backend='numpy' or 'auto'")
     return name
 

@@ -335,23 +335,31 @@ def _stream_ingest_impl(t, v, seg, first, start_idx, end_idx, prev_t,
     d_win = jax.ops.segment_sum(w_inc, seg, num_segments=u)
     d_win_corr = jax.ops.segment_sum(w_inc_c, seg, num_segments=u)
 
+    # run tracking without a log-depth ``lax.cummax`` rescan of the slab:
+    # the previous change is found by ordinal arithmetic — scatter each
+    # change's (position, time) at its 1-based change ordinal, then the
+    # change before sample i sits at ordinal ``changes-strictly-before-i``
+    # (slot 0 reads the -1/unused sentinel when there is none).  The
+    # pre-slab maximum is carried in the monitor state (``run_t``), so
+    # per-slab work stays O(slab) with O(1) scatter/gather passes.
     change = has & (v != pv)
-    ci = jnp.where(change, idx, -1)
-    acc = lax.cummax(ci)
-    acc_excl = jnp.concatenate([jnp.full(1, -1, dtype=acc.dtype),
-                                acc[:-1]])
+    chg_i = change.astype(jnp.int64)
+    cchg = jnp.cumsum(chg_i)
+    slot = jnp.where(change, cchg, k + 1)
+    pch = jnp.full(k + 2, -1, dtype=jnp.int64).at[slot].set(
+        jnp.where(change, idx, -1))
+    tch = jnp.zeros(k + 2).at[slot].set(jnp.where(change, t, 0.0))
+    prev_ord = cchg - chg_i
     gstart = start_idx[seg]
-    prev_chg = jnp.where(acc_excl >= gstart, acc_excl, -1)
-    run_start = jnp.where(prev_chg >= 0, t[jnp.maximum(prev_chg, 0)],
+    run_start = jnp.where(pch[prev_ord] >= gstart, tch[prev_ord],
                           run_t[seg])
     run_dur = jnp.where(change, t - run_start, 0.0)
-    cchg = jnp.cumsum(change)
-    chg_before_slab = (cchg - (cchg[start_idx] - change[start_idx])[seg]
-                       - change)
+    chg_before_slab = prev_ord - (cchg - chg_i)[start_idx][seg]
     run_rec = change & (n_changes[seg] + chg_before_slab >= 1)
 
-    new_run_t = jnp.where(acc[end_idx] >= start_idx,
-                          t[jnp.maximum(acc[end_idx], 0)], run_t)
+    ord_last = cchg[end_idx]
+    new_run_t = jnp.where(pch[ord_last] >= start_idx,
+                          tch[ord_last], run_t)
     new_n_changes = n_changes + jax.ops.segment_sum(
         change.astype(jnp.int64), seg, num_segments=u)
 
@@ -379,6 +387,114 @@ def stream_ingest(t, v, seg, first, start_idx, end_idx, prev_t, prev_v,
             jnp.asarray(seg, jnp.int64), jnp.asarray(first, jnp.bool_),
             jnp.asarray(start_idx, jnp.int64),
             jnp.asarray(end_idx, jnp.int64),
+            jnp.asarray(prev_t, jnp.float64),
+            jnp.asarray(prev_v, jnp.float64),
+            jnp.asarray(has_prev, jnp.bool_),
+            jnp.asarray(run_t, jnp.float64),
+            jnp.asarray(n_changes, jnp.int64),
+            jnp.asarray(gain, jnp.float64),
+            jnp.asarray(offset, jnp.float64),
+            jnp.asarray(tshift, jnp.float64),
+            jnp.asarray(win_a, jnp.float64),
+            jnp.asarray(win_b, jnp.float64),
+            jnp.asarray(max_hold, jnp.float64),
+            jnp.asarray(env_lo, jnp.float64),
+            jnp.asarray(env_hi, jnp.float64),
+            bool(trapezoid))
+    return tuple(np.asarray(o) for o in outs)
+
+
+@functools.partial(jax.jit, static_argnums=(15,))
+def _stream_ingest_grid_impl(ts, v, prev_t, prev_v, has_prev, run_t,
+                             n_changes, gain, offset, tshift, win_a,
+                             win_b, max_hold, env_lo, env_hi,
+                             trapezoid: bool):
+    d, m = v.shape
+    pt = jnp.concatenate(
+        [prev_t[:, None],
+         jnp.broadcast_to(ts[:-1][None, :], (d, m - 1))], axis=1)
+    pv = jnp.concatenate([prev_v[:, None], v[:, :-1]], axis=1)
+    has = jnp.concatenate(
+        [has_prev[:, None], jnp.ones((d, m - 1), dtype=bool)], axis=1)
+
+    g = gain[:, None]
+    off = offset[:, None]
+    vc = (v - off) / g
+    pvc = (pv - off) / g
+    dt = ts[None, :] - pt
+    hold = jnp.minimum(dt, max_hold[:, None])
+    dens_r = 0.5 * (pv + v) if trapezoid else pv
+    dens_c = 0.5 * (pvc + vc) if trapezoid else pvc
+    inc = jnp.where(has, dens_r * hold, 0.0)
+    inc_c = jnp.where(has, dens_c * hold, 0.0)
+    cum_e = jnp.cumsum(inc, axis=1)
+    cum_ec = jnp.cumsum(inc_c, axis=1)
+
+    a = win_a[:, None]
+    b = win_b[:, None]
+    w_inc = jnp.where(
+        has & (pt >= a),
+        dens_r * jnp.maximum(jnp.minimum(pt + hold, b) - pt, 0.0), 0.0)
+    pts = pt - tshift[:, None]
+    w_inc_c = jnp.where(
+        has & (pts >= a),
+        dens_c * jnp.maximum(jnp.minimum(pts + hold, b) - pts, 0.0), 0.0)
+
+    # run tracking: every row shares the slab's single tick vector, so
+    # the previous change column is a plain row-wise running maximum of
+    # change positions (the numpy reference's ``maximum.accumulate``) —
+    # gathers from the 1-D ``ts``, no scatters (XLA CPU scatters are
+    # serial and dominated this kernel's profile)
+    change = has & (v != pv)
+    chg_i = change.astype(jnp.int64)
+    cchg = jnp.cumsum(chg_i, axis=1)
+    tsb = jnp.broadcast_to(ts[None, :], (d, m))
+    cols = lax.broadcasted_iota(jnp.int64, (d, m), 1)
+    ci = jnp.where(change, cols, jnp.int64(-1))
+    acc = lax.cummax(ci, axis=1)                  # last change ≤ col j
+    acc_excl = jnp.concatenate(
+        [jnp.full((d, 1), -1, dtype=jnp.int64), acc[:, :-1]], axis=1)
+    run_start = jnp.where(acc_excl >= 0, ts[jnp.maximum(acc_excl, 0)],
+                          run_t[:, None])
+    run_dur = jnp.where(change, tsb - run_start, 0.0)
+    prev_ord = cchg - chg_i                       # changes strictly < j
+    run_rec = change & (n_changes[:, None] + prev_ord >= 1)
+    last = acc[:, -1]
+    new_run_t = jnp.where(last >= 0, ts[jnp.maximum(last, 0)], run_t)
+    new_n_changes = n_changes + cchg[:, -1]
+
+    av = jnp.abs(vc)
+    out = (vc < env_lo[:, None]) | (vc > env_hi[:, None])
+    return (v[:, -1], new_run_t, new_n_changes,
+            cum_e[:, -1], cum_ec[:, -1],
+            jnp.sum(w_inc, axis=1), jnp.sum(w_inc_c, axis=1),
+            jnp.sum(vc, axis=1), jnp.sum(vc * vc, axis=1),
+            jnp.sum(av, axis=1), jnp.max(av, axis=1),
+            jnp.sum(out, axis=1).astype(jnp.int64),
+            cum_e, cum_ec, run_dur, run_rec)
+
+
+def stream_ingest_grid(ts, v, prev_t, prev_v, has_prev, run_t, n_changes,
+                       gain, offset, tshift, win_a, win_b, max_hold,
+                       env_lo, env_hi, trapezoid: bool = False) -> Tuple:
+    """Rectangular-slab streaming ingest (see the numpy backend's
+    reference docstring) fused into one jitted kernel; compiled once per
+    (D, M) slab shape, so a fixed-tick replay reuses one compilation."""
+    ts = np.asarray(ts, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    d, m = v.shape
+    if m == 0:      # empty slab: state passes through untouched
+        z = np.zeros((d, 0))
+        return (np.array(prev_v, dtype=np.float64),
+                np.array(run_t, dtype=np.float64),
+                np.array(n_changes, dtype=np.int64),
+                np.zeros(d), np.zeros(d), np.zeros(d), np.zeros(d),
+                np.zeros(d), np.zeros(d), np.zeros(d), np.zeros(d),
+                np.zeros(d, dtype=np.int64), z, z, z,
+                np.zeros((d, 0), dtype=bool))
+    with enable_x64():
+        outs = _stream_ingest_grid_impl(
+            jnp.asarray(ts, jnp.float64), jnp.asarray(v, jnp.float64),
             jnp.asarray(prev_t, jnp.float64),
             jnp.asarray(prev_v, jnp.float64),
             jnp.asarray(has_prev, jnp.bool_),

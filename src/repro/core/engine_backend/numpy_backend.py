@@ -23,6 +23,9 @@ Kernels
 * :func:`stream_ingest`         — the streaming monitor's hot path:
   one slab of (device, t, reading) samples folded into per-device
   online accumulators (energy, windowed energy, run tracking)
+* :func:`stream_ingest_grid`    — the rectangular fast path of
+  ``stream_ingest``: D devices × one shared strictly-increasing time
+  axis, all accumulators row-wise (no sorting or segmented reductions)
 
 No module in this file imports from the rest of :mod:`repro` — backends
 sit at the bottom of the dependency graph so ``ground_truth`` and
@@ -446,6 +449,108 @@ def stream_ingest(t: np.ndarray, v: np.ndarray, seg: np.ndarray,
     return (t[end_idx], v[end_idx], new_run_t, new_n_changes, counts,
             d_energy, d_energy_corr, d_win, d_win_corr, sum_vc, n_out,
             cum_e, cum_ec, vc, run_dur, run_rec)
+
+
+def stream_ingest_grid(ts: np.ndarray, v: np.ndarray, prev_t: np.ndarray,
+                       prev_v: np.ndarray, has_prev: np.ndarray,
+                       run_t: np.ndarray, n_changes: np.ndarray,
+                       gain: np.ndarray, offset: np.ndarray,
+                       tshift: np.ndarray, win_a: np.ndarray,
+                       win_b: np.ndarray, max_hold: np.ndarray,
+                       env_lo: np.ndarray, env_hi: np.ndarray,
+                       trapezoid: bool = False) -> Tuple:
+    """Rectangular fast path of :func:`stream_ingest`: ``D`` devices share
+    one strictly-increasing time axis ``ts`` [M] with readings ``v``
+    [D, M] (the shape tick-grid emitters such as
+    ``SensorBank.iter_poll_slabs(grid=True)`` produce natively).
+
+    Semantically this is ``stream_ingest`` on the equivalent flattened
+    device-major slab where every device contributes every tick — but
+    with no sorting, no group compaction and no segmented reductions:
+    every accumulator is a row-wise cumulative sum or reduction over the
+    [D, M] block, so the per-sample cost is a handful of vector ops.
+    The per-device state/parameter vectors are all [D]; ``run_t`` must be
+    pre-initialised to ``ts[0]`` for devices without history, exactly as
+    the generic kernel's caller does.
+
+    Returns, per device [D]: ``new_v, new_run_t, new_n_changes,
+    d_energy, d_energy_corr, d_win, d_win_corr, sum_vc, sum_vc2,
+    sum_abs_vc, max_abs_vc, n_out`` and, per sample [D, M]: ``cum_e,
+    cum_ec, run_dur, run_rec``.  (``new_t`` is just ``ts[-1]`` and
+    ``counts`` is ``M`` — the caller computes both; the extra corrected-
+    reading moment sums replace the flattened ``vc`` vector, so label
+    statistics merge from [D] reductions instead of [D·M] samples.)
+    """
+    ts = np.asarray(ts, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    d, m = v.shape
+    if m == 0:      # empty slab: state passes through untouched
+        z = np.zeros((d, 0))
+        return (prev_v.copy(), run_t.copy(), n_changes.copy(),
+                np.zeros(d), np.zeros(d), np.zeros(d), np.zeros(d),
+                np.zeros(d), np.zeros(d), np.zeros(d), np.zeros(d),
+                np.zeros(d, dtype=np.int64), z, z, z,
+                np.zeros((d, 0), dtype=bool))
+
+    # previous sample per column: the stored state at column 0, the
+    # neighbouring column elsewhere
+    pt = np.empty((d, m))
+    pt[:, 0] = prev_t
+    pt[:, 1:] = ts[:-1][None, :]
+    pv = np.concatenate([prev_v[:, None], v[:, :-1]], axis=1)
+    has = np.ones((d, m), dtype=bool)
+    has[:, 0] = has_prev
+
+    g = gain[:, None]
+    off = offset[:, None]
+    vc = (v - off) / g
+    pvc = (pv - off) / g
+    dt = ts[None, :] - pt
+    hold = np.minimum(dt, max_hold[:, None])
+    dens_r = 0.5 * (pv + v) if trapezoid else pv
+    dens_c = 0.5 * (pvc + vc) if trapezoid else pvc
+    inc = np.where(has, dens_r * hold, 0.0)
+    inc_c = np.where(has, dens_c * hold, 0.0)
+    cum_e = np.cumsum(inc, axis=1)
+    cum_ec = np.cumsum(inc_c, axis=1)
+
+    a = win_a[:, None]
+    b = win_b[:, None]
+    w_inc = np.where(has & (pt >= a),
+                     dens_r * np.maximum(np.minimum(pt + hold, b) - pt, 0.0),
+                     0.0)
+    pts = pt - tshift[:, None]
+    w_inc_c = np.where(has & (pts >= a),
+                       dens_c * np.maximum(np.minimum(pts + hold, b) - pts,
+                                           0.0),
+                       0.0)
+
+    # run tracking, row-wise: the previous change within the row (or the
+    # carried ``run_t``) opens the run a change closes
+    change = has & (v != pv)
+    cols = np.arange(m)[None, :]
+    ci = np.where(change, cols, -1)
+    acc = np.maximum.accumulate(ci, axis=1)
+    acc_excl = np.concatenate([np.full((d, 1), -1), acc[:, :-1]], axis=1)
+    run_start = np.where(acc_excl >= 0, ts[np.maximum(acc_excl, 0)],
+                         run_t[:, None])
+    run_dur = np.where(change, ts[None, :] - run_start, 0.0)
+    cchg = np.cumsum(change, axis=1)
+    run_rec = change & (n_changes[:, None] + (cchg - change) >= 1)
+
+    last = acc[:, -1]
+    new_run_t = np.where(last >= 0, ts[np.maximum(last, 0)], run_t)
+    new_n_changes = n_changes + cchg[:, -1]
+
+    av = np.abs(vc)
+    out = (vc < env_lo[:, None]) | (vc > env_hi[:, None])
+    return (v[:, -1].copy(), new_run_t, new_n_changes,
+            cum_e[:, -1].copy(), cum_ec[:, -1].copy(),
+            np.sum(w_inc, axis=1), np.sum(w_inc_c, axis=1),
+            np.sum(vc, axis=1), np.sum(vc * vc, axis=1),
+            np.sum(av, axis=1), np.max(av, axis=1),
+            np.sum(out, axis=1).astype(np.int64),
+            cum_e, cum_ec, run_dur, run_rec)
 
 
 def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:

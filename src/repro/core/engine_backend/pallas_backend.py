@@ -1,0 +1,576 @@
+"""Pallas implementation of the streaming hot-loop kernels.
+
+Same signatures, same semantics as
+:mod:`repro.core.engine_backend.numpy_backend` — NumPy arrays in, NumPy
+arrays out — with the three streaming hot loops fused into
+``pl.pallas_call`` kernels:
+
+* ``stream_ingest`` — jax prologue (per-sample parameter gathers, shift
+  of previous sample/time across group firsts) feeding a 1-D blocked
+  kernel that fuses the hold/window/envelope elementwise math with the
+  running energy cumsums, carried across blocks in VMEM scratch; a jax
+  epilogue re-bases the cumsums at group starts and does the segment
+  reductions and run tracking;
+* ``stream_ingest_grid`` — the rectangular fast path: one fused
+  row-block kernel per device block computing everything (cumulative
+  energies, window overlaps, run tracking via an in-kernel ``cummax``
+  over change columns, and the per-device moment reductions) in a
+  single pass over the ``[block_d, M]`` slab;
+* ``step_integrate`` — row-blocked kernel; the window edges are located
+  by counting (``sum(ts < t0)``), which equals binary search on the
+  sorted, inf-padded rows but vectorises cleanly inside the kernel;
+* ``log_filter`` — the affine recurrence ``y_{i+1} = a_i·y_i + b_i`` as
+  a blocked sequential scan over segment chunks (grid iterates the
+  segment axis innermost; VMEM scratch carries the filter state), the
+  same idiom as :mod:`repro.kernels.rglru_scan`.
+
+Gather-bound kernels with no streaming inner loop (``boxcar_means``,
+``poll_counts``, ``query_slots``, …) delegate to the jax tier — they are
+binary-search + take_along_axis compositions XLA already fuses well, and
+a Pallas rewrite would only re-derive the same gathers.
+
+All kernels run under ``interpret=True`` when no accelerator is present
+(or when ``REPRO_PALLAS_INTERPRET`` is set), so the tier is exercised on
+CPU-only CI with identical float64 semantics.  Kernel construction
+happens inside ``jax.jit`` so each (shape, flags) combination compiles
+once and replays from the jit cache.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.engine_backend import jax_backend as _jb
+from repro.core.engine_backend import numpy_backend as _nb
+
+name = "pallas"
+
+# block sizes: 1-D ingest blocks and the log-filter (chunk, group) tile
+# are padded to these; the grid ingest kernel blocks only the device axis
+_INGEST_BLOCK = 32768
+_GRID_BLOCK_D = 4096
+_SCAN_CHUNK = 64
+_SCAN_BLOCK_G = 512
+_STEP_BLOCK_N = 1024
+
+# gather-bound kernels: same jitted jax implementations, re-exported
+boxcar_means = _jb.boxcar_means
+estimation_means = _jb.estimation_means
+timeline_integral = _jb.timeline_integral
+poll_counts = _jb.poll_counts
+query_slots = _jb.query_slots
+err_moments = _jb.err_moments
+
+
+def _interpret() -> bool:
+    """True when kernels should run via the Pallas interpreter.
+
+    ``REPRO_PALLAS_INTERPRET`` overrides (any value but ``0``/``false``
+    forces interpret mode, ``0`` forces compiled mode); otherwise
+    interpret exactly when the default jax backend is the CPU.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "no")
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, n, value):
+    k = x.shape[0]
+    if k == n:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((n - k,), value, dtype=x.dtype)])
+
+
+# -- stream_ingest: 1-D blocked elementwise + carried cumsums ---------------
+
+def _ingest1d_kernel(t_ref, v_ref, pt_ref, pv_ref, has_ref, g_ref,
+                     off_ref, tsh_ref, wa_ref, wb_ref, mh_ref, el_ref,
+                     eh_ref, inc_ref, incc_ref, cs_ref, csc_ref,
+                     cchg_ref, wi_ref, wic_ref, vc_ref, chg_ref,
+                     out_ref, carry, *, trapezoid: bool):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry[...] = jnp.zeros_like(carry)
+
+    t = t_ref[...]
+    v = v_ref[...]
+    pt = pt_ref[...]
+    pv = pv_ref[...]
+    has = has_ref[...]
+    g = g_ref[...]
+    off = off_ref[...]
+
+    vc = (v - off) / g
+    pvc = (pv - off) / g
+    hold = jnp.minimum(t - pt, mh_ref[...])
+    dens_r = 0.5 * (pv + v) if trapezoid else pv
+    dens_c = 0.5 * (pvc + vc) if trapezoid else pvc
+    inc = jnp.where(has, dens_r * hold, 0.0)
+    inc_c = jnp.where(has, dens_c * hold, 0.0)
+
+    a = wa_ref[...]
+    b = wb_ref[...]
+    wi_ref[...] = jnp.where(
+        has & (pt >= a),
+        dens_r * jnp.maximum(jnp.minimum(pt + hold, b) - pt, 0.0), 0.0)
+    pts = pt - tsh_ref[...]
+    wic_ref[...] = jnp.where(
+        has & (pts >= a),
+        dens_c * jnp.maximum(jnp.minimum(pts + hold, b) - pts, 0.0), 0.0)
+
+    change = has & (v != pv)
+    cs_l = jnp.cumsum(inc)
+    csc_l = jnp.cumsum(inc_c)
+    cchg_l = jnp.cumsum(change.astype(jnp.float64))
+    inc_ref[...] = inc
+    incc_ref[...] = inc_c
+    cs_ref[...] = cs_l + carry[0]
+    csc_ref[...] = csc_l + carry[1]
+    cchg_ref[...] = cchg_l + carry[2]
+    carry[0] = carry[0] + cs_l[-1]
+    carry[1] = carry[1] + csc_l[-1]
+    carry[2] = carry[2] + cchg_l[-1]
+    vc_ref[...] = vc
+    chg_ref[...] = change
+    out_ref[...] = (vc < el_ref[...]) | (vc > eh_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(19, 20))
+def _stream_ingest_impl(t, v, seg, first, start_idx, end_idx, prev_t,
+                        prev_v, has_prev, run_t, n_changes, gain, offset,
+                        tshift, win_a, win_b, max_hold, env_lo, env_hi,
+                        trapezoid: bool, interpret: bool):
+    k = t.shape[0]
+    u = prev_t.shape[0]
+    idx = jnp.arange(k)
+
+    # prologue: per-sample parameter gathers + previous-sample shifts
+    shift_t = jnp.concatenate([jnp.zeros(1), t[:-1]])
+    shift_v = jnp.concatenate([jnp.zeros(1), v[:-1]])
+    pt = jnp.where(first, prev_t[seg], shift_t)
+    pv = jnp.where(first, prev_v[seg], shift_v)
+    has = jnp.where(first, has_prev[seg], True)
+
+    block = min(_INGEST_BLOCK, max(k, 1))
+    kp = -(-k // block) * block
+    # neutral padding: has=False zeroes the increments, gain=1 keeps the
+    # division defined, the open envelope keeps the tail out of n_out
+    args = (
+        _pad_to(t, kp, 0.0), _pad_to(v, kp, 0.0), _pad_to(pt, kp, 0.0),
+        _pad_to(pv, kp, 0.0), _pad_to(has, kp, False),
+        _pad_to(gain[seg], kp, 1.0), _pad_to(offset[seg], kp, 0.0),
+        _pad_to(tshift[seg], kp, 0.0),
+        _pad_to(win_a[seg], kp, jnp.inf),
+        _pad_to(win_b[seg], kp, -jnp.inf),
+        _pad_to(max_hold[seg], kp, 0.0),
+        _pad_to(env_lo[seg], kp, -jnp.inf),
+        _pad_to(env_hi[seg], kp, jnp.inf))
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    f64 = functools.partial(jax.ShapeDtypeStruct, (kp,))
+    outs = pl.pallas_call(
+        functools.partial(_ingest1d_kernel, trapezoid=trapezoid),
+        grid=(kp // block,),
+        in_specs=[spec] * 13,
+        out_specs=[spec] * 10,
+        out_shape=[f64(jnp.float64)] * 7
+        + [f64(jnp.float64), f64(jnp.bool_), f64(jnp.bool_)],
+        scratch_shapes=[pltpu.VMEM((3,), jnp.float64)],
+        interpret=interpret,
+    )(*args)
+    (inc, inc_c, cs, csc, cchg_f, w_inc, w_inc_c, vc, change,
+     out) = (o[:k] for o in outs)
+    cchg = cchg_f.astype(jnp.int64)
+    chg_i = change.astype(jnp.int64)
+
+    # epilogue: re-base the carried cumsums at group starts, segment
+    # reductions, and the same ordinal-scatter run tracking as the jax
+    # tier (see jax_backend._stream_ingest_impl)
+    cum_e = cs - (cs[start_idx] - inc[start_idx])[seg]
+    cum_ec = csc - (csc[start_idx] - inc_c[start_idx])[seg]
+    d_energy = cum_e[end_idx]
+    d_energy_corr = cum_ec[end_idx]
+    d_win = jax.ops.segment_sum(w_inc, seg, num_segments=u)
+    d_win_corr = jax.ops.segment_sum(w_inc_c, seg, num_segments=u)
+
+    slot = jnp.where(change, cchg, k + 1)
+    pch = jnp.full(k + 2, -1, dtype=jnp.int64).at[slot].set(
+        jnp.where(change, idx, -1))
+    tch = jnp.zeros(k + 2).at[slot].set(jnp.where(change, t, 0.0))
+    prev_ord = cchg - chg_i
+    gstart = start_idx[seg]
+    run_start = jnp.where(pch[prev_ord] >= gstart, tch[prev_ord],
+                          run_t[seg])
+    run_dur = jnp.where(change, t - run_start, 0.0)
+    chg_before_slab = prev_ord - (cchg - chg_i)[start_idx][seg]
+    run_rec = change & (n_changes[seg] + chg_before_slab >= 1)
+    ord_last = cchg[end_idx]
+    new_run_t = jnp.where(pch[ord_last] >= start_idx,
+                          tch[ord_last], run_t)
+    new_n_changes = n_changes + jax.ops.segment_sum(
+        chg_i, seg, num_segments=u)
+
+    counts = jax.ops.segment_sum(jnp.ones(k, dtype=jnp.int64), seg,
+                                 num_segments=u)
+    sum_vc = jax.ops.segment_sum(vc, seg, num_segments=u)
+    n_out = jax.ops.segment_sum(out.astype(jnp.int64), seg,
+                                num_segments=u)
+
+    return (t[end_idx], v[end_idx], new_run_t, new_n_changes, counts,
+            d_energy, d_energy_corr, d_win, d_win_corr, sum_vc, n_out,
+            cum_e, cum_ec, vc, run_dur, run_rec)
+
+
+def stream_ingest(t, v, seg, first, start_idx, end_idx, prev_t, prev_v,
+                  has_prev, run_t, n_changes, gain, offset, tshift,
+                  win_a, win_b, max_hold, env_lo, env_hi,
+                  trapezoid: bool = False) -> Tuple:
+    """Streaming-monitor ingest slab (see the numpy backend's reference
+    docstring); the elementwise + cumsum core runs as a blocked Pallas
+    kernel with the running totals carried in VMEM scratch."""
+    t = np.asarray(t, dtype=np.float64)
+    if t.shape[0] == 0:
+        return _nb.stream_ingest(
+            t, v, seg, first, start_idx, end_idx, prev_t, prev_v,
+            has_prev, run_t, n_changes, gain, offset, tshift, win_a,
+            win_b, max_hold, env_lo, env_hi, trapezoid)
+    with enable_x64():
+        outs = _stream_ingest_impl(
+            jnp.asarray(t, jnp.float64), jnp.asarray(v, jnp.float64),
+            jnp.asarray(seg, jnp.int64), jnp.asarray(first, jnp.bool_),
+            jnp.asarray(start_idx, jnp.int64),
+            jnp.asarray(end_idx, jnp.int64),
+            jnp.asarray(prev_t, jnp.float64),
+            jnp.asarray(prev_v, jnp.float64),
+            jnp.asarray(has_prev, jnp.bool_),
+            jnp.asarray(run_t, jnp.float64),
+            jnp.asarray(n_changes, jnp.int64),
+            jnp.asarray(gain, jnp.float64),
+            jnp.asarray(offset, jnp.float64),
+            jnp.asarray(tshift, jnp.float64),
+            jnp.asarray(win_a, jnp.float64),
+            jnp.asarray(win_b, jnp.float64),
+            jnp.asarray(max_hold, jnp.float64),
+            jnp.asarray(env_lo, jnp.float64),
+            jnp.asarray(env_hi, jnp.float64),
+            bool(trapezoid), _interpret())
+    return tuple(np.asarray(o) for o in outs)
+
+
+# -- stream_ingest_grid: fused [block_d, M] row-block kernel ----------------
+
+def _ingest_grid_kernel(ts_ref, v_ref, pt0_ref, pv0_ref, has0_ref,
+                        rt_ref, nch_ref, g_ref, off_ref, tsh_ref,
+                        wa_ref, wb_ref, mh_ref, el_ref, eh_ref,
+                        nv_ref, nrt_ref, nnc_ref, de_ref, dec_ref,
+                        dw_ref, dwc_ref, sv_ref, sv2_ref, sa_ref,
+                        mx_ref, no_ref, ce_ref, cec_ref, rd_ref,
+                        rr_ref, *, trapezoid: bool):
+    ts = ts_ref[...]
+    v = v_ref[...]
+    d, m = v.shape
+
+    pt = jnp.concatenate(
+        [pt0_ref[...][:, None],
+         jnp.broadcast_to(ts[:-1][None, :], (d, m - 1))], axis=1)
+    pv = jnp.concatenate([pv0_ref[...][:, None], v[:, :-1]], axis=1)
+    has = jnp.concatenate(
+        [has0_ref[...][:, None], jnp.full((d, m - 1), True)], axis=1)
+
+    g = g_ref[...][:, None]
+    off = off_ref[...][:, None]
+    vc = (v - off) / g
+    pvc = (pv - off) / g
+    hold = jnp.minimum(ts[None, :] - pt, mh_ref[...][:, None])
+    dens_r = 0.5 * (pv + v) if trapezoid else pv
+    dens_c = 0.5 * (pvc + vc) if trapezoid else pvc
+    inc = jnp.where(has, dens_r * hold, 0.0)
+    inc_c = jnp.where(has, dens_c * hold, 0.0)
+    cum_e = jnp.cumsum(inc, axis=1)
+    cum_ec = jnp.cumsum(inc_c, axis=1)
+    ce_ref[...] = cum_e
+    cec_ref[...] = cum_ec
+    de_ref[...] = cum_e[:, -1]
+    dec_ref[...] = cum_ec[:, -1]
+
+    a = wa_ref[...][:, None]
+    b = wb_ref[...][:, None]
+    w_inc = jnp.where(
+        has & (pt >= a),
+        dens_r * jnp.maximum(jnp.minimum(pt + hold, b) - pt, 0.0), 0.0)
+    pts = pt - tsh_ref[...][:, None]
+    w_inc_c = jnp.where(
+        has & (pts >= a),
+        dens_c * jnp.maximum(jnp.minimum(pts + hold, b) - pts, 0.0), 0.0)
+    dw_ref[...] = jnp.sum(w_inc, axis=1)
+    dwc_ref[...] = jnp.sum(w_inc_c, axis=1)
+
+    # run tracking: the latest change at-or-before each column via an
+    # in-kernel cummax over change column indices (the pre-slab state is
+    # carried in run_t, so the scan never leaves the block)
+    run_t = rt_ref[...]
+    change = has & (v != pv)
+    cols = lax.broadcasted_iota(jnp.int64, (d, m), 1)
+    ci = jnp.where(change, cols, -1)
+    acc = lax.cummax(ci, axis=1)
+    acc_excl = jnp.concatenate(
+        [jnp.full((d, 1), -1, jnp.int64), acc[:, :-1]], axis=1)
+    run_start = jnp.where(acc_excl >= 0,
+                          ts[jnp.maximum(acc_excl, 0)], run_t[:, None])
+    rd_ref[...] = jnp.where(change, ts[None, :] - run_start, 0.0)
+    cchg = jnp.cumsum(change.astype(jnp.int64), axis=1)
+    rr_ref[...] = change & (
+        nch_ref[...][:, None] + (cchg - change) >= 1)
+    last = acc[:, -1]
+    nrt_ref[...] = jnp.where(last >= 0, ts[jnp.maximum(last, 0)], run_t)
+    nnc_ref[...] = nch_ref[...] + cchg[:, -1]
+    nv_ref[...] = v[:, -1]
+
+    av = jnp.abs(vc)
+    out = (vc < el_ref[...][:, None]) | (vc > eh_ref[...][:, None])
+    sv_ref[...] = jnp.sum(vc, axis=1)
+    sv2_ref[...] = jnp.sum(vc * vc, axis=1)
+    sa_ref[...] = jnp.sum(av, axis=1)
+    mx_ref[...] = jnp.max(av, axis=1)
+    no_ref[...] = jnp.sum(out, axis=1).astype(jnp.int64)
+
+
+@functools.partial(jax.jit, static_argnums=(15, 16))
+def _stream_ingest_grid_impl(ts, v, prev_t, prev_v, has_prev, run_t,
+                             n_changes, gain, offset, tshift, win_a,
+                             win_b, max_hold, env_lo, env_hi,
+                             trapezoid: bool, interpret: bool):
+    d, m = v.shape
+    bd = min(_GRID_BLOCK_D, max(d, 1))
+    dp = -(-d // bd) * bd
+    # neutral device padding (dropped by the [:d] slices below)
+    pad2 = lambda x: jnp.concatenate(
+        [x, jnp.zeros((dp - d, m), dtype=x.dtype)]) if dp != d else x
+    args = (
+        ts, pad2(v), _pad_to(prev_t, dp, 0.0), _pad_to(prev_v, dp, 0.0),
+        _pad_to(has_prev, dp, False), _pad_to(run_t, dp, 0.0),
+        _pad_to(n_changes, dp, 0), _pad_to(gain, dp, 1.0),
+        _pad_to(offset, dp, 0.0), _pad_to(tshift, dp, 0.0),
+        _pad_to(win_a, dp, jnp.inf), _pad_to(win_b, dp, -jnp.inf),
+        _pad_to(max_hold, dp, 0.0), _pad_to(env_lo, dp, -jnp.inf),
+        _pad_to(env_hi, dp, jnp.inf))
+    row = pl.BlockSpec((bd,), lambda i: (i,))
+    mat = pl.BlockSpec((bd, m), lambda i: (i, 0))
+    vec = functools.partial(jax.ShapeDtypeStruct, (dp,))
+    slab = functools.partial(jax.ShapeDtypeStruct, (dp, m))
+    outs = pl.pallas_call(
+        functools.partial(_ingest_grid_kernel, trapezoid=trapezoid),
+        grid=(dp // bd,),
+        in_specs=[pl.BlockSpec((m,), lambda i: (0,))] + [mat]
+        + [row] * 13,
+        out_specs=[row] * 12 + [mat] * 4,
+        out_shape=[vec(jnp.float64), vec(jnp.float64), vec(jnp.int64)]
+        + [vec(jnp.float64)] * 8 + [vec(jnp.int64)]
+        + [slab(jnp.float64), slab(jnp.float64), slab(jnp.float64),
+           slab(jnp.bool_)],
+        interpret=interpret,
+    )(*args)
+    return tuple(o[:d] for o in outs)
+
+
+def stream_ingest_grid(ts, v, prev_t, prev_v, has_prev, run_t, n_changes,
+                       gain, offset, tshift, win_a, win_b, max_hold,
+                       env_lo, env_hi, trapezoid: bool = False) -> Tuple:
+    """Rectangular-slab streaming ingest (see the numpy backend's
+    reference docstring) as one fused row-block Pallas kernel."""
+    ts = np.asarray(ts, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    if v.shape[1] == 0:
+        return _nb.stream_ingest_grid(
+            ts, v, prev_t, prev_v, has_prev, run_t, n_changes, gain,
+            offset, tshift, win_a, win_b, max_hold, env_lo, env_hi,
+            trapezoid)
+    with enable_x64():
+        outs = _stream_ingest_grid_impl(
+            jnp.asarray(ts, jnp.float64), jnp.asarray(v, jnp.float64),
+            jnp.asarray(prev_t, jnp.float64),
+            jnp.asarray(prev_v, jnp.float64),
+            jnp.asarray(has_prev, jnp.bool_),
+            jnp.asarray(run_t, jnp.float64),
+            jnp.asarray(n_changes, jnp.int64),
+            jnp.asarray(gain, jnp.float64),
+            jnp.asarray(offset, jnp.float64),
+            jnp.asarray(tshift, jnp.float64),
+            jnp.asarray(win_a, jnp.float64),
+            jnp.asarray(win_b, jnp.float64),
+            jnp.asarray(max_hold, jnp.float64),
+            jnp.asarray(env_lo, jnp.float64),
+            jnp.asarray(env_hi, jnp.float64),
+            bool(trapezoid), _interpret())
+    return tuple(np.asarray(o) for o in outs)
+
+
+# -- step_integrate: row-blocked window integration -------------------------
+
+def _step_kernel(ts_ref, vals_ref, t0_ref, t1_ref, o_ref, *,
+                 trapezoid: bool):
+    ts = ts_ref[...]
+    vals = vals_ref[...]
+    t0 = t0_ref[...]
+    t1 = t1_ref[...]
+    n, m = ts.shape
+    nxt = ts[:, 1:]
+    nxt_finite = nxt < jnp.inf
+    dt = jnp.where(nxt_finite, nxt - ts[:, :-1], 0.0)
+    if trapezoid:
+        dens = 0.5 * (vals[:, :-1]
+                      + jnp.where(nxt_finite, vals[:, 1:], 0.0))
+    else:
+        dens = vals[:, :-1]
+    cum = jnp.concatenate(
+        [jnp.zeros((n, 1)), jnp.cumsum(dens * dt, axis=1)], axis=1)
+
+    # counting == binary search on the sorted, inf-padded rows
+    j0 = jnp.sum(ts < t0[:, None], axis=1)
+    j1 = jnp.sum(ts <= t1[:, None], axis=1) - 1
+    j0c = jnp.clip(j0, 0, m - 1)[:, None]
+    j1c = jnp.clip(j1, 0, m - 1)[:, None]
+    core = (jnp.take_along_axis(cum, j1c, axis=1)
+            - jnp.take_along_axis(cum, j0c, axis=1))[:, 0]
+    tail = (jnp.take_along_axis(vals, j1c, axis=1)[:, 0]
+            * (t1 - jnp.take_along_axis(ts, j1c, axis=1)[:, 0]))
+    nonempty = (j1 >= j0) & (j0 < m)
+    o_ref[...] = jnp.where(nonempty, core + tail, 0.0)
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def _step_integrate_impl(ts, vals, t0, t1, trapezoid: bool,
+                         interpret: bool):
+    n, m = ts.shape
+    bn = min(_STEP_BLOCK_N, max(n, 1))
+    npad = -(-n // bn) * bn
+    if npad != n:
+        # inf-padded rows integrate to zero (j1 = -1 -> nonempty False)
+        ts = jnp.concatenate([ts, jnp.full((npad - n, m), jnp.inf)])
+        vals = jnp.concatenate([vals, jnp.zeros((npad - n, m))])
+        t0 = _pad_to(t0, npad, 0.0)
+        t1 = _pad_to(t1, npad, 0.0)
+    out = pl.pallas_call(
+        functools.partial(_step_kernel, trapezoid=trapezoid),
+        grid=(npad // bn,),
+        in_specs=[pl.BlockSpec((bn, m), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, m), lambda i: (i, 0)),
+                  pl.BlockSpec((bn,), lambda i: (i,)),
+                  pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float64),
+        interpret=interpret,
+    )(ts, vals, t0, t1)
+    return out[:n]
+
+
+def step_integrate(ts: np.ndarray, vals: np.ndarray, t0: np.ndarray,
+                   t1: np.ndarray, trapezoid: bool = False) -> np.ndarray:
+    """Batched rectangle/trapezoid step integration (see the numpy
+    backend's reference docstring) as a row-blocked Pallas kernel."""
+    ts = np.asarray(ts, dtype=np.float64)
+    if ts.shape[1] == 0:    # no samples at all: every window is 0
+        return np.zeros(ts.shape[0])
+    with enable_x64():
+        return np.asarray(_step_integrate_impl(
+            jnp.asarray(ts, jnp.float64), jnp.asarray(vals, jnp.float64),
+            jnp.asarray(t0, jnp.float64), jnp.asarray(t1, jnp.float64),
+            bool(trapezoid), _interpret()))
+
+
+# -- log_filter: blocked sequential scan over segments ----------------------
+
+def _scan_kernel(a_ref, b_ref, y0_ref, o_ref, carry):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        carry[...] = y0_ref[...]
+
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def step(i, y):
+        y = a[i, :] * y + b[i, :]
+        o_ref[i, :] = y
+        return y
+
+    carry[0, :] = lax.fori_loop(0, a.shape[0], step, carry[0, :])
+
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def _log_filter_impl(tl, ticks, tau, t_lo, t_hi, interpret: bool):
+    # prologue: identical segment coefficients to the jax tier
+    g = ticks.shape[0]
+    r = tl.edges.shape[0]
+    ext_e = jnp.concatenate([jnp.full((r, 1), t_lo), tl.edges,
+                             jnp.full((r, 1), t_hi)], axis=1)
+    ext_p = jnp.concatenate([tl.idle_w[:, None], tl.powers,
+                             tl.idle_w[:, None]], axis=1)
+    n_seg = ext_p.shape[1]
+    dts = jnp.broadcast_to(jnp.diff(ext_e, axis=1), (g, n_seg))
+    sp = jnp.broadcast_to(ext_p, (g, n_seg))
+    decay = jnp.exp(-dts / tau[:, None])
+    a_seg = jnp.where(dts > 0, decay, 1.0)
+    b_seg = jnp.where(dts > 0, sp * (1.0 - decay), 0.0)
+    y0 = jnp.broadcast_to(tl.idle_w, (g,))
+
+    # blocked sequential scan: transpose to [segments, rows], pad the
+    # segment axis with identity steps (a=1, b=0) and the row axis with
+    # zero columns, grid iterates segment chunks innermost
+    ch = min(_SCAN_CHUNK, max(n_seg, 1))
+    bg = min(_SCAN_BLOCK_G, max(g, 1))
+    sp_n = -(-n_seg // ch) * ch
+    gp = -(-g // bg) * bg
+    aT = jnp.ones((sp_n, gp)).at[:n_seg, :g].set(a_seg.T)
+    bT = jnp.zeros((sp_n, gp)).at[:n_seg, :g].set(b_seg.T)
+    y0p = _pad_to(y0, gp, 0.0)[None, :]
+    yT = pl.pallas_call(
+        _scan_kernel,
+        grid=(gp // bg, sp_n // ch),
+        in_specs=[pl.BlockSpec((ch, bg), lambda gi, si: (si, gi)),
+                  pl.BlockSpec((ch, bg), lambda gi, si: (si, gi)),
+                  pl.BlockSpec((1, bg), lambda gi, si: (0, gi))],
+        out_specs=pl.BlockSpec((ch, bg), lambda gi, si: (si, gi)),
+        out_shape=jax.ShapeDtypeStruct((sp_n, gp), jnp.float64),
+        scratch_shapes=[pltpu.VMEM((1, bg), jnp.float64)],
+        interpret=interpret,
+    )(aT, bT, y0p)
+    y = jnp.concatenate([y0[:, None], yT[:n_seg, :g].T], axis=1)
+
+    # epilogue: locate each tick's segment and decay from its entry state
+    ext_e_g = jnp.broadcast_to(ext_e, (g, n_seg + 1))
+    idx = jnp.clip(_jb._searchsorted_rows(ext_e, ticks, "right") - 1,
+                   0, n_seg - 1)
+    y_at = jnp.take_along_axis(y, idx, axis=1)
+    sp_at = jnp.take_along_axis(sp, idx, axis=1)
+    e_at = jnp.take_along_axis(ext_e_g, idx, axis=1)
+    return sp_at + (y_at - sp_at) * jnp.exp(-(ticks - e_at)
+                                            / tau[:, None])
+
+
+def log_filter(tl, ticks: np.ndarray, tau: np.ndarray) -> np.ndarray:
+    """Logarithmic-filter readings (see the numpy backend's reference
+    docstring); the per-segment affine recurrence runs as a blocked
+    sequential Pallas scan with the filter state carried in VMEM."""
+    tau = np.asarray(tau, dtype=np.float64)
+    t_lo = (min(float(np.min(ticks)), float(np.min(tl.t_start)))
+            - 5.0 * float(np.max(tau)))
+    t_hi = max(float(np.max(ticks)), float(np.max(tl.t_end))) + 1e-9
+    with enable_x64():
+        return np.asarray(_log_filter_impl(
+            tl, jnp.asarray(ticks, jnp.float64), jnp.asarray(tau),
+            jnp.float64(t_lo), jnp.float64(t_hi), _interpret()))

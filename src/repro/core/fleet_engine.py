@@ -447,7 +447,7 @@ class SensorBank:
     def iter_poll_slabs(self, t0: float, t1: float,
                         period_s: float = 0.001, tick_s: float = 0.5,
                         chunk_devices: Optional[int] = None,
-                        device_base: int = 0):
+                        device_base: int = 0, grid: bool = False):
         """Yield ``(devices, times, readings)`` raw poll-sample slabs —
         the live-stream emission a :class:`repro.core.stream.\
 MonitorService` consumes.
@@ -459,6 +459,11 @@ MonitorService` consumes.
         materialised: peak memory is one slab.  Slabs are flattened
         device-major; ``device_base`` offsets the emitted device ids
         (a bank that models rows ``[base, base+n)`` of a larger fleet).
+
+        With ``grid=True`` each slab keeps its natural rectangular shape
+        instead: ``(devices [D], times [M], readings [D, M])`` — the
+        exact input of :meth:`MonitorService.ingest_grid`, skipping the
+        flatten/re-sort round-trip entirely.
         """
         n_polls = int(np.floor((t1 - t0) / period_s))
         per_tick = max(1, int(round(tick_s / period_s)))
@@ -473,6 +478,9 @@ MonitorService` consumes.
                 tq = np.broadcast_to(ts[None, :], (hi - lo, m))
                 j = self._be.query_slots(self._schedule_rows(lo, hi), tq)
                 vals = np.take_along_axis(self._values[lo:hi], j, axis=1)
+                if grid:
+                    yield np.arange(lo, hi) + device_base, ts, vals
+                    continue
                 dev = np.repeat(np.arange(lo, hi) + device_base, m)
                 yield dev, np.tile(ts, hi - lo), vals.ravel()
 

@@ -325,6 +325,110 @@ class MonitorService:
 
         return IngestReport(k, n_dup, n_late, n_invalid, len(u_dev))
 
+    def ingest_grid(self, dev, ts, vals) -> IngestReport:
+        """Fold one *rectangular* slab: ``dev`` [D] distinct ascending
+        device ids, ``ts`` [M] strictly-increasing sample times shared by
+        every device, ``vals`` [D, M] raw readings.
+
+        This is the clean-stream fast path: no sorting, no per-sample
+        scatter — the backend's ``stream_ingest_grid`` kernel does
+        row-wise cumsums and reductions over the [D, M] slab directly.
+        Slabs that violate the rectangular contract (unsorted ids or
+        times, non-finite readings, samples at/behind a device's newest
+        accepted sample) fall back to the general :meth:`ingest` path
+        with identical semantics.
+        """
+        dev = np.asarray(dev, dtype=np.int64).ravel()
+        ts = np.asarray(ts, dtype=np.float64).ravel()
+        vals = np.asarray(vals, dtype=np.float64)
+        d, m = dev.size, ts.size
+        if vals.shape != (d, m):
+            raise ValueError(f"vals must be [{d}, {m}], "
+                             f"got {vals.shape}")
+        if d == 0 or m == 0:
+            return IngestReport(0, 0, 0, 0, 0)
+        if dev.min() < 0 or dev.max() >= self.n_devices:
+            raise ValueError("device id out of range")
+
+        st = self.state
+        clean = (np.all(np.diff(dev) > 0)
+                 and np.all(np.diff(ts) > 0)
+                 and bool(np.all(np.isfinite(ts)))
+                 and bool(np.all(np.isfinite(vals)))
+                 and not np.any(st.has[dev] & (ts[0] <= st.last_t[dev])))
+        if not clean:
+            return self.ingest(np.repeat(dev, m), np.tile(ts, d),
+                               vals.ravel())
+
+        c = self.corrections
+        v = vals - c.baseline_w[dev][:, None]
+        had = st.has[dev]
+        run_t_in = np.where(had, st.run_t[dev], ts[0])
+        (new_v, new_run_t, new_nchg, d_e, d_ec, d_w, d_wc,
+         sum_vc, sum_vc2, sum_abs_vc, max_abs_vc, n_out,
+         cum_e, cum_ec, run_dur, run_rec) = \
+            self._be.stream_ingest_grid(
+                ts, v, st.last_t[dev], st.last_v[dev], had, run_t_in,
+                st.n_changes[dev], c.gain[dev], c.offset_w[dev],
+                c.time_shift_s[dev], self._win_a[dev], self._win_b[dev],
+                self._max_hold[dev], self._env_lo[dev],
+                self._env_hi[dev], self.trapezoid)
+
+        # ring snapshots see running totals *before* this slab is folded
+        if self.ring.slots:
+            self.ring.write_grid(dev, ts, v,
+                                 st.energy_j[dev][:, None] + cum_e,
+                                 st.energy_corr_j[dev][:, None] + cum_ec)
+        else:
+            self.ring.n_written[dev] += m
+
+        old_last_t = st.last_t[dev]
+        st.first_t[dev] = np.where(had, st.first_t[dev], ts[0])
+        st.last_t[dev] = ts[-1]
+        st.last_v[dev] = new_v
+        st.has[dev] = True
+        st.n_samples[dev] += m
+        st.energy_j[dev] += d_e
+        st.energy_corr_j[dev] += d_ec
+        st.win_j[dev] += d_w
+        st.win_corr_j[dev] += d_wc
+        st.run_t[dev] = new_run_t
+        st.n_changes[dev] = new_nchg
+        st.n_out[dev] += n_out
+
+        mean_vc = sum_vc / m
+        alpha = np.exp(-np.maximum(ts[-1] - old_last_t, 0.0)
+                       / self.drift_tau_s)
+        st.ewma_w[dev] = np.where(
+            had, alpha * st.ewma_w[dev] + (1.0 - alpha) * mean_vc,
+            mean_vc)
+
+        rec = np.asarray(run_rec, dtype=bool)
+        if np.any(rec):
+            dgrid = np.broadcast_to(dev[:, None], rec.shape)
+            self.periods.record(dgrid[rec], np.asarray(run_dur)[rec])
+
+        # per-label moments straight from the kernel's per-device
+        # reductions — O(D + labels) instead of O(D·M)
+        codes = self._label_codes[dev]
+        nl = len(self._label_names)
+        cnt = m * np.bincount(codes, minlength=nl)
+        s1 = np.bincount(codes, weights=sum_vc, minlength=nl)
+        s2 = np.bincount(codes, weights=sum_vc2, minlength=nl)
+        sa = np.bincount(codes, weights=sum_abs_vc, minlength=nl)
+        mx = np.zeros(nl)
+        np.maximum.at(mx, codes, max_abs_vc)
+        for ci in np.flatnonzero(cnt):
+            nb = int(cnt[ci])
+            mean = s1[ci] / nb
+            m2 = max(float(s2[ci] - nb * mean * mean), 0.0)
+            self._moments.setdefault(
+                self._label_names[ci], StreamingMoments()).merge(
+                    nb, float(mean), m2, float(sa[ci] / nb),
+                    float(mx[ci]))
+
+        return IngestReport(d * m, 0, 0, 0, d)
+
     # -- queries ----------------------------------------------------------
     def _tail_energy(self, tq: np.ndarray, corrected: bool):
         """Energy at ``tq`` ([N]) for ``tq`` at/after each device's newest

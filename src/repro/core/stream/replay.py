@@ -36,7 +36,7 @@ def replay(bank: SensorBank, monitor: MonitorService, t0: float, t1: float,
            chunk_devices: Optional[int] = None, device_base: int = 0, *,
            shuffle: bool = False, dup_fraction: float = 0.0,
            drop_fraction: float = 0.0, delay_fraction: float = 0.0,
-           seed: int = 0,
+           seed: int = 0, grid: Optional[bool] = None,
            progress: Optional[Callable] = None) -> Dict[str, int]:
     """Stream ``bank``'s poll grid into ``monitor`` slab by slab.
 
@@ -46,10 +46,30 @@ def replay(bank: SensorBank, monitor: MonitorService, t0: float, t1: float,
     (sampling gaps), ``delay_fraction`` holds samples back one slab so
     they arrive out of order across slabs (late — dropped and counted).
     With all knobs at zero the replay is bit-exact: every poll instant
-    arrives exactly once, in order.  ``progress(monitor, t_emitted)``
-    is called after each ingested slab.  Returns the monitor's counter
-    snapshot after the replay.
+    arrives exactly once, in order — and flows through the monitor's
+    rectangular :meth:`MonitorService.ingest_grid` fast path (``grid``
+    defaults to exactly that condition; pass ``grid=False`` to force the
+    flattened path, e.g. to A/B the two).  ``progress(monitor,
+    t_emitted)`` is called after each ingested slab.  Returns the
+    monitor's counter snapshot after the replay.
     """
+    faulty = (shuffle or dup_fraction > 0.0 or drop_fraction > 0.0
+              or delay_fraction > 0.0)
+    if grid is None:
+        grid = not faulty
+    elif grid and faulty:
+        raise ValueError("grid replay is only defined for clean streams "
+                         "(no shuffle/dup/drop/delay injection)")
+    if grid:
+        for dev, ts, vals in bank.iter_poll_slabs(
+                t0, t1, period_s=period_s, tick_s=tick_s,
+                chunk_devices=chunk_devices, device_base=device_base,
+                grid=True):
+            if len(ts):
+                monitor.ingest_grid(dev, ts, vals)
+                if progress is not None:
+                    progress(monitor, float(ts[-1]))
+        return monitor.counters
     rng = np.random.default_rng(seed)
     held = None
     for dev, ts, vs in bank.iter_poll_slabs(

@@ -115,6 +115,26 @@ class IngestBuffer:
             self.e_corr[d, slot] = e_corr[keep]
         self.n_written[u_dev] += counts
 
+    def write_grid(self, dev: np.ndarray, t: np.ndarray, v: np.ndarray,
+                   e_raw: np.ndarray, e_corr: np.ndarray) -> None:
+        """Append one rectangular slab: ``dev`` [D] distinct devices all
+        sampled at the shared, increasing times ``t`` [M]; ``v``/
+        ``e_raw``/``e_corr`` are [D, M].  Equivalent to :meth:`write`
+        with ordinal = column index — only each row's last ``slots``
+        columns land, so scatter indices never collide."""
+        m = t.shape[0]
+        if self.slots:
+            kc = min(self.slots, m)
+            cols = np.arange(m - kc, m)
+            rows = dev[:, None]
+            slot = (self.n_written[dev][:, None] + cols[None, :]) \
+                % self.slots
+            self.t[rows, slot] = t[cols][None, :]
+            self.v[rows, slot] = v[:, cols]
+            self.e_raw[rows, slot] = e_raw[:, cols]
+            self.e_corr[rows, slot] = e_corr[:, cols]
+        self.n_written[dev] += m
+
     def sorted_view(self):
         """``(t, v, e_raw, e_corr)`` [N, R] oldest→newest per row, unused
         slots ``+inf`` — ready for row-wise binary search."""

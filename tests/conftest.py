@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # tests must see the single real CPU device (the dry-run subprocess sets its
 # own XLA_FLAGS); keep jax quiet and deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -8,3 +10,18 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # make the `_hyp` optional-hypothesis shim importable from every test module
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+@pytest.fixture(params=["jax", "pallas"])
+def accel_backend(request):
+    """Every accelerated backend tier, for parametrizing parity tests.
+
+    Skips when the tier cannot load (numpy-only CI); the pallas tier
+    auto-selects ``interpret=True`` on CPU-only hosts, so no accelerator
+    is required to exercise it.
+    """
+    from repro.core.engine_backend import available_backends
+    name = request.param
+    if name not in available_backends():
+        pytest.skip(f"backend '{name}' not available")
+    return name

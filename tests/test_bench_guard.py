@@ -1,0 +1,110 @@
+"""Unit tests for ``tools/bench_guard.py`` (floors, ceilings, and the
+ISSUE 6 cross-metric dominance rules)."""
+import importlib.util
+import os
+
+_GUARD = os.path.join(os.path.dirname(__file__), "..", "tools",
+                      "bench_guard.py")
+_spec = importlib.util.spec_from_file_location("bench_guard", _GUARD)
+bench_guard = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_guard)
+check = bench_guard.check
+
+
+BENCH = {
+    "streaming": {
+        "numpy": {"samples_per_sec": 1.0e6},
+        "jax": {"samples_per_sec": 5.0e6},
+        "pallas": {"samples_per_sec": 4.0e6},
+    },
+    "heterogeneous": {"devices_per_sec": 400.0,
+                      "wall_s_workload_gen": 0.04},
+}
+
+
+def test_floors_and_ceilings_pass_within_tolerance():
+    baseline = {"tolerance_factor": 4.0,
+                "floors": {"heterogeneous.devices_per_sec": 1000.0},
+                "ceilings": {"heterogeneous.wall_s_workload_gen": 0.05}}
+    assert check(BENCH, baseline) == []
+
+
+def test_floor_fails_on_collapse():
+    baseline = {"tolerance_factor": 2.0,
+                "floors": {"heterogeneous.devices_per_sec": 1000.0}}
+    fails = check(BENCH, baseline)
+    assert len(fails) == 1 and "throughput regression" in fails[0]
+
+
+def test_ceiling_fails_on_explosion():
+    baseline = {"tolerance_factor": 2.0,
+                "ceilings": {"heterogeneous.wall_s_workload_gen": 0.01}}
+    fails = check(BENCH, baseline)
+    assert len(fails) == 1 and "latency regression" in fails[0]
+
+
+def test_missing_metric_fails():
+    baseline = {"floors": {"streaming.cuda.samples_per_sec": 1.0}}
+    fails = check(BENCH, baseline)
+    assert fails == ["streaming.cuda.samples_per_sec: "
+                     "missing from bench output"]
+
+
+def test_dominance_passes_when_left_leads():
+    baseline = {"dominance": [
+        {"left": "streaming.jax.samples_per_sec",
+         "right": "streaming.numpy.samples_per_sec", "margin": 1.0},
+        {"left": "streaming.pallas.samples_per_sec",
+         "right": "streaming.numpy.samples_per_sec", "margin": 1.0},
+    ]}
+    assert check(BENCH, baseline) == []
+
+
+def test_dominance_fails_when_ordering_inverts():
+    baseline = {"dominance": [
+        {"left": "streaming.numpy.samples_per_sec",
+         "right": "streaming.jax.samples_per_sec", "margin": 1.0}]}
+    fails = check(BENCH, baseline)
+    assert len(fails) == 1 and "ordering regression" in fails[0]
+
+
+def test_dominance_margin_scales_the_bar():
+    # pallas at 4x numpy clears margin 3 but not margin 5
+    ok = {"dominance": [{"left": "streaming.pallas.samples_per_sec",
+                         "right": "streaming.numpy.samples_per_sec",
+                         "margin": 3.0}]}
+    bad = {"dominance": [{"left": "streaming.pallas.samples_per_sec",
+                          "right": "streaming.numpy.samples_per_sec",
+                          "margin": 5.0}]}
+    assert check(BENCH, ok) == []
+    assert len(check(BENCH, bad)) == 1
+
+
+def test_dominance_ignores_tolerance_factor():
+    # the ordering rule is machine-independent: a huge tolerance_factor
+    # must not excuse an inverted ordering
+    baseline = {"tolerance_factor": 100.0,
+                "dominance": [
+                    {"left": "streaming.numpy.samples_per_sec",
+                     "right": "streaming.jax.samples_per_sec",
+                     "margin": 1.0}]}
+    assert len(check(BENCH, baseline)) == 1
+
+
+def test_dominance_missing_side_fails():
+    baseline = {"dominance": [
+        {"left": "streaming.cuda.samples_per_sec",
+         "right": "streaming.numpy.samples_per_sec"},
+        {"left": "streaming.jax.samples_per_sec",
+         "right": "streaming.tpu.samples_per_sec"},
+    ]}
+    fails = check(BENCH, baseline)
+    assert len(fails) == 2
+    assert all("missing from bench output" in f for f in fails)
+
+
+def test_dominance_default_margin_is_one():
+    baseline = {"dominance": [
+        {"left": "streaming.jax.samples_per_sec",
+         "right": "streaming.pallas.samples_per_sec"}]}
+    assert check(BENCH, baseline) == []

@@ -1,9 +1,10 @@
-"""Execution-backend contracts (ISSUE 3).
+"""Execution-backend contracts (ISSUE 3, pallas tier in ISSUE 6).
 
 Three groups:
 
 * registry semantics (resolve/auto-detect/unknown names);
-* numpy↔jax kernel and end-to-end parity — the jax backend must
+* numpy↔accelerated kernel and end-to-end parity — every accelerated
+  backend (jax, pallas via the shared ``accel_backend`` fixture) must
   reproduce the numpy backend within one reporting quantum on every
   transient kind in the catalog, for shared and per-device timelines,
   through both measurement protocols (skipped when jax is missing, e.g.
@@ -71,9 +72,16 @@ def test_auto_resolves_to_an_available_backend():
 
 @needs_jax
 def test_jax_backend_listed_and_loadable():
-    assert available_backends() == ("numpy", "jax")
+    assert available_backends() == ("numpy", "jax", "pallas")
     assert resolve_backend("auto") == "jax"
     assert get_backend("jax").name == "jax"
+
+
+@needs_jax
+def test_pallas_backend_listed_and_loadable():
+    assert "pallas" in available_backends()
+    assert resolve_backend("pallas") == "pallas"
+    assert get_backend("pallas").name == "pallas"
 
 
 def test_bank_records_backend_and_propagates_to_views():
@@ -88,9 +96,8 @@ def test_bank_records_backend_and_propagates_to_views():
 # kernel-level parity
 # ---------------------------------------------------------------------------
 
-@needs_jax
-def test_kernel_parity_boxcar_and_integral():
-    npb, jxb = get_backend("numpy"), get_backend("jax")
+def test_kernel_parity_boxcar_and_integral(accel_backend):
+    npb, jxb = get_backend("numpy"), get_backend(accel_backend)
     tls = TimelineBank.from_timelines(_per_device_timelines(6, seed=3))
     rng = np.random.default_rng(0)
     t1 = rng.uniform(-0.5, 3.0, size=(6, 40))
@@ -104,9 +111,8 @@ def test_kernel_parity_boxcar_and_integral():
                                rtol=1e-12, atol=1e-9)
 
 
-@needs_jax
-def test_kernel_parity_boxcar_single_row_broadcast():
-    npb, jxb = get_backend("numpy"), get_backend("jax")
+def test_kernel_parity_boxcar_single_row_broadcast(accel_backend):
+    npb, jxb = get_backend("numpy"), get_backend(accel_backend)
     bank = TimelineBank.from_timelines([TL])
     rng = np.random.default_rng(1)
     t1 = rng.uniform(0.0, 4.0, size=(5, 30))
@@ -116,9 +122,8 @@ def test_kernel_parity_boxcar_single_row_broadcast():
                                rtol=1e-12, atol=1e-9)
 
 
-@needs_jax
-def test_kernel_parity_log_filter():
-    npb, jxb = get_backend("numpy"), get_backend("jax")
+def test_kernel_parity_log_filter(accel_backend):
+    npb, jxb = get_backend("numpy"), get_backend(accel_backend)
     tls = TimelineBank.from_timelines(_per_device_timelines(4, seed=9))
     rng = np.random.default_rng(2)
     ticks = np.sort(rng.uniform(0.0, 3.0, size=(4, 25)), axis=1)
@@ -130,9 +135,8 @@ def test_kernel_parity_log_filter():
     np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-9)
 
 
-@needs_jax
-def test_kernel_parity_poll_counts_and_query_slots():
-    npb, jxb = get_backend("numpy"), get_backend("jax")
+def test_kernel_parity_poll_counts_and_query_slots(accel_backend):
+    npb, jxb = get_backend("numpy"), get_backend(accel_backend)
     bank = SensorBank.from_catalog(MIXED, base_seed=17)
     bank.attach(TL, t_end=5.0)
     sched = bank._schedule
@@ -155,12 +159,13 @@ def test_kernel_parity_poll_counts_and_query_slots():
 # end-to-end parity: every transient kind, both timeline shapes
 # ---------------------------------------------------------------------------
 
-@needs_jax
-def test_backend_parity_shared_timeline_all_kinds():
-    """jax readings match numpy within one reporting quantum, per device,
-    across every transient kind in the catalog (the acceptance pin)."""
+def test_backend_parity_shared_timeline_all_kinds(accel_backend):
+    """Accelerated readings match numpy within one reporting quantum, per
+    device, across every transient kind in the catalog (the acceptance
+    pin)."""
     b_np = SensorBank.from_catalog(MIXED, base_seed=42)
-    b_jx = SensorBank.from_catalog(MIXED, base_seed=42, backend="jax")
+    b_jx = SensorBank.from_catalog(MIXED, base_seed=42,
+                                   backend=accel_backend)
     b_np.attach(TL, t_end=6.0)
     b_jx.attach(TL, t_end=6.0)
     qs = np.linspace(0.0, 6.0, 400)
@@ -171,12 +176,12 @@ def test_backend_parity_shared_timeline_all_kinds():
                                    err_msg=f"device {i} ({name})")
 
 
-@needs_jax
-def test_backend_parity_per_device_timelines_all_kinds():
+def test_backend_parity_per_device_timelines_all_kinds(accel_backend):
     tb = TimelineBank.from_timelines(_per_device_timelines(len(MIXED),
                                                            seed=5))
     b_np = SensorBank.from_catalog(MIXED, base_seed=11)
-    b_jx = SensorBank.from_catalog(MIXED, base_seed=11, backend="jax")
+    b_jx = SensorBank.from_catalog(MIXED, base_seed=11,
+                                   backend=accel_backend)
     b_np.attach(tb, t_end=6.0)
     b_jx.attach(tb, t_end=6.0)
     qs = np.linspace(0.0, 6.0, 400)
@@ -187,12 +192,12 @@ def test_backend_parity_per_device_timelines_all_kinds():
                                    err_msg=f"device {i} ({name})")
 
 
-@needs_jax
-def test_backend_parity_catalog_profiles_scalar_contract():
+def test_backend_parity_catalog_profiles_scalar_contract(accel_backend):
     """Every catalog profile that publishes readings also honours the
-    scalar-equivalence contract under the jax backend."""
+    scalar-equivalence contract under the accelerated backends."""
     names = [n for n, p in profiles.CATALOG.items() if p.supported]
-    bank = SensorBank.from_catalog(names, base_seed=3, backend="jax")
+    bank = SensorBank.from_catalog(names, base_seed=3,
+                                   backend=accel_backend)
     bank.attach(TL, t_end=4.0)
     qs = np.linspace(0.0, 4.0, 200)
     got = bank.query(qs)
@@ -205,19 +210,18 @@ def test_backend_parity_catalog_profiles_scalar_contract():
                                    err_msg=f"device {i} ({name})")
 
 
-@needs_jax
-def test_backend_parity_naive_batch():
+def test_backend_parity_naive_batch(accel_backend):
     wls = WorkloadSet([Workload(f"w{i}", tl) for i, tl in
                        enumerate(_per_device_timelines(len(MIXED), seed=2))])
     b_np = SensorBank.from_catalog(MIXED, base_seed=7)
-    b_jx = SensorBank.from_catalog(MIXED, base_seed=7, backend="jax")
+    b_jx = SensorBank.from_catalog(MIXED, base_seed=7,
+                                   backend=accel_backend)
     e_np = measure_naive_batch(b_np, wls)
     e_jx = measure_naive_batch(b_jx, wls)
     np.testing.assert_allclose(e_jx, e_np, rtol=1e-9, atol=1e-6)
 
 
-@needs_jax
-def test_backend_parity_good_practice_batch():
+def test_backend_parity_good_practice_batch(accel_backend):
     from repro.core.calibrate import CalibrationRecord
     names = ["a100", "v100", "kepler", "fermi2"]
     wl = Workload("w", loads.multi_phase_workload([(0.130, 215.0),
@@ -232,18 +236,17 @@ def test_backend_parity_good_practice_batch():
     b_np = SensorBank.from_catalog(names, base_seed=5)
     est_np = measure_good_practice_batch(b_np, wl, calibs, cfg)
     est_jx = measure_good_practice_batch(b_np, wl, calibs, cfg,
-                                         backend="jax")
+                                         backend=accel_backend)
     np.testing.assert_allclose(est_jx.joules_per_rep, est_np.joules_per_rep,
                                rtol=1e-9, atol=1e-6)
     np.testing.assert_allclose(est_jx.trial_values, est_np.trial_values,
                                rtol=1e-9, atol=1e-6)
 
 
-@needs_jax
-def test_backend_parity_fleet_audit_stats():
+def test_backend_parity_fleet_audit_stats(accel_backend):
     names = ["a100"] * 30 + ["v100"] * 20 + ["maxwell"] * 10
     r_np = fleet_audit(60, profile=names, seed=4)
-    r_jx = fleet_audit(60, profile=names, seed=4, backend="jax")
+    r_jx = fleet_audit(60, profile=names, seed=4, backend=accel_backend)
     np.testing.assert_allclose(r_jx.naive_j, r_np.naive_j,
                                rtol=1e-9, atol=1e-6)
 
@@ -263,7 +266,7 @@ DEGENERATE = [
 
 
 def _degenerate_backends():
-    return [None] + (["jax"] if has_jax() else [])
+    return [None] + (["jax", "pallas"] if has_jax() else [])
 
 
 @pytest.mark.parametrize("name,a,b", DEGENERATE)

@@ -1,12 +1,13 @@
-"""numpy↔jax parity for the streaming kernels (ISSUE 5).
+"""numpy↔accelerated parity for the streaming kernels (ISSUE 5/6).
 
-The streaming monitor's hot path — ``step_integrate`` and
-``stream_ingest`` — has one implementation per execution backend.  The
-jax kernels must reproduce the numpy reference on random slabs (raw
-kernel outputs) and end-to-end through ``MonitorService`` /
-``stream_fleet`` (the offline-parity pin must hold on both backends).
-Skipped without jax (e.g. the numpy-only core CI job); the CI jax
-matrix job runs this module explicitly.
+The streaming monitor's hot path — ``step_integrate``,
+``stream_ingest`` and the rectangular ``stream_ingest_grid`` — has one
+implementation per execution backend.  Every accelerated tier (jax and
+pallas, via the shared ``accel_backend`` fixture) must reproduce the
+numpy reference on random slabs (raw kernel outputs) and end-to-end
+through ``MonitorService`` / ``stream_fleet`` (the offline-parity pin
+must hold on every backend).  Skipped without jax (e.g. the numpy-only
+core CI job); the CI accelerated jobs run this module explicitly.
 """
 import numpy as np
 import pytest
@@ -58,10 +59,9 @@ def _random_slab(rng, k=300, u=11):
     return (t, v, seg, first, start_idx, end_idx, state)
 
 
-@needs_jax
 @pytest.mark.parametrize("trapezoid", [False, True])
-def test_stream_ingest_kernel_parity(trapezoid):
-    jb = get_backend("jax")
+def test_stream_ingest_kernel_parity(accel_backend, trapezoid):
+    jb = get_backend(accel_backend)
     rng = np.random.default_rng(42)
     for trial in range(3):
         t, v, seg, first, start_idx, end_idx, st = _random_slab(rng)
@@ -81,10 +81,9 @@ def test_stream_ingest_kernel_parity(trapezoid):
                 err_msg=f"output {i} (trial {trial})")
 
 
-@needs_jax
 @pytest.mark.parametrize("trapezoid", [False, True])
-def test_step_integrate_kernel_parity(trapezoid):
-    jb = get_backend("jax")
+def test_step_integrate_kernel_parity(accel_backend, trapezoid):
+    jb = get_backend(accel_backend)
     rng = np.random.default_rng(7)
     n, m = 13, 50
     ts = np.sort(rng.uniform(0.0, 10.0, (n, m)), axis=1)
@@ -99,17 +98,17 @@ def test_step_integrate_kernel_parity(trapezoid):
     np.testing.assert_allclose(outj, outn, rtol=1e-12, atol=1e-12)
 
 
-@needs_jax
-def test_monitor_end_to_end_backend_parity():
-    """Same fleet replayed through a numpy-kernel and a jax-kernel
+def test_monitor_end_to_end_backend_parity(accel_backend):
+    """Same fleet replayed through a numpy-kernel and an accelerated
     monitor: identical ingestion decisions, energies within float
-    accumulation order, and the offline parity pin holds on jax."""
+    accumulation order, and the offline parity pin holds on the
+    accelerated tier."""
     n = len(MIXED_NAMES)
     ws = loads.mixed_fleet_workloads(n, seed=7, as_bank=True)
     rn = stream_fleet(n, profile=MIXED_NAMES, workload=ws, seed=0,
                       backend="numpy", compare=True)
     rj = stream_fleet(n, profile=MIXED_NAMES, workload=ws, seed=0,
-                      backend="jax", compare=True)
+                      backend=accel_backend, compare=True)
     np.testing.assert_allclose(rj.naive_stream_j, rn.naive_stream_j,
                                rtol=1e-11)
     np.testing.assert_allclose(rj.corrected_stream_j,
@@ -121,22 +120,149 @@ def test_monitor_end_to_end_backend_parity():
     assert rn.monitor.counters == rj.monitor.counters
 
 
-@needs_jax
-def test_monitor_jax_messy_stream_matches_numpy():
+def test_monitor_messy_stream_matches_numpy(accel_backend):
     bank = SensorBank.from_catalog(["a100"] * 5, seeds=np.arange(5))
     wl = Workload("w", loads.multi_phase_workload([(0.13, 215.0),
                                                    (0.07, 165.0)]))
     tl = wl.timeline.shift(0.3)
     bank.attach(tl, t_end=tl.t_end + 1.0)
     mons = {}
-    for be in ("numpy", "jax"):
+    for be in ("numpy", accel_backend):
         mon = MonitorService(5, backend=be)
         replay(bank, mon, 0.0, 1.0, shuffle=True, dup_fraction=0.2,
                delay_fraction=0.1, seed=5)
         mons[be] = mon
-    assert mons["numpy"].counters == mons["jax"].counters
-    np.testing.assert_allclose(mons["jax"].state.energy_j,
+    acc = mons[accel_backend]
+    assert mons["numpy"].counters == acc.counters
+    np.testing.assert_allclose(acc.state.energy_j,
                                mons["numpy"].state.energy_j, rtol=1e-12)
-    np.testing.assert_allclose(mons["jax"].update_period_s(),
+    np.testing.assert_allclose(acc.update_period_s(),
                                mons["numpy"].update_period_s(),
                                rtol=1e-9, equal_nan=True)
+
+
+@pytest.mark.parametrize("trapezoid", [False, True])
+def test_stream_ingest_grid_kernel_parity(accel_backend, trapezoid):
+    """The rectangular fast-path kernel matches numpy on random [D, M]
+    slabs, including the empty-slab passthrough."""
+    jb = get_backend(accel_backend)
+    rng = np.random.default_rng(11)
+    for trial in range(3):
+        d = int(rng.integers(1, 30))
+        m = int(rng.integers(1, 40))
+        ts = np.cumsum(rng.uniform(0.001, 0.1, m)) + 2.0
+        v = rng.uniform(60.0, 250.0, (d, m))
+        rep = rng.random((d, m)) < 0.4
+        v[rep] = np.round(v[rep] / 25.0) * 25.0
+        has_prev = rng.random(d) > 0.3
+        prev_t = rng.uniform(0.0, 2.0, d)
+        args = (ts, v, prev_t, rng.uniform(60.0, 250.0, d), has_prev,
+                np.where(has_prev, prev_t, ts[0]),
+                rng.integers(0, 4, d), rng.uniform(0.95, 1.05, d),
+                rng.uniform(-3.0, 3.0, d), np.full(d, 0.025),
+                np.full(d, 2.2), np.full(d, 3.4),
+                np.where(rng.random(d) < 0.5, np.inf, 0.05),
+                np.full(d, 0.0), np.full(d, 240.0), trapezoid)
+        outn = nb.stream_ingest_grid(*args)
+        outj = jb.stream_ingest_grid(*args)
+        assert len(outn) == len(outj) == 16
+        for i, (a, b) in enumerate(zip(outn, outj)):
+            np.testing.assert_allclose(
+                np.asarray(a, dtype=np.float64),
+                np.asarray(b, dtype=np.float64),
+                rtol=1e-12, atol=1e-12,
+                err_msg=f"output {i} (trial {trial})")
+    empty = (np.zeros(0), np.zeros((3, 0)), np.zeros(3), np.ones(3),
+             np.ones(3, dtype=bool), np.zeros(3),
+             np.zeros(3, dtype=np.int64), np.ones(3), np.zeros(3),
+             np.zeros(3), np.zeros(3), np.ones(3), np.full(3, np.inf),
+             np.zeros(3), np.full(3, 240.0), trapezoid)
+    for a, b in zip(nb.stream_ingest_grid(*empty),
+                    jb.stream_ingest_grid(*empty)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_monitor_grid_path_matches_flat_path(accel_backend):
+    """A clean replay through ``ingest_grid`` reproduces the flattened
+    ``ingest`` path: identical counters, ring contents, run tracking
+    and per-label moments (the fast path changes the route, never the
+    answer)."""
+    bank = SensorBank.from_catalog(["a100"] * 4 + ["v100"] * 3,
+                                   seeds=np.arange(7))
+    wl = Workload("w", loads.multi_phase_workload([(0.13, 215.0),
+                                                   (0.07, 165.0)]))
+    tl = wl.timeline.shift(0.3)
+    bank.attach(tl, t_end=tl.t_end + 1.0)
+    mons = {}
+    for grid in (False, True):
+        mon = MonitorService(7, backend=accel_backend)
+        replay(bank, mon, 0.0, 1.0, grid=grid)
+        mons[grid] = mon
+    assert mons[True].counters == mons[False].counters
+    np.testing.assert_allclose(mons[True].state.energy_j,
+                               mons[False].state.energy_j, rtol=1e-11)
+    np.testing.assert_allclose(mons[True].state.energy_corr_j,
+                               mons[False].state.energy_corr_j,
+                               rtol=1e-11)
+    np.testing.assert_array_equal(mons[True].state.n_changes,
+                                  mons[False].state.n_changes)
+    np.testing.assert_array_equal(mons[True].state.run_t,
+                                  mons[False].state.run_t)
+    for arr in ("t", "v", "e_raw", "e_corr"):
+        np.testing.assert_allclose(getattr(mons[True].ring, arr),
+                                   getattr(mons[False].ring, arr),
+                                   rtol=1e-11, err_msg=f"ring.{arr}")
+    np.testing.assert_allclose(mons[True].update_period_s(),
+                               mons[False].update_period_s(),
+                               rtol=1e-12, equal_nan=True)
+    for lbl, sf in mons[False].reading_stats().items():
+        sg = mons[True].reading_stats()[lbl]
+        for key, val in sf.items():
+            np.testing.assert_allclose(sg[key], val, rtol=1e-9,
+                                       err_msg=f"{lbl}.{key}")
+
+
+def test_monitor_grid_path_falls_back_on_dirty_slabs(accel_backend):
+    """Slabs violating the rectangular contract (non-finite readings,
+    stale times) reroute through the general ingest path with its drop
+    accounting intact."""
+    mon = MonitorService(3, backend=accel_backend)
+    ts = np.array([0.1, 0.2, 0.3])
+    vals = np.full((3, 3), 100.0)
+    vals[1, 1] = np.nan
+    rep = mon.ingest_grid(np.arange(3), ts, vals)
+    assert rep.invalid == 1 and rep.accepted == 8
+    # a repeat of the same slab is all duplicates/late via the fallback
+    # (the nan hole at t=0.2 is now behind its device's newest sample)
+    rep2 = mon.ingest_grid(np.arange(3), ts, np.full((3, 3), 100.0))
+    assert rep2.accepted == 0
+    assert rep2.duplicates == 3 and rep2.late == 6
+    assert mon.counters["accepted"] == 8
+
+
+def test_jax_ingest_run_tracking_carries_state_across_slabs():
+    """The O(slab) run tracking (carried ``run_t`` + in-slab ordinal
+    arithmetic, replacing the full-ring cummax) is equivalent to the
+    numpy reference across slab boundaries: runs spanning two slabs
+    still record their full duration."""
+    if not has_jax():
+        pytest.skip("jax not installed")
+    rng = np.random.default_rng(3)
+    mons = {be: MonitorService(4, backend=be, ring_slots=4)
+            for be in ("numpy", "jax")}
+    t_base = 0.0
+    for _ in range(6):      # several slabs; runs span the boundaries
+        k = int(rng.integers(3, 9))
+        dev = np.repeat(np.arange(4), k)
+        t = np.tile(t_base + np.cumsum(rng.uniform(0.01, 0.1, k)), 4)
+        v = np.round(rng.uniform(60.0, 250.0, 4 * k) / 50.0) * 50.0
+        for mon in mons.values():
+            mon.ingest(dev, t, v)
+        t_base = float(t.max())
+    np.testing.assert_array_equal(mons["jax"].state.run_t,
+                                  mons["numpy"].state.run_t)
+    np.testing.assert_array_equal(mons["jax"].state.n_changes,
+                                  mons["numpy"].state.n_changes)
+    np.testing.assert_allclose(mons["jax"].update_period_s(),
+                               mons["numpy"].update_period_s(),
+                               rtol=1e-12, equal_nan=True)

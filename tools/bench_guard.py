@@ -12,14 +12,23 @@ Baseline format::
     {
       "tolerance_factor": 4.0,
       "floors":   {"heterogeneous.devices_per_sec": 1500.0, ...},
-      "ceilings": {"heterogeneous.wall_s_workload_gen": 0.12, ...}
+      "ceilings": {"heterogeneous.wall_s_workload_gen": 0.12, ...},
+      "dominance": [
+        {"left": "streaming.jax.samples_per_sec",
+         "right": "streaming.numpy.samples_per_sec",
+         "margin": 1.0}
+      ]
     }
 
 ``floors`` fail when ``measured < baseline / factor`` (throughput
 collapsed); ``ceilings`` fail when ``measured > baseline * factor``
-(latency exploded).  Keys are dotted paths into the bench JSON; a key
-missing from the bench file fails the guard (the metric silently
-disappearing is itself a regression).
+(latency exploded); ``dominance`` entries compare two *measured*
+metrics against each other — failing when ``left < right * margin`` —
+which pins an ordering (e.g. the accelerated ingest tiers must never
+fall behind the numpy reference) independent of the machine's absolute
+speed, so it needs no tolerance factor.  Keys are dotted paths into the
+bench JSON; a key missing from the bench file fails the guard (the
+metric silently disappearing is itself a regression).
 
 Usage::
 
@@ -59,6 +68,18 @@ def check(bench: dict, baseline: dict) -> list:
         elif float(got) > float(ceiling) * factor:
             failures.append(f"{key}: {got:.3f}s > ceiling {ceiling:.3f}s "
                             f"× {factor:g} (latency regression)")
+    for rule in baseline.get("dominance", []):
+        lk, rk = rule["left"], rule["right"]
+        margin = float(rule.get("margin", 1.0))
+        left, right = _lookup(bench, lk), _lookup(bench, rk)
+        if left is None:
+            failures.append(f"{lk}: missing from bench output")
+        elif right is None:
+            failures.append(f"{rk}: missing from bench output")
+        elif float(left) < float(right) * margin:
+            failures.append(
+                f"{lk}: {float(left):.1f} < {rk} ({float(right):.1f}) "
+                f"× {margin:g} (ordering regression)")
     return failures
 
 
@@ -79,7 +100,8 @@ def main(argv=None) -> int:
             print(f"  - {f}")
         return 1
     checked = (len(baseline.get("floors", {}))
-               + len(baseline.get("ceilings", {})))
+               + len(baseline.get("ceilings", {}))
+               + len(baseline.get("dominance", [])))
     print(f"bench_guard: OK ({checked} metrics within "
           f"{baseline.get('tolerance_factor', 4.0):g}x of baseline)")
     return 0
