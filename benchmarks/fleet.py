@@ -32,6 +32,15 @@ at both the main and ``--stream-devices`` scales.  CLI::
     python benchmarks/fleet.py --backend both --n-devices 10000 \
         --scale-devices 100000 --mega-devices 1000000 \
         --stream-devices 100000
+
+Mesh-sharded audits (ISSUE 7): ``--shard-devices`` sweeps the
+``shard_map``-sharded audit over forced host-device counts
+(``--shard-counts``), each in a subprocess (the XLA flag must precede
+the first jax import), and ``--shard-mega-devices`` records the
+ten-million-device bounded-memory run::
+
+    python benchmarks/fleet.py --n-devices 2000 --shard-devices 200000 \
+        --shard-counts 1,2,4 --shard-mega-devices 10000000
 """
 from __future__ import annotations
 
@@ -96,7 +105,100 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--stream-chunk", type=int, default=20_000,
                     help="device slab size for --stream-devices "
                          "(default 20000)")
+    ap.add_argument("--shard-devices", type=int, default=0,
+                    help="fleet size for the mesh-sharded scaling sweep "
+                         "(default 0 = disabled); each shard count runs "
+                         "in a subprocess with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=<k> (ISSUE 7)")
+    ap.add_argument("--shard-counts", default="1,2,4,8",
+                    help="comma-separated forced-host shard counts for "
+                         "the scaling sweep (default 1,2,4,8)")
+    ap.add_argument("--shard-chunk", type=int, default=25_000,
+                    help="device rows per shard per super-slab in the "
+                         "sharded runs (default 25000)")
+    ap.add_argument("--shard-mega-devices", type=int, default=0,
+                    help="fleet size for the sharded mega audit "
+                         "(default 0 = disabled; the committed "
+                         "BENCH_fleet.json uses 10000000)")
+    ap.add_argument("--shard-mega-shards", type=int, default=4,
+                    help="forced-host shard count for the sharded mega "
+                         "audit (default 4)")
     return ap.parse_args(argv)
+
+
+def _run_shard_worker(n_devices, n_shards, shard_chunk, repeat=1,
+                      parity_devices=0):
+    """One shard-count measurement in a fresh interpreter: the forced
+    host-device flag only takes effect before jax first imports, which
+    in this process happened long ago."""
+    import subprocess
+    import sys as _sys
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "--xla_force_host_platform_device_count" not in f]
+    flags.append(f"--xla_force_host_platform_device_count={n_shards}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env.setdefault("JAX_PLATFORMS", "cpu")   # forced host devices are CPU
+    src = os.path.join(os.path.dirname(here), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [_sys.executable, os.path.join(here, "shard_worker.py"),
+           "--n-devices", str(n_devices), "--n-shards", str(n_shards),
+           "--shard-chunk", str(shard_chunk), "--repeat", str(repeat)]
+    if parity_devices:
+        cmd += ["--parity-devices", str(parity_devices)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"shard_worker failed (k={n_shards}): {proc.stderr.strip()}")
+    return json.loads(proc.stdout)
+
+
+def _shard_blocks(args) -> tuple:
+    """The ``sharded`` BENCH block: devices/sec per forced-host shard
+    count (+ parallel efficiency at 4 shards when measured), and the
+    sharded mega audit.  ``host_cpu_count`` is recorded so the
+    bench_guard scaling rule can tell real parallelism from time-sliced
+    forced devices on small machines."""
+    counts = sorted({int(c) for c in args.shard_counts.split(",") if c})
+    block = {
+        "n_devices": args.shard_devices,
+        "shard_chunk": args.shard_chunk,
+        "host_cpu_count": os.cpu_count(),
+        "scaling": {},
+    }
+    for k in counts:
+        r = _run_shard_worker(args.shard_devices, k, args.shard_chunk,
+                              repeat=2,
+                              parity_devices=min(args.shard_devices,
+                                                 10_000) if k == counts[-1]
+                              else 0)
+        block["scaling"][str(k)] = r
+        emit(f"fleet_audit/sharded_{args.shard_devices}_k{k}",
+             r["wall_s"] * 1e6 / args.shard_devices,
+             f"devices_per_sec={r['devices_per_sec']};"
+             f"wall_s={r['wall_s']};peak_rss_mb={r['peak_rss_mb']}")
+    if "1" in block["scaling"] and "4" in block["scaling"]:
+        d1 = block["scaling"]["1"]["devices_per_sec"]
+        d4 = block["scaling"]["4"]["devices_per_sec"]
+        block["efficiency_4"] = round(d4 / (4.0 * d1), 3)
+        emit("fleet_audit/sharded_efficiency_4", 0.0,
+             f"efficiency={block['efficiency_4']};"
+             f"host_cpu_count={block['host_cpu_count']}")
+
+    mega = None
+    if args.shard_mega_devices > 0:
+        r = _run_shard_worker(args.shard_mega_devices,
+                              args.shard_mega_shards, args.shard_chunk)
+        mega = r
+        emit(f"fleet_audit/sharded_mega_{args.shard_mega_devices}",
+             r["wall_s"] * 1e6 / args.shard_mega_devices,
+             f"devices_per_sec={r['devices_per_sec']};"
+             f"wall_s={r['wall_s']};chunks={r['n_chunks']};"
+             f"peak_rss_mb={r['peak_rss_mb']}")
+    return block, mega
 
 
 def _selected_backends(choice: str) -> list:
@@ -503,6 +605,11 @@ def run(argv=None) -> None:
         payload["chunked"] = chunk_block
     if mega_block is not None:
         payload["mega"] = mega_block
+    if args.shard_devices > 0:
+        shard_block, shard_mega = _shard_blocks(args)
+        if shard_mega is not None:
+            shard_block["mega"] = shard_mega
+        payload["sharded"] = shard_block
     with open(JSON_PATH, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")

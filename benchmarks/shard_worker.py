@@ -1,0 +1,100 @@
+"""Subprocess worker for the shard-scaling bench (ISSUE 7).
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=<k>`` must be set
+*before the first jax import*, so each shard count of the scaling sweep
+runs in its own interpreter: ``benchmarks/fleet.py --shard-devices``
+spawns this script once per count with the flag injected into the
+environment, and reads one JSON object from stdout (all human noise
+goes to stderr).
+
+Standalone use (mirrors what the parent does)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python benchmarks/shard_worker.py \
+        --n-devices 200000 --n-shards 4 --shard-chunk 25000 --repeat 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-devices", type=int, required=True)
+    ap.add_argument("--n-shards", type=int, required=True)
+    ap.add_argument("--shard-chunk", type=int, default=25_000,
+                    help="device rows per shard per super-slab")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="audit passes; the reported wall is the last "
+                         "pass (>=2 excludes jit compilation)")
+    ap.add_argument("--parity-devices", type=int, default=0,
+                    help="also compare a reduced sharded audit against "
+                         "the single-process jax path (0 = skip)")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    import jax
+    if jax.device_count() < args.n_shards:
+        print(f"shard_worker: jax exposes {jax.device_count()} devices, "
+              f"need {args.n_shards} (XLA_FLAGS not set before import?)",
+              file=sys.stderr)
+        return 2
+
+    from repro.core import load as loads
+    from repro.core.fleet_engine import fleet_audit
+    from repro.core.fleet_engine_shard import fleet_audit_sharded
+
+    def names(n):
+        pattern = ["a100", "a100", "h100_instant", "v100"]
+        return [pattern[i % 4] for i in range(n)]
+
+    n, k = args.n_devices, args.n_shards
+    spec = loads.FleetScenarioSpec(n=n, seed=args.seed)
+    wall = None
+    for _ in range(max(args.repeat, 1)):
+        t0 = time.perf_counter()
+        res = fleet_audit_sharded(n, profile=names(n), workload=spec,
+                                  n_shards=k, shard_chunk=args.shard_chunk)
+        wall = time.perf_counter() - t0
+    peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+    out = {
+        "n_devices": n,
+        "n_shards": k,
+        "shard_chunk": args.shard_chunk,
+        "n_chunks": -(-n // (args.shard_chunk * k)),
+        "wall_s": round(wall, 2),
+        "devices_per_sec": round(n / wall, 1),
+        "peak_rss_mb": round(peak_rss / 1024.0, 1),
+        "naive_mean_abs_err": res.streamed["naive"]["overall"][
+            "mean_abs_err"],
+        "streamed_vs_exact_mean_abs": abs(
+            res.streamed["naive"]["overall"]["mean_abs_err"]
+            - res.stats()["mean_abs_err"]),
+    }
+
+    if args.parity_devices > 0:
+        np_ = args.parity_devices
+        spec_p = loads.FleetScenarioSpec(n=np_, seed=args.seed)
+        chunk = min(args.shard_chunk * k, np_)
+        ref = fleet_audit(np_, profile=names(np_), workload=spec_p,
+                          backend="jax", chunk_devices=chunk)
+        sh = fleet_audit_sharded(np_, profile=names(np_), workload=spec_p,
+                                 n_shards=k,
+                                 shard_chunk=args.shard_chunk)
+        out["parity_n_devices"] = np_
+        out["parity_max_rel_dev"] = float(np.max(
+            np.abs(sh.naive_j - ref.naive_j) / np.abs(ref.naive_j)))
+
+    json.dump(out, sys.stdout)
+    sys.stdout.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -81,12 +81,32 @@ def available_backends() -> Tuple[str, ...]:
     return ("numpy", "jax", "pallas") if has_jax() else ("numpy",)
 
 
-def resolve_backend(name: Optional[str]) -> str:
+# the minimum kernel surface a backend *object* must expose to stand in
+# for a named backend module (the audit path's working set)
+_KERNEL_SURFACE = ("boxcar_means", "estimation_means", "log_filter",
+                   "query_slots", "poll_counts", "err_moments")
+
+
+def resolve_backend(name):
     """Normalise a backend selector: ``None`` → ``"numpy"`` (the default
     and reference), ``"auto"`` → ``"jax"`` when importable else
-    ``"numpy"``.  Asking for ``"jax"`` without jax installed raises."""
+    ``"numpy"``.  Asking for ``"jax"`` without jax installed raises.
+
+    A non-string *backend object* (module-like: anything exposing the
+    kernel signature set, e.g. a
+    :class:`~repro.core.fleet_engine_shard.ShardedBackend`) passes
+    through unchanged — that is how composed tiers plug into
+    ``SensorBank``/``fleet_audit`` without registering a global name."""
     if name is None:
         return "numpy"
+    if not isinstance(name, str):
+        missing = [k for k in _KERNEL_SURFACE if not hasattr(name, k)]
+        if missing:
+            raise ValueError(
+                f"backend object {name!r} lacks kernel(s) "
+                f"{', '.join(missing)}; a backend must expose "
+                f"{', '.join(_KERNEL_SURFACE)}")
+        return name
     if name == "auto":
         return "jax" if has_jax() else "numpy"
     if name not in _KNOWN:
@@ -98,9 +118,12 @@ def resolve_backend(name: Optional[str]) -> str:
     return name
 
 
-def get_backend(name: Optional[str] = None):
-    """The backend module for ``name`` (see :func:`resolve_backend`)."""
+def get_backend(name=None):
+    """The backend module (or passed-through backend object) for ``name``
+    (see :func:`resolve_backend`)."""
     name = resolve_backend(name)
+    if not isinstance(name, str):
+        return name
     if name not in _BACKENDS:
         _BACKENDS[name] = importlib.import_module(
             f"repro.core.engine_backend.{name}_backend")

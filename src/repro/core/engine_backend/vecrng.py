@@ -234,6 +234,45 @@ class VecStreams:
         self._hi[idx] = sub._hi
         self._lo[idx] = sub._lo
 
+    # -- deterministic shard substreams -----------------------------------
+    def split(self, n_shards: int) -> list:
+        """Partition the lanes into ``n_shards`` contiguous independent
+        sub-banks (shard ``k`` owns lanes ``offsets[k]:offsets[k+1]``,
+        ``np.array_split`` bounds).
+
+        Each sub-bank carries *copies* of its lanes' states, so shards
+        may draw concurrently from different threads/processes; because
+        every lane is its own ``default_rng(seed_i)``-equivalent stream,
+        drawing shard outputs and concatenating them in shard order is
+        bitwise what the undivided bank produces.  This is the substrate
+        of sharded workload synthesis (``docs/scaling.md``): shard
+        ``k+1`` can synthesise while shard ``k`` audits without touching
+        shared RNG state.
+        """
+        n_shards = int(n_shards)
+        if not 1 <= n_shards <= self.n_lanes:
+            raise ValueError(f"n_shards must be in [1, {self.n_lanes}], "
+                             f"got {n_shards}")
+        return [self._gather(idx) for idx in
+                np.array_split(np.arange(self.n_lanes), n_shards)]
+
+    def jumped(self, counts) -> "VecStreams":
+        """A copy with lane ``i`` advanced ``counts[i]`` raw words
+        (scalar ``counts`` broadcasts); ``self`` is untouched.
+
+        The jump is the exact binary-lifting state transform
+        (:meth:`_advance`), not replayed draws — O(log counts) 128-bit
+        affine steps per lane — so a shard can start mid-stream at a
+        known draw offset deterministically.
+        """
+        sub = self._gather(np.arange(self.n_lanes))
+        counts = np.broadcast_to(np.asarray(counts, dtype=np.int64),
+                                 (self.n_lanes,))
+        if np.any(counts < 0):
+            raise ValueError("jump counts must be >= 0")
+        sub._advance(counts.copy())
+        return sub
+
     # -- fixed-consumption draws ------------------------------------------
     def random(self, mask: Optional[np.ndarray] = None) -> np.ndarray:
         """One ``Generator.random()`` double per lane."""

@@ -74,6 +74,37 @@ def _as_array(x, n: int, dtype=np.float64) -> np.ndarray:
     return a
 
 
+def auto_chunk_devices(n_devices: int, per_device_elems: int,
+                       budget_elems: int = 16_000_000) -> int:
+    """Device-slab size keeping one slab's intermediates near a budget.
+
+    The one sizing rule behind every chunked path in this module: a slab
+    of ``chunk`` devices materialises ``chunk x per_device_elems``
+    float64 scratch elements, so ``chunk = budget_elems //
+    per_device_elems`` holds peak memory around ``budget_elems * 8``
+    bytes (128 MB at the default) regardless of fleet size.  Callers and
+    their budgets:
+
+    * :meth:`SensorBank.poll` — ``per_device_elems`` = poll instants,
+      default budget (the [chunk, n_polls] query/jitter matrices);
+    * :meth:`SensorBank.iter_poll_slabs` — poll instants per tick, 4M
+      budget (a streamed slab additionally flattens to device-major);
+    * :meth:`SensorBank.query` with ``chunk_devices="auto"`` — query
+      grid width, default budget (``None`` keeps the historical
+      unchunked default: one [N, K] slot-index pass).
+
+    Degenerate inputs clamp sanely: zero/negative ``per_device_elems``
+    counts as one element, the result is always >= 1 (tiny budgets
+    stream row by row) and never exceeds ``n_devices`` (when positive),
+    so ``range(0, n, chunk)`` covers any fleet, including ``n == 0``.
+    """
+    per = max(int(per_device_elems), 1)
+    chunk = max(1, int(budget_elems) // per)
+    if n_devices > 0:
+        chunk = min(chunk, int(n_devices))
+    return chunk
+
+
 class SensorBank:
     """N heterogeneous on-board sensors as stacked arrays.
 
@@ -403,14 +434,16 @@ class SensorBank:
                                self._k0, self._phase, self.update_period_s)
 
     def query(self, t: Union[float, np.ndarray],
-              chunk_devices: Optional[int] = None) -> np.ndarray:
+              chunk_devices: Union[int, str, None] = None) -> np.ndarray:
         """Latest published reading per device at time(s) ``t``.
 
         ``t`` may be a scalar (returns [N]), a shared [K] query grid
         (returns [N, K]), or per-device times [N, K].  ``chunk_devices``
         bounds the slot-index intermediates to device slabs (the [N, K]
         result is still returned whole); per-device values are identical
-        under any chunking.
+        under any chunking.  ``"auto"`` sizes slabs by
+        :func:`auto_chunk_devices`; the default ``None`` keeps the
+        historical one-pass behaviour.
         """
         sched = self._schedule
         t = np.asarray(t, dtype=np.float64)
@@ -423,6 +456,8 @@ class SensorBank:
         else:
             raise ValueError(f"bad query shape {t.shape}")
 
+        if chunk_devices == "auto":
+            chunk_devices = auto_chunk_devices(self.n_devices, tq.shape[1])
         if chunk_devices is None or chunk_devices >= self.n_devices:
             j = self._be.query_slots(sched, tq)
             out = np.take_along_axis(self._values, j, axis=1)
@@ -468,7 +503,8 @@ MonitorService` consumes.
         n_polls = int(np.floor((t1 - t0) / period_s))
         per_tick = max(1, int(round(tick_s / period_s)))
         if chunk_devices is None:
-            chunk_devices = max(1, 4_000_000 // per_tick)
+            chunk_devices = auto_chunk_devices(self.n_devices, per_tick,
+                                               budget_elems=4_000_000)
         for j_lo in range(0, n_polls, per_tick):
             j_hi = min(j_lo + per_tick, n_polls)
             ts = t0 + period_s * np.arange(j_lo, j_hi)
@@ -503,7 +539,7 @@ MonitorService` consumes.
         n = int(np.floor((t1 - t0) / period_s))
         ts = t0 + period_s * np.arange(n)
         if chunk_devices is None:
-            chunk_devices = max(1, 16_000_000 // max(n, 1))
+            chunk_devices = auto_chunk_devices(self.n_devices, n)
         if jitter_s > 0:
             from repro.core.engine_backend.vecrng import VecStreams
             mat = np.empty((self.n_devices, n))
@@ -704,8 +740,10 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
                 workload=None, seed: int = 0,
                 good_practice: bool = False, n_trials: int = 2,
                 seed_mode: str = "per_device",
-                backend: Optional[str] = None,
-                chunk_devices: Optional[int] = None) -> FleetAuditResult:
+                backend=None,
+                chunk_devices: Optional[int] = None,
+                mesh=None,
+                prefetch_workloads: bool = False) -> FleetAuditResult:
     """Monte-Carlo audit: N devices, each with hidden gain/offset/phase,
     measure naively (and optionally with the §5 protocol) and return the
     per-device error distribution.
@@ -732,6 +770,17 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
     ``result.stats()``).  This is what makes million-device
     heterogeneous audits practical — see ``docs/scaling.md``.
 
+    ``mesh`` (a jax mesh with a ``"data"`` axis) runs every kernel
+    ``shard_map``-ed over the mesh devices via a
+    :class:`~repro.core.fleet_engine_shard.ShardedBackend`, with the
+    error-moment merge as an on-device Chan tree; ``backend`` may also
+    be such a backend *object* directly.  ``prefetch_workloads``
+    double-buffers :class:`~repro.core.load.FleetScenarioSpec` slab
+    synthesis against audit compute (identical results — slabs are
+    exact row-ranges; defaults on for the sharded entry point).  Both
+    default off, so the single-shard path is byte-for-byte the
+    historical code path.
+
     10,000 devices run in seconds: everything after bank construction is
     [N, M] array arithmetic.
     """
@@ -741,6 +790,14 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
                                   as_workload_set,
                                   measure_good_practice_batch,
                                   measure_naive_batch)
+
+    if mesh is not None:
+        # lazy import: the module (and jax) only loads when a mesh asks
+        from repro.core.fleet_engine_shard import ShardedBackend
+        if backend is not None and not isinstance(backend, str):
+            raise ValueError("pass either mesh= or a backend object, "
+                             "not both")
+        backend = ShardedBackend(mesh, base=backend or "jax")
 
     if workload is None:
         workload = Workload("audit_burst", loads.multi_phase_workload(
@@ -805,12 +862,14 @@ def fleet_audit(n_devices: int, profile: Union[str, Sequence[str]] = "a100",
                 str(label), StreamingMoments()).update(
                     err[labels == label], be)
 
+    ws_iter = (spec.iter_workload_sets(slabs, prefetch=prefetch_workloads)
+               if spec is not None else None)
     for lo, hi in slabs:
         bank = SensorBank.from_catalog(
             names[lo:hi], seeds=np.arange(lo, hi) + seed,
             seed_mode=seed_mode, backend=backend)
         if spec is not None:
-            ws = spec.workload_set(lo, hi)
+            ws = next(ws_iter)
         elif ws_full is not None:
             ws = ws_full if len(slabs) == 1 else ws_full.rows(lo, hi)
         else:

@@ -516,3 +516,29 @@ class FleetScenarioSpec:
         from repro.core.meter import WorkloadSet
         bank, labels = self.bank(lo, hi)
         return WorkloadSet(bank=bank, scenarios=labels)
+
+    def iter_workload_sets(self, slabs, prefetch: bool = False):
+        """Yield ``workload_set(lo, hi)`` for each ``(lo, hi)`` in
+        ``slabs``, optionally double-buffered.
+
+        With ``prefetch=True`` slab *k+1* synthesises on a background
+        thread while the consumer (the audit loop) works on slab *k* —
+        sound because slabs are exact row-ranges with their own derived
+        RNG substreams (vecrng seeds are per-device), so synthesis order
+        and thread cannot change a single bit of any slab.  The consumed
+        sequence is identical either way; ``prefetch=False`` is the
+        plain sequential generator.
+        """
+        slabs = list(slabs)
+        if not prefetch or len(slabs) <= 1:
+            for lo, hi in slabs:
+                yield self.workload_set(lo, hi)
+            return
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            fut = pool.submit(self.workload_set, *slabs[0])
+            for nxt in slabs[1:]:
+                cur = fut.result()
+                fut = pool.submit(self.workload_set, *nxt)
+                yield cur
+            yield fut.result()

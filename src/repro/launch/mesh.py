@@ -28,6 +28,23 @@ def make_mesh(shape: Sequence[int], axes: Optional[Sequence[str]] = None):
     return jax.make_mesh(shape, tuple(axes))
 
 
+def data_mesh(n_shards: Optional[int] = None):
+    """1-D ``("data",)`` mesh over the first ``n_shards`` local devices —
+    the fleet-audit sharding axis (see ``core/fleet_engine_shard``).
+
+    Unlike :func:`make_mesh` this may use a *subset* of the visible
+    devices, so a 4-way audit mesh works on an 8-device host.  Defaults
+    to every visible device.  On CPU hosts, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` before the
+    first jax import to expose n devices (``docs/scaling.md``)."""
+    n = jax.device_count() if n_shards is None else int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n}")
+    require_devices(n)
+    devs = np.asarray(jax.devices()[:n], dtype=object)
+    return jax.sharding.Mesh(devs, ("data",))
+
+
 def n_chips(mesh) -> int:
     return int(np.prod(mesh.devices.shape))
 

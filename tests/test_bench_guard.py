@@ -108,3 +108,44 @@ def test_dominance_default_margin_is_one():
         {"left": "streaming.jax.samples_per_sec",
          "right": "streaming.pallas.samples_per_sec"}]}
     assert check(BENCH, baseline) == []
+
+
+# -- scaling rules (ISSUE 7: sharded-audit parallel efficiency) -------------
+
+def _sharded_block(dps1, dps4, cores):
+    return {"sharded": {
+        "host_cpu_count": cores,
+        "scaling": {"1": {"devices_per_sec": dps1},
+                    "4": {"devices_per_sec": dps4}}}}
+
+
+_SCALING_BASE = {"scaling": [{"block": "sharded", "at": 4, "ref": 1,
+                              "min_efficiency": 0.7,
+                              "min_host_cores": 4}]}
+
+
+def test_scaling_passes_at_good_efficiency():
+    bench = _sharded_block(1000.0, 3200.0, 8)     # 0.8 efficiency
+    assert check(bench, _SCALING_BASE) == []
+
+
+def test_scaling_fails_below_min_efficiency():
+    bench = _sharded_block(1000.0, 2000.0, 8)     # 0.5 efficiency
+    fails = check(bench, _SCALING_BASE)
+    assert len(fails) == 1 and "scaling regression" in fails[0]
+
+
+def test_scaling_gated_on_host_cores():
+    """Forced host devices time-slice the same cores on a small machine:
+    the efficiency gate must not fire there, but the metrics must still
+    exist."""
+    bench = _sharded_block(1000.0, 1050.0, 1)     # 1-core box: ~no speedup
+    assert check(bench, _SCALING_BASE) == []
+    missing = {"sharded": {"host_cpu_count": 1, "scaling": {}}}
+    fails = check(missing, _SCALING_BASE)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_scaling_missing_block_fails():
+    fails = check({}, _SCALING_BASE)
+    assert len(fails) == 1 and "missing" in fails[0]

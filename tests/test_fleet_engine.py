@@ -310,3 +310,140 @@ def test_register_batch_mixes_with_object_path():
     assert s.n_devices == 3
     assert s.total_j == pytest.approx(300.0)
     assert s.sigma_worstcase_j == pytest.approx(15.0)
+
+
+# -- auto_chunk_devices (ISSUE 7: the one hoisted sizing rule) --------------
+
+def test_auto_chunk_devices_reproduces_historical_heuristics():
+    from repro.core.fleet_engine import auto_chunk_devices
+
+    # poll: 16M-element budget over n_polls-wide rows
+    for n_polls in (1, 100, 16_000_000, 64_000_000):
+        assert auto_chunk_devices(10**9, n_polls) == \
+            max(1, 16_000_000 // max(n_polls, 1))
+    # iter_poll_slabs: 4M budget over per-tick columns
+    assert auto_chunk_devices(10**9, 500, budget_elems=4_000_000) == 8000
+
+
+def test_auto_chunk_devices_edge_cases():
+    from repro.core.fleet_engine import auto_chunk_devices
+
+    assert auto_chunk_devices(0, 100) >= 1          # empty fleet: range ok
+    assert auto_chunk_devices(0, 0) >= 1
+    assert auto_chunk_devices(5, 10**9) == 1        # huge rows: row-by-row
+    assert auto_chunk_devices(3, 100) == 3          # tiny fleet: one slab
+    assert auto_chunk_devices(7, 0) == 7            # zero-width rows
+    chunk = auto_chunk_devices(10**7, 1600)
+    assert 1 <= chunk <= 10**7 and chunk == 10_000
+
+
+def test_query_auto_chunking_identical():
+    bank = SensorBank.from_catalog(MIXED, base_seed=4)
+    bank.attach(TL, t_start=0.0)
+    tq = np.linspace(0.1, 3.3, 11)
+    np.testing.assert_array_equal(bank.query(tq, chunk_devices="auto"),
+                                  bank.query(tq))
+
+
+def test_fleet_audit_prefetch_workloads_identical():
+    """Double-buffered slab synthesis must not change a bit (slabs are
+    exact row-ranges; the thread only changes *when* they are built)."""
+    spec = loads.FleetScenarioSpec(n=120, seed=5)
+    names = (MIXED * 14)[:120]
+    a = fleet_audit(120, profile=names, workload=spec, chunk_devices=33,
+                    prefetch_workloads=True)
+    b = fleet_audit(120, profile=names, workload=spec, chunk_devices=33)
+    np.testing.assert_array_equal(a.naive_j, b.naive_j)
+    np.testing.assert_array_equal(a.naive_err, b.naive_err)
+    assert a.streamed == b.streamed
+
+
+# -- StreamingMoments tree-order invariance (ISSUE 7 precondition) ----------
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+if HAVE_HYPOTHESIS:
+    _moment_cases = given(
+        data=st.data(),
+        n=st.integers(min_value=1, max_value=300),
+        scale=st.sampled_from([1e-6, 1.0, 1e6]))
+else:                                    # pragma: no cover
+    _moment_cases = given()
+
+
+def _fold_tree(blocks, order_rng):
+    """Merge moment blocks pairwise in a random tree shape."""
+    from repro.core.fleet_engine import StreamingMoments
+
+    nodes = []
+    for b in blocks:
+        sm = StreamingMoments()
+        sm.merge(*b)
+        nodes.append(sm)
+    while len(nodes) > 1:
+        i = int(order_rng.integers(len(nodes) - 1))
+        right = nodes.pop(i + 1)
+        nodes[i].merge(right.n, right.mean, right.m2,
+                       right.mean_abs, right.max_abs)
+    return nodes[0]
+
+
+@_moment_cases
+@settings(max_examples=60, deadline=None)
+def test_streaming_moments_tree_order_invariant(data, n, scale):
+    """Any fold tree over random partitions agrees with the sequential
+    merge: counts bitwise, moments within float tolerance — the
+    correctness precondition for the on-device tree reduction."""
+    from repro.core.engine_backend import numpy_backend
+    from repro.core.fleet_engine import StreamingMoments
+
+    seed = data.draw(st.integers(min_value=0, max_value=2**31))
+    rng = np.random.default_rng(seed)
+    e = rng.normal(scale=scale, size=n)
+    n_cuts = data.draw(st.integers(min_value=0, max_value=min(n, 8)))
+    cuts = sorted(data.draw(
+        st.lists(st.integers(min_value=0, max_value=n),
+                 min_size=n_cuts, max_size=n_cuts)))
+    bounds = [0] + cuts + [n]
+    blocks = [numpy_backend.err_moments(e[lo:hi])
+              for lo, hi in zip(bounds[:-1], bounds[1:])]
+
+    seq = StreamingMoments()
+    for b in blocks:
+        seq.merge(*b)
+    tree = _fold_tree(blocks, rng)
+
+    assert tree.n == seq.n == n                 # counts exact, always
+    assert tree.max_abs == seq.max_abs          # max is order-free
+    for got, ref in ((tree.mean, seq.mean), (tree.mean_abs, seq.mean_abs)):
+        assert got == pytest.approx(ref, rel=1e-9, abs=1e-12 * scale)
+    assert tree.m2 == pytest.approx(seq.m2, rel=1e-6,
+                                    abs=1e-9 * scale * scale)
+
+
+def test_streaming_moments_tree_order_invariant_seeded():
+    """Deterministic counterpart of the hypothesis property (runs even
+    where hypothesis is absent): 40 random partitions × random fold
+    trees vs the sequential merge."""
+    from repro.core.engine_backend import numpy_backend
+    from repro.core.fleet_engine import StreamingMoments
+
+    rng = np.random.default_rng(2024)
+    for _ in range(40):
+        n = int(rng.integers(1, 400))
+        e = rng.normal(scale=float(rng.choice([1e-6, 1.0, 1e6])), size=n)
+        bounds = np.unique(np.concatenate(
+            [[0, n], rng.integers(0, n + 1, size=rng.integers(0, 9))]))
+        blocks = [numpy_backend.err_moments(e[lo:hi])
+                  for lo, hi in zip(bounds[:-1], bounds[1:])]
+        seq = StreamingMoments()
+        for b in blocks:
+            seq.merge(*b)
+        tree = _fold_tree(blocks, rng)
+        assert tree.n == seq.n == n
+        assert tree.max_abs == seq.max_abs
+        assert tree.mean == pytest.approx(seq.mean, rel=1e-9,
+                                          abs=1e-9 * seq.mean_abs)
+        assert tree.mean_abs == pytest.approx(seq.mean_abs, rel=1e-9)
+        assert tree.m2 == pytest.approx(seq.m2, rel=1e-6,
+                                        abs=1e-12 * seq.m2 + 1e-30)

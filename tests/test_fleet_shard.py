@@ -1,0 +1,191 @@
+"""Mesh-sharded audit parity (ISSUE 7).
+
+``ShardedBackend`` must be a drop-in for the jax backend module: every
+kernel call over a ``("data",)`` mesh matches the single-process jax
+result (row-independent math — bitwise up to shard padding), the
+on-device Chan tree reduction matches the host-side sequential
+``StreamingMoments`` folding, and ``fleet_audit_sharded`` reproduces
+``fleet_audit`` (energies, ``_err_stats``, ``by_scenario`` moments)
+within the chunked-audit tolerance.
+
+The module runs on however many devices the host exposes — a degenerate
+1-device mesh in a plain run; CI's shard-mesh job (and the recipe in
+``docs/scaling.md``) sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+before the first jax import so the same assertions exercise a real
+multi-shard mesh with padding seams.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core import load as loads
+from repro.core.engine_backend import get_backend, resolve_backend
+from repro.core.engine_backend import jax_backend, numpy_backend
+from repro.core.fleet_engine import SensorBank, StreamingMoments, fleet_audit
+from repro.core.fleet_engine_shard import (ShardedBackend,
+                                           fleet_audit_sharded,
+                                           tree_merge_moments)
+from repro.launch.mesh import data_mesh
+
+N_DEV = jax.device_count()
+PROFILES = ["a100", "h100_instant", "v100", "rtx3090_530"]
+
+
+def _names(n):
+    return [PROFILES[i % len(PROFILES)] for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def sharded_be():
+    return ShardedBackend(data_mesh(N_DEV))
+
+
+def test_resolve_backend_passes_objects_through(sharded_be):
+    assert resolve_backend(sharded_be) is sharded_be
+    assert get_backend(sharded_be) is sharded_be
+    with pytest.raises(ValueError, match="lacks kernel"):
+        resolve_backend(object())
+
+
+def test_sharded_backend_requires_data_axis():
+    from repro.launch.mesh import make_mesh
+    with pytest.raises(ValueError, match="data"):
+        ShardedBackend(make_mesh((1,), ("model",)))
+
+
+def test_sharded_kernels_match_jax_bank(sharded_be):
+    """Every transient kind + query path through a sharded bank equals
+    the plain jax bank — row counts chosen to force padding on any
+    shard count up to 8."""
+    n = 4 * N_DEV + 3 if N_DEV > 1 else 11
+    names = _names(n)
+    bank_j = SensorBank.from_catalog(names, base_seed=5, backend="jax")
+    bank_s = SensorBank.from_catalog(names, base_seed=5,
+                                     backend=sharded_be)
+    tl = loads.square_wave(0.230, 16, 220.0, 90.0)
+    bank_j.attach(tl, t_start=0.0)
+    bank_s.attach(tl, t_start=0.0)
+    np.testing.assert_allclose(bank_s._values, bank_j._values,
+                               rtol=1e-12, atol=1e-12)
+    tq = np.linspace(0.0, 3.5, 7)
+    np.testing.assert_allclose(bank_s.query(tq), bank_j.query(tq),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_sharded_integrate_polled_matches_jax(sharded_be):
+    n = 4 * N_DEV + 1 if N_DEV > 1 else 9
+    names = _names(n)
+    tl = loads.square_wave(0.200, 12, 230.0, 80.0)
+    banks = {}
+    for key, be in (("jax", "jax"), ("shard", sharded_be)):
+        bank = SensorBank.from_catalog(names, base_seed=2, backend=be)
+        bank.attach(tl, t_start=0.0)
+        banks[key] = bank.integrate_polled(0.0, 2.4, 0.001, 0.1, 2.3)
+    np.testing.assert_allclose(banks["shard"], banks["jax"],
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_on_device_moments_match_numpy(sharded_be):
+    rng = np.random.default_rng(0)
+    for size in (1, 2, N_DEV, 5 * N_DEV + 3, 1000):
+        e = rng.normal(scale=0.2, size=size)
+        ns, ms, m2s, mas, xs = sharded_be.err_moments(e)
+        nn, mn, m2n, man, xn = numpy_backend.err_moments(e)
+        assert ns == nn
+        np.testing.assert_allclose([ms, m2s, mas, xs],
+                                   [mn, m2n, man, xn],
+                                   rtol=1e-12, atol=1e-15)
+    assert sharded_be.err_moments(np.array([])) == (0, 0.0, 0.0, 0.0, 0.0)
+
+
+def test_tree_merge_matches_sequential_fold():
+    """The on-device binary tree over per-partition moment blocks agrees
+    with the host-side sequential Chan folding, for awkward block counts
+    (non-powers of two, empty blocks interleaved)."""
+    rng = np.random.default_rng(7)
+    e = rng.normal(size=257)
+    for cuts in ([0, 257], [0, 1, 257], [0, 40, 40, 100, 256, 257],
+                 [0, 17, 45, 45, 45, 120, 200, 250, 257]):
+        blocks = []
+        seq = StreamingMoments()
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            m = numpy_backend.err_moments(e[lo:hi])
+            blocks.append([float(m[0]), m[1], m[2], m[3], m[4]])
+            seq.merge(*m)
+        merged = np.asarray(tree_merge_moments(np.asarray(blocks)))
+        assert int(merged[0]) == seq.n
+        np.testing.assert_allclose(
+            merged[1:], [seq.mean, seq.m2, seq.mean_abs, seq.max_abs],
+            rtol=1e-12, atol=1e-15)
+
+
+def test_streaming_moments_update_routes_through_sharded_backend(sharded_be):
+    e = np.random.default_rng(3).normal(size=101)
+    sm = StreamingMoments().update(e, sharded_be)
+    ref = StreamingMoments().update(e)
+    assert sm.n == ref.n
+    np.testing.assert_allclose(
+        [sm.mean, sm.m2, sm.mean_abs, sm.max_abs],
+        [ref.mean, ref.m2, ref.mean_abs, ref.max_abs], rtol=1e-12)
+
+
+def test_fleet_audit_sharded_matches_single_shard():
+    """ISSUE 7 acceptance: sharded audit == single-process audit at the
+    same super-slab chunking — energies bitwise-tight, streamed moment
+    stats within float tolerance, by_scenario intact."""
+    n = 25 * max(N_DEV, 4) + 2            # never a multiple of the mesh
+    names = _names(n)
+    spec = loads.FleetScenarioSpec(n=n, seed=7)
+    chunk = 50 * max(N_DEV, 4)
+    ref = fleet_audit(n, profile=names, workload=spec, backend="jax",
+                      chunk_devices=chunk, good_practice=True)
+    sh = fleet_audit_sharded(n, profile=names, workload=spec,
+                             n_shards=N_DEV,
+                             shard_chunk=-(-chunk // N_DEV),
+                             good_practice=True)
+    np.testing.assert_allclose(sh.naive_j, ref.naive_j, rtol=1e-9)
+    np.testing.assert_allclose(sh.naive_err, ref.naive_err,
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(sh.gp_j, ref.gp_j, rtol=1e-9)
+    for key in ("mean_err", "mean_abs_err", "std_err", "worst_abs"):
+        assert sh.stats()[key] == pytest.approx(ref.stats()[key],
+                                                rel=1e-9, abs=1e-12)
+    assert sh.streamed["naive"]["overall"]["n_devices"] == n
+    ref_by = ref.by_scenario()
+    sh_by = sh.by_scenario()
+    assert sorted(sh_by) == sorted(ref_by)
+    for label, st in ref_by.items():
+        assert sh_by[label]["n_devices"] == st["n_devices"]
+        assert sh_by[label]["mean_abs_err"] == pytest.approx(
+            st["mean_abs_err"], rel=1e-9, abs=1e-12)
+    for label, st in ref.streamed["naive"]["by_scenario"].items():
+        got = sh.streamed["naive"]["by_scenario"][label]
+        assert got["n_devices"] == st["n_devices"]
+        assert got["mean_abs_err"] == pytest.approx(st["mean_abs_err"],
+                                                    rel=1e-9, abs=1e-12)
+
+
+def test_fleet_audit_mesh_kwarg_equivalent_to_entry_point():
+    n = 8 * max(N_DEV, 1)
+    names = _names(n)
+    mesh = data_mesh(N_DEV)
+    via_kwarg = fleet_audit(n, profile=names, mesh=mesh,
+                            chunk_devices=n)
+    via_entry = fleet_audit_sharded(n, profile=names, n_shards=N_DEV,
+                                    shard_chunk=-(-n // N_DEV))
+    np.testing.assert_array_equal(via_kwarg.naive_j, via_entry.naive_j)
+    with pytest.raises(ValueError, match="not both"):
+        fleet_audit(4, mesh=mesh, backend=ShardedBackend(mesh))
+
+
+def test_sharded_prefetch_identical_to_sequential():
+    n = 12 * max(N_DEV, 1)
+    spec = loads.FleetScenarioSpec(n=n, seed=11)
+    mesh = data_mesh(N_DEV)
+    a = fleet_audit(n, profile=_names(n), workload=spec, mesh=mesh,
+                    chunk_devices=4 * N_DEV, prefetch_workloads=True)
+    b = fleet_audit(n, profile=_names(n), workload=spec, mesh=mesh,
+                    chunk_devices=4 * N_DEV, prefetch_workloads=False)
+    np.testing.assert_array_equal(a.naive_j, b.naive_j)
+    np.testing.assert_array_equal(a.naive_err, b.naive_err)

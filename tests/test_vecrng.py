@@ -179,3 +179,90 @@ def test_deep_parity_sweep():
         np.testing.assert_array_equal(
             got[j], np.random.default_rng(int(s)).standard_normal(m),
             err_msg=f"seed {s}")
+
+
+# -- deterministic shard substreams (ISSUE 7) -------------------------------
+
+def test_split_concat_bitwise_across_draw_kinds():
+    """Shard outputs concatenated in shard order must be bitwise what the
+    undivided bank draws — per lane the stream is independent, so the
+    partition cannot matter, for any draw kind or shard count."""
+    for n_shards in (1, 2, 3, len(SEEDS)):
+        full = VecStreams(SEEDS)
+        parts = VecStreams(SEEDS).split(n_shards)
+        assert sum(p.n_lanes for p in parts) == len(SEEDS)
+        ref_u = full.uniform_block(0.0, 1.0, np.full(len(SEEDS), 7))
+        got_u = np.concatenate(
+            [p.uniform_block(0.0, 1.0, np.full(p.n_lanes, 7))
+             for p in parts])
+        np.testing.assert_array_equal(got_u, ref_u)
+        ref_n = full.normal_block(1.5, np.full(len(SEEDS), 4))
+        got_n = np.concatenate(
+            [p.normal_block(1.5, np.full(p.n_lanes, 4)) for p in parts])
+        np.testing.assert_array_equal(got_n, ref_n)
+        ref_p = full.poisson(8.5)
+        got_p = np.concatenate([p.poisson(8.5) for p in parts])
+        np.testing.assert_array_equal(got_p, ref_p)
+
+
+def test_split_leaves_parent_untouched_and_validates():
+    v = VecStreams(SEEDS)
+    before = (v._hi.copy(), v._lo.copy())
+    parts = v.split(3)
+    parts[0].random()
+    np.testing.assert_array_equal(v._hi, before[0])
+    np.testing.assert_array_equal(v._lo, before[1])
+    with pytest.raises(ValueError):
+        v.split(0)
+    with pytest.raises(ValueError):
+        v.split(len(SEEDS) + 1)
+
+
+def test_split_scenario_bank_concat_bitwise():
+    """ISSUE 7 pin: sharded scenario generation concatenated in shard
+    order is bitwise the single-stream ``scenario_bank`` output — for
+    every scenario kind, including the variable-consumption Poisson
+    inference sampler."""
+    from repro.core.load import SCENARIO_BANKS, scenario_bank
+
+    seeds = np.arange(40, dtype=np.uint64) + 3
+    cuts = [0, 13, 26, 40]                 # ragged 3-way shard split
+    for kind in sorted(SCENARIO_BANKS):
+        full = scenario_bank(kind, seeds)
+        fa = full.arrays
+        row = 0
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            part = scenario_bank(kind, seeds[lo:hi]).arrays
+            for i in range(hi - lo):
+                ns = int(part.n_segs[i])
+                assert ns == int(fa.n_segs[row])
+                np.testing.assert_array_equal(part.edges[i, :ns + 1],
+                                              fa.edges[row, :ns + 1],
+                                              err_msg=f"{kind} row {row}")
+                np.testing.assert_array_equal(part.powers[i, :ns],
+                                              fa.powers[row, :ns])
+                assert part.idle_w[i] == fa.idle_w[row]
+                row += 1
+
+
+def test_jumped_exact_draw_offsets():
+    """``jumped(k)`` lands exactly k raw words downstream — scalar and
+    per-lane counts — without touching the source."""
+    v = VecStreams(SEEDS)
+    j3 = v.jumped(3)
+    ref = VecStreams(SEEDS)
+    for _ in range(3):
+        ref.random()
+    np.testing.assert_array_equal(j3.random(), ref.random())
+    np.testing.assert_array_equal(v._hi, VecStreams(SEEDS)._hi)
+
+    counts = (np.arange(len(SEEDS)) * 11) % 97
+    jv = VecStreams(SEEDS).jumped(counts)
+    got = jv.random()
+    for j, s in enumerate(SEEDS):
+        r = np.random.default_rng(int(s))
+        for _ in range(int(counts[j])):
+            r.random()
+        assert got[j] == r.random(), f"seed {s}"
+    with pytest.raises(ValueError):
+        VecStreams(SEEDS).jumped(-1)

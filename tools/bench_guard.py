@@ -17,6 +17,10 @@ Baseline format::
         {"left": "streaming.jax.samples_per_sec",
          "right": "streaming.numpy.samples_per_sec",
          "margin": 1.0}
+      ],
+      "scaling": [
+        {"block": "sharded", "at": 4, "ref": 1,
+         "min_efficiency": 0.7, "min_host_cores": 4}
       ]
     }
 
@@ -26,9 +30,17 @@ collapsed); ``ceilings`` fail when ``measured > baseline * factor``
 metrics against each other — failing when ``left < right * margin`` —
 which pins an ordering (e.g. the accelerated ingest tiers must never
 fall behind the numpy reference) independent of the machine's absolute
-speed, so it needs no tolerance factor.  Keys are dotted paths into the
-bench JSON; a key missing from the bench file fails the guard (the
-metric silently disappearing is itself a regression).
+speed, so it needs no tolerance factor.  ``scaling`` rules guard the
+sharded-audit parallel efficiency: over a bench block shaped like
+``{"host_cpu_count": C, "scaling": {"1": {"devices_per_sec": ...},
+"4": {...}}}`` they fail when ``dps[at] / ((at/ref) * dps[ref]) <
+min_efficiency``.  Forced host devices only express real parallelism
+when backed by real cores, so the efficiency gate applies only where
+``host_cpu_count >= min_host_cores`` (the recorded shard metrics must
+exist everywhere — the block silently disappearing still fails).  Keys
+are dotted paths into the bench JSON; a key missing from the bench file
+fails the guard (the metric silently disappearing is itself a
+regression).
 
 Usage::
 
@@ -80,6 +92,33 @@ def check(bench: dict, baseline: dict) -> list:
             failures.append(
                 f"{lk}: {float(left):.1f} < {rk} ({float(right):.1f}) "
                 f"× {margin:g} (ordering regression)")
+    for rule in baseline.get("scaling", []):
+        name = rule["block"]
+        block = _lookup(bench, name)
+        if not isinstance(block, dict):
+            failures.append(f"{name}: missing from bench output")
+            continue
+        at, ref = str(rule.get("at", 4)), str(rule.get("ref", 1))
+        d_at = _lookup(block, f"scaling.{at}.devices_per_sec")
+        d_ref = _lookup(block, f"scaling.{ref}.devices_per_sec")
+        if d_at is None or d_ref is None:
+            failures.append(f"{name}.scaling: missing devices_per_sec "
+                            f"at {ref} and/or {at} shards")
+            continue
+        min_cores = int(rule.get("min_host_cores", int(at)))
+        cores = block.get("host_cpu_count")
+        if cores is not None and int(cores) < min_cores:
+            # forced host devices time-slice the same cores on this
+            # machine — efficiency is unmeasurable, only shape is guarded
+            continue
+        speedup = int(at) / int(ref)
+        eff = float(d_at) / (float(d_ref) * speedup)
+        min_eff = float(rule.get("min_efficiency", 0.7))
+        if eff < min_eff:
+            failures.append(
+                f"{name}.scaling: {eff:.2f} parallel efficiency at "
+                f"{at} shards (vs {ref}) < {min_eff:g} "
+                f"(scaling regression)")
     return failures
 
 
@@ -101,7 +140,8 @@ def main(argv=None) -> int:
         return 1
     checked = (len(baseline.get("floors", {}))
                + len(baseline.get("ceilings", {}))
-               + len(baseline.get("dominance", [])))
+               + len(baseline.get("dominance", []))
+               + len(baseline.get("scaling", [])))
     print(f"bench_guard: OK ({checked} metrics within "
           f"{baseline.get('tolerance_factor', 4.0):g}x of baseline)")
     return 0
