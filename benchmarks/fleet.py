@@ -41,6 +41,16 @@ ten-million-device bounded-memory run::
 
     python benchmarks/fleet.py --n-devices 2000 --shard-devices 200000 \
         --shard-counts 1,2,4 --shard-mega-devices 10000000
+
+Snapshot serving (ISSUE 8): the ``serving`` block interleaves slab
+ingestion with batched query flushes through
+:class:`repro.serve.monitor_service.MonitorQueryService` — sustained
+queries/sec while ingesting, per-flush p50/p99 latency, cache hit rate.
+``--serving-devices`` adds the 100k-device scale run;
+``--serving-only`` reruns just this block (merging into an existing
+``BENCH_fleet.json``)::
+
+    python benchmarks/fleet.py --serving-only --serving-devices 100000
 """
 from __future__ import annotations
 
@@ -124,6 +134,13 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--shard-mega-shards", type=int, default=4,
                     help="forced-host shard count for the sharded mega "
                          "audit (default 4)")
+    ap.add_argument("--serving-devices", type=int, default=0,
+                    help="fleet size for the scale serving bench "
+                         "(default 0 = disabled; the committed "
+                         "BENCH_fleet.json uses 100000)")
+    ap.add_argument("--serving-only", action="store_true",
+                    help="run only the snapshot-serving bench and merge "
+                         "its block into an existing BENCH_fleet.json")
     return ap.parse_args(argv)
 
 
@@ -260,6 +277,111 @@ def _ingest_throughput(slabs, n, backend):
     return sum(v.size for _, _, v in slabs), wall
 
 
+def _serving_throughput(slabs, n, backend, *, queries_per_flush=512,
+                        flushes_per_slab=4, hot_instants=24,
+                        cache_size=512, seed=0):
+    """Interleave slab ingestion with batched query flushes: after each
+    slab lands, ``flushes_per_slab`` request batches hit the monitor's
+    fresh snapshot — each batch many concurrent clients asking a small
+    pool of hot dashboard instants (dedup folds repeats inside a flush,
+    the ``(query, epoch)`` cache serves later flushes at the same
+    epoch), plus the since-start/window/between/by-label staples.
+
+    Returns the bench entry: sustained queries/sec and concurrent
+    ingest samples/sec over the same wall clock, per-flush latency
+    percentiles, cache hit rate.  One untimed warm-up pass first, so
+    jit compilation is not billed to the tier.
+    """
+    from repro.core.stream import MonitorService
+    from repro.serve.monitor_service import (MonitorQuery,
+                                             MonitorQueryService)
+
+    def one_pass():
+        mon = MonitorService(n, backend=backend)
+        mon.set_windows(np.full(n, 0.3), np.full(n, 1.0))
+        svc = MonitorQueryService(mon, cache_size=cache_size)
+        rng = np.random.default_rng(seed)
+        lat, n_q, n_samp, t_hi = [], 0, 0, 0.0
+        t_all = time.perf_counter()
+        for dev, ts, vals in slabs:
+            mon.ingest_grid(dev, ts, vals)
+            n_samp += vals.size
+            t_hi = max(t_hi, float(np.max(ts)))
+            pool = np.round(rng.uniform(0.0, t_hi, hot_instants), 2)
+            for _ in range(flushes_per_slab):
+                picks = rng.choice(pool, queries_per_flush - 4)
+                t0 = time.perf_counter()
+                for t in picks:
+                    svc.submit(MonitorQuery.fleet_energy(float(t)))
+                svc.submit(MonitorQuery.fleet_energy())
+                svc.submit(MonitorQuery.window_energy())
+                svc.submit(MonitorQuery.energy_between(
+                    float(pool.min()), float(pool.max())))
+                svc.submit(MonitorQuery.by_label())
+                svc.flush()
+                lat.append(time.perf_counter() - t0)
+                n_q += queries_per_flush
+        wall = time.perf_counter() - t_all
+        return mon, svc, wall, lat, n_q, n_samp
+
+    one_pass()
+    mon, svc, wall, lat, n_q, n_samp = one_pass()
+    lat_ms = 1e3 * np.asarray(lat)
+    st = svc.stats()
+    return {
+        "queries_per_flush": queries_per_flush,
+        "flushes_per_slab": flushes_per_slab,
+        "n_queries": n_q,
+        "n_samples": int(n_samp),
+        "wall_s": round(wall, 4),
+        "queries_per_sec": round(n_q / wall, 1),
+        "ingest_samples_per_sec_concurrent": round(n_samp / wall, 1),
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        "cache_hit_rate": round(st["cache_hit_rate"], 4),
+        "epochs": int(mon.epoch),
+    }
+
+
+def _serving_blocks(args, backends, slabs, n):
+    """The ``serving`` BENCH block: per backend at the main size (on the
+    already-materialised slabs), plus the ``--serving-devices`` scale
+    run on spec-synthesised slabs."""
+    block = {"n_devices": n}
+    for be in backends:
+        entry = _serving_throughput(slabs, n, be)
+        block[be] = entry
+        emit(f"serving/backend_{be}_{n}", 0.0,
+             f"queries_per_sec={entry['queries_per_sec']};"
+             f"ingest_samples_per_sec_concurrent="
+             f"{entry['ingest_samples_per_sec_concurrent']};"
+             f"p50_ms={entry['p50_ms']};p99_ms={entry['p99_ms']};"
+             f"cache_hit_rate={entry['cache_hit_rate']}")
+    if args.serving_devices > 0:
+        ns = args.serving_devices
+        spec = loads.FleetScenarioSpec(n=ns, seed=7)
+        slabs_sv = _materialize_grid_slabs(
+            ns, _profile_names(ns), spec, seed=7, period_s=0.01,
+            chunk_devices=min(args.stream_chunk, ns))
+        scale = {"n_devices": ns, "period_s": 0.01}
+        for be in backends:
+            # at fleet scale a flush's kernel cost is amortised over a
+            # deeper request queue (more concurrent clients, same small
+            # pool of hot dashboard instants)
+            entry = _serving_throughput(slabs_sv, ns, be,
+                                        queries_per_flush=4096)
+            scale[be] = entry
+            emit(f"serving/scale_{be}_{ns}", 0.0,
+                 f"queries_per_sec={entry['queries_per_sec']};"
+                 f"ingest_samples_per_sec_concurrent="
+                 f"{entry['ingest_samples_per_sec_concurrent']};"
+                 f"p50_ms={entry['p50_ms']};p99_ms={entry['p99_ms']};"
+                 f"cache_hit_rate={entry['cache_hit_rate']}")
+        del slabs_sv
+        block["scale"] = scale
+    return block
+
+
 def _audit_stats(n, names, ws, backend):
     """One timed heterogeneous naive audit; returns (wall_s, result)."""
     t0 = time.perf_counter()
@@ -274,6 +396,22 @@ def run(argv=None) -> None:
     args = _parse_args(argv if argv is not None else [])
     n = args.n_devices
     backends = _selected_backends(args.backend)
+
+    if args.serving_only:
+        names = _profile_names(n)
+        ws = loads.mixed_fleet_workloads(n, seed=7, as_bank=True)
+        slabs = _materialize_grid_slabs(n, names, ws, seed=7)
+        serving = _serving_blocks(args, backends, slabs, n)
+        payload = {}
+        if os.path.exists(JSON_PATH):
+            with open(JSON_PATH) as fh:
+                payload = json.load(fh)
+        payload["serving"] = serving
+        with open(JSON_PATH, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        emit("fleet_audit/bench_json", 0.0, f"path={JSON_PATH}")
+        return
 
     proj = datacenter_projection(n_gpus=10_000, tdp_w=700.0, gain_tol=0.05)
     emit("headline_datacenter/10k_h100", 0.0,
@@ -474,6 +612,10 @@ def run(argv=None) -> None:
              f"ingest_samples_per_sec={entry['ingest_samples_per_sec']};"
              f"n_samples={entry['n_samples']};"
              f"state_mb={entry['monitor_state_mb']}")
+
+    # -- snapshot serving (ISSUE 8): batched query executor under
+    # concurrent ingest, reusing the materialised slabs
+    serving_block = _serving_blocks(args, backends, slabs, n)
     del slabs
     # untimed stream↔offline parity pin at a reduced size
     nc = min(n, 2000)
@@ -600,6 +742,7 @@ def run(argv=None) -> None:
         },
         "hetero_over_shared_wall": round(ratio, 3),
         "streaming": stream_block,
+        "serving": serving_block,
     }
     if chunk_block is not None:
         payload["chunked"] = chunk_block

@@ -29,7 +29,10 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
+try:
+    import jax
+except ImportError:       # numpy-only host: save path still works
+    jax = None
 import numpy as np
 
 from repro.common.logging import get_logger
@@ -68,7 +71,7 @@ class CheckpointManager:
     def _snapshot(self, tree: Any) -> List[Tuple[str, np.ndarray, str]]:
         out = []
         for path, leaf in flatten_with_paths(tree):
-            arr = np.asarray(jax.device_get(leaf))
+            arr = np.asarray(leaf if jax is None else jax.device_get(leaf))
             logical = str(arr.dtype)
             if arr.dtype.kind == "V" or logical == "bfloat16":
                 # non-native numpy dtype (bf16): store as f32, remember
@@ -133,7 +136,16 @@ class CheckpointManager:
         ``shardings``: optional matching trees of NamedShardings — the
         elastic path: leaves are device_put with the *target* topology's
         sharding regardless of how the checkpoint was produced.
+
+        Requires jax (device placement + tree reconstruction).  On
+        numpy-only hosts read the ``manifest.json`` + ``.npy`` layout
+        directly — :func:`repro.core.stream.checkpoint.restore_monitor`
+        is the reference reader.
         """
+        if jax is None:
+            raise RuntimeError(
+                "CheckpointManager.restore requires jax; on numpy-only "
+                "hosts read manifest.json + the .npy leaves directly")
         d = os.path.join(self.root, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)

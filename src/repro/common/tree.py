@@ -1,14 +1,49 @@
-"""Pytree helpers shared by checkpointing, sharding and optimizers."""
+"""Pytree helpers shared by checkpointing, sharding and optimizers.
+
+jax is optional here: the streaming-monitor checkpoint path runs on
+numpy-only hosts, so :func:`flatten_with_paths` falls back to a plain
+recursive flattener over dicts/lists/tuples (same sorted-key ordering
+jax uses) when jax is absent.  Helpers that genuinely need pytree
+registry support still require jax and say so.
+"""
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Tuple
 
-import jax
+try:
+    import jax
+except ImportError:                                   # numpy-only host
+    jax = None
 import numpy as np
+
+
+def _require_jax(what: str):
+    if jax is None:
+        raise RuntimeError(f"{what} requires jax, which is not installed")
+    return jax
+
+
+def _flatten_plain(tree: Any, prefix: Tuple[str, ...],
+                   out: List[Tuple[str, Any]]) -> None:
+    # mirrors jax's container ordering: dict keys sorted, sequences by index
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten_plain(tree[k], prefix + (str(k),), out)
+    elif isinstance(tree, (list, tuple)):
+        for i, leaf in enumerate(tree):
+            _flatten_plain(leaf, prefix + (str(i),), out)
+    elif tree is None:
+        pass
+    else:
+        out.append((".".join(prefix), tree))
 
 
 def flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
     """Flatten a pytree into (dot.path, leaf) pairs with stable ordering."""
+    if jax is None:
+        out: List[Tuple[str, Any]] = []
+        _flatten_plain(tree, (), out)
+        return out
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
@@ -30,10 +65,16 @@ def path_str(path: Tuple[Any, ...]) -> str:
     return ".".join(parts)
 
 
+def _tree_leaves(tree: Any) -> List[Any]:
+    if jax is None:
+        return [leaf for _, leaf in flatten_with_paths(tree)]
+    return jax.tree_util.tree_leaves(tree)
+
+
 def tree_bytes(tree: Any) -> int:
     """Total bytes across all array leaves."""
     total = 0
-    for leaf in jax.tree_util.tree_leaves(tree):
+    for leaf in _tree_leaves(tree):
         if hasattr(leaf, "nbytes"):
             total += int(leaf.nbytes)
         elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
@@ -42,20 +83,20 @@ def tree_bytes(tree: Any) -> int:
 
 
 def tree_param_count(tree: Any) -> int:
-    return sum(int(np.prod(leaf.shape)) for leaf in jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(leaf.shape)) for leaf in _tree_leaves(tree)
                if hasattr(leaf, "shape"))
 
 
 def map_with_paths(fn: Callable[[str, Any], Any], tree: Any) -> Any:
     """tree_map where fn also receives the dot.path of each leaf."""
-    return jax.tree_util.tree_map_with_path(
+    return _require_jax("map_with_paths").tree_util.tree_map_with_path(
         lambda path, leaf: fn(path_str(path), leaf), tree)
 
 
 def assert_trees_all_close(a: Any, b: Any, rtol: float = 1e-5,
                            atol: float = 1e-5) -> None:
-    la = jax.tree_util.tree_leaves(a)
-    lb = jax.tree_util.tree_leaves(b)
+    la = _tree_leaves(a)
+    lb = _tree_leaves(b)
     assert len(la) == len(lb), f"leaf count {len(la)} != {len(lb)}"
     for x, y in zip(la, lb):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y),

@@ -530,3 +530,54 @@ def err_moments(e: np.ndarray):
             jnp.asarray(e, jnp.float64))
     return (int(e.size), float(mean), float(m2), float(mean_abs),
             float(max_abs))
+
+
+@functools.partial(jax.jit, static_argnums=(10,))
+def _snapshot_energy_at_impl(tq, last_t, dens, has, first_t, base,
+                             max_hold, ring_t, ring_dens, ring_base,
+                             with_ring: bool):
+    tqc = tq[:, None]                                       # [Q, 1]
+    dt = tqc - last_t[None, :]
+    hold = jnp.minimum(dt, max_hold[None, :])
+    live = has[None, :] & (dt >= 0.0)
+    e_live = jnp.where(live, base[None, :] + dens[None, :] * hold, 0.0)
+    covered = live | ~has[None, :] | (tqc <= first_t[None, :])
+    started = has[None, :] & (tqc > first_t[None, :])
+    e = jnp.where(started, e_live, 0.0)
+    past = started & (tqc < last_t[None, :])
+    if with_ring:
+        j = jax.vmap(
+            lambda row: jnp.searchsorted(row, tq, side="right"))(ring_t) - 1
+        ok = j >= 0                                         # [N, Q]
+        jc = jnp.clip(j, 0, ring_t.shape[1] - 1)
+        rt = jnp.take_along_axis(ring_t, jc, axis=1)
+        rd = jnp.take_along_axis(ring_dens, jc, axis=1)
+        rb = jnp.take_along_axis(ring_base, jc, axis=1)
+        hold_p = jnp.minimum(tqc - rt.T, max_hold[None, :])
+        e_past = rb.T + rd.T * hold_p
+        sel = past & ok.T
+        e = jnp.where(sel, e_past, e)
+        covered = covered | sel
+    return jnp.where(covered, e, jnp.nan), covered
+
+
+def snapshot_energy_at(tq: np.ndarray, last_t: np.ndarray,
+                       dens: np.ndarray, has: np.ndarray,
+                       first_t: np.ndarray, base: np.ndarray,
+                       max_hold: np.ndarray, ring_t, ring_dens, ring_base):
+    """Batched snapshot-view energy query (see the numpy backend's
+    reference docstring) as one jitted [Q, N] kernel."""
+    with_ring = ring_t is not None
+    if not with_ring:
+        r = np.zeros((last_t.shape[0], 0))
+        ring_t = ring_dens = ring_base = r
+    with enable_x64():
+        e, covered = _snapshot_energy_at_impl(
+            jnp.asarray(tq, jnp.float64), jnp.asarray(last_t, jnp.float64),
+            jnp.asarray(dens, jnp.float64), jnp.asarray(has, jnp.bool_),
+            jnp.asarray(first_t, jnp.float64), jnp.asarray(base, jnp.float64),
+            jnp.asarray(max_hold, jnp.float64),
+            jnp.asarray(ring_t, jnp.float64),
+            jnp.asarray(ring_dens, jnp.float64),
+            jnp.asarray(ring_base, jnp.float64), with_ring)
+    return np.asarray(e), np.asarray(covered)

@@ -575,3 +575,48 @@ def query_slots(sched: ReadingSchedule, tq: np.ndarray) -> np.ndarray:
         tn = np.take_along_axis(sched.ticks, jn, axis=1)
         j = np.where((tn <= tq) & (jn > j), jn, j)
     return np.clip(j, sched.first[:, None], sched.last[:, None])
+
+
+def snapshot_energy_at(tq: np.ndarray, last_t: np.ndarray,
+                       dens: np.ndarray, has: np.ndarray,
+                       first_t: np.ndarray, base: np.ndarray,
+                       max_hold: np.ndarray, ring_t, ring_dens, ring_base):
+    """Batched snapshot-view energy query: energy since first sample at
+    ``Q`` instants for all ``N`` devices at once.
+
+    ``tq`` [Q] query instants; ``last_t``/``dens``/``has``/``first_t``/
+    ``base``/``max_hold`` [N] are the published snapshot's per-device
+    tail state (``dens``/``base`` already in the requested raw/corrected
+    flavour); ``ring_t``/``ring_dens``/``ring_base`` [N, R] are the
+    snapshot's *sorted* ring view in the same flavour, or ``None`` when
+    the ring is disabled.  Returns ``(e, covered)`` [Q, N] with nan
+    where an instant predates ring coverage — each row bitwise equal to
+    the single-instant query path (the math is elementwise, so the Q
+    broadcast changes nothing).
+    """
+    tq = np.asarray(tq, dtype=np.float64)[:, None]          # [Q, 1]
+    dt = tq - last_t[None, :]
+    hold = np.minimum(dt, max_hold[None, :])
+    live = has[None, :] & (dt >= 0.0)
+    e_live = np.where(live, base[None, :] + dens[None, :] * hold, 0.0)
+    covered = live | ~has[None, :] | (tq <= first_t[None, :])
+    started = has[None, :] & (tq > first_t[None, :])
+    e = np.where(started, e_live, 0.0)
+    past = started & (tq < last_t[None, :])
+    if ring_t is not None and np.any(past):
+        rows = np.broadcast_to(tq.T, (ring_t.shape[0], tq.shape[0]))
+        j = searchsorted_rows(ring_t, rows, "right") - 1    # [N, Q]
+        ok = j >= 0
+        jc = np.clip(j, 0, ring_t.shape[1] - 1)
+        rt = np.take_along_axis(ring_t, jc, axis=1)
+        rd = np.take_along_axis(ring_dens, jc, axis=1)
+        rb = np.take_along_axis(ring_base, jc, axis=1)
+        hold_p = np.minimum(tq - rt.T, max_hold[None, :])
+        # empty ring slots carry t=inf sentinels: 0*inf warns but the
+        # result is masked out by sel below
+        with np.errstate(invalid="ignore"):
+            e_past = rb.T + rd.T * hold_p
+        sel = past & ok.T
+        e = np.where(sel, e_past, e)
+        covered = covered | sel
+    return np.where(covered, e, np.nan), covered

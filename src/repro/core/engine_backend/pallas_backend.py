@@ -70,6 +70,7 @@ timeline_integral = _jb.timeline_integral
 poll_counts = _jb.poll_counts
 query_slots = _jb.query_slots
 err_moments = _jb.err_moments
+snapshot_energy_at = _jb.snapshot_energy_at
 
 
 def _interpret() -> bool:

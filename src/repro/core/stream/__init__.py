@@ -14,24 +14,41 @@ Layers (see ``docs/streaming.md``):
   the recent-sample ring buffer (no per-device Python objects);
 * :mod:`~repro.core.stream.estimators` — the online update-period
   estimator and the stacked §5 correction parameters;
+* :mod:`~repro.core.stream.ingest` — :class:`IngestCore`, the mutable
+  write side: slab folding through the backend kernels
+  (:mod:`repro.core.engine_backend`, one implementation per backend);
+* :mod:`~repro.core.stream.snapshot` — :class:`MonitorSnapshot`,
+  immutable epoch-tagged published views that serve every query;
 * :mod:`~repro.core.stream.monitor` — :class:`MonitorService`, the
-  ingestion + query API (hot kernels live in
-  :mod:`repro.core.engine_backend`, one implementation per backend);
+  one-object façade over ingest + snapshot publication;
+* :mod:`~repro.core.stream.schema` — the versioned (de)serialization
+  registries shared by checkpointing and ``nbytes()`` reporting;
+* :mod:`~repro.core.stream.checkpoint` — bitwise monitor
+  save/restore on the seed checkpoint layout;
 * :mod:`~repro.core.stream.replay` — drivers that replay any
   ``SensorBank`` / ``TimelineBank`` / ``FleetScenarioSpec`` fleet as a
   live stream, pinned against the offline audit on the same schedules.
+
+(The batched, cached query executor for serving lives one level up, in
+:mod:`repro.serve.monitor_service`.)
 """
+from repro.core.stream.checkpoint import restore_monitor, save_monitor
 from repro.core.stream.estimators import (OnlinePeriodEstimator,
                                           StreamCorrections,
                                           default_calibrations)
+from repro.core.stream.ingest import IngestCore
 from repro.core.stream.monitor import (FleetEnergy, IngestReport,
                                        MonitorService)
 from repro.core.stream.replay import StreamFleetResult, replay, stream_fleet
+from repro.core.stream.schema import SCHEMA_VERSION, SchemaError
+from repro.core.stream.snapshot import MonitorSnapshot
 from repro.core.stream.state import DeviceState, IngestBuffer
 
 __all__ = [
     "DeviceState", "IngestBuffer",
     "OnlinePeriodEstimator", "StreamCorrections", "default_calibrations",
-    "FleetEnergy", "IngestReport", "MonitorService",
+    "FleetEnergy", "IngestReport", "IngestCore", "MonitorService",
+    "MonitorSnapshot", "SCHEMA_VERSION", "SchemaError",
+    "save_monitor", "restore_monitor",
     "StreamFleetResult", "replay", "stream_fleet",
 ]

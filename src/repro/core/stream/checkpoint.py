@@ -1,0 +1,117 @@
+"""Checkpoint/restore for the streaming monitor — bitwise resume.
+
+Writing rides the seed :class:`repro.ckpt.checkpoint.CheckpointManager`
+(manifest + one ``.npy`` per leaf, temp-dir + atomic rename, retain-GC,
+optional async write thread), so monitor checkpoints share the layout,
+crash-safety and tooling of the training checkpoints::
+
+    <root>/step_<epoch>/
+      manifest.json                       — shapes/dtypes + monitor meta
+      monitor__state.energy_corr_j.npy    — one array per schema field
+      ...
+
+Reading deliberately does **not** go through ``CheckpointManager.
+restore``: that path round-trips leaves through ``jax.numpy.asarray``,
+which (without global x64) silently downcasts float64 → float32 and
+would break the bitwise-resume pin.  :func:`restore_monitor` reads the
+manifest + ``.npy`` files directly with numpy — byte-exact, and it works
+on jax-free hosts.
+
+The array set and its meaning are owned by
+:mod:`repro.core.stream.schema`; a monitor restored at any slab
+boundary and fed the remaining slabs answers every query bitwise
+identically to one that never stopped (pinned in
+``tests/test_serving.py`` on both backends, including across a process
+boundary).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.core.stream.schema import pack_monitor, unpack_monitor
+
+_TREE = "monitor"
+
+# one manager (and thus one async writer thread + retain-GC sequence)
+# per checkpoint root: repeated save_monitor calls must serialise, or
+# overlapping writers would garbage-collect each other out of order
+_managers: dict = {}
+
+
+def _manager(root: str, retain: int):
+    from repro.ckpt.checkpoint import CheckpointManager
+    key = os.path.abspath(root)
+    mgr = _managers.get(key)
+    if mgr is None or mgr.retain != retain:
+        if mgr is not None:
+            mgr.wait()
+        mgr = CheckpointManager(root, retain=retain)
+        _managers[key] = mgr
+    return mgr
+
+
+def save_monitor(monitor, root: str, *, step: Optional[int] = None,
+                 retain: int = 3, asynchronous: bool = False):
+    """Write one monitor checkpoint under ``root`` and return the
+    :class:`~repro.ckpt.checkpoint.CheckpointManager` used (call
+    ``.wait()`` after an ``asynchronous`` save before relying on it).
+
+    ``step`` defaults to the monitor's current ingest epoch, so
+    checkpoints taken at slab boundaries order themselves; the pack is
+    a full copy, so ingestion may continue immediately even while an
+    async write drains.  Saves to the same ``root`` share one manager,
+    so back-to-back ``asynchronous`` saves queue up instead of racing.
+    """
+    arrays, meta = pack_monitor(monitor)
+    if step is None:
+        step = int(meta["epoch"])
+    mgr = _manager(root, retain)
+    if asynchronous:
+        mgr.save_async(step, {_TREE: arrays}, extras=meta)
+    else:
+        mgr.save(step, {_TREE: arrays}, extras=meta)
+    return mgr
+
+
+def checkpoint_steps(root: str):
+    """Completed checkpoint steps under ``root``, ascending."""
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for d in os.listdir(root):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                out.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def restore_monitor(root: str, *, step: Optional[int] = None,
+                    backend: Optional[str] = None):
+    """Rebuild a :class:`~repro.core.stream.MonitorService` from the
+    checkpoint at ``step`` (default: latest) — bitwise, numpy-only.
+
+    ``backend`` overrides the checkpointed backend selection (the state
+    arrays are backend-agnostic, so a jax-written checkpoint restores
+    on a numpy-only host and vice versa).
+    """
+    steps = checkpoint_steps(root)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    if step is None:
+        step = steps[-1]
+    elif step not in steps:
+        raise FileNotFoundError(
+            f"no checkpoint step_{step} under {root}; have {steps}")
+    d = os.path.join(root, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    entries = manifest["trees"][_TREE]
+    arrays = {path: np.load(os.path.join(d, e["file"]))
+              for path, e in entries.items()}
+    return unpack_monitor(arrays, manifest["extras"], backend=backend)

@@ -50,7 +50,9 @@ class OnlinePeriodEstimator:
         return self.counts.shape[1]
 
     def nbytes(self) -> int:
-        return self.counts.nbytes + self.sums.nbytes
+        from repro.core.stream import schema
+        return schema.registry_nbytes(self, schema.PERIOD_FIELDS,
+                                      "OnlinePeriodEstimator")
 
     def record(self, dev: np.ndarray, durations: np.ndarray) -> None:
         """Fold one slab's completed runs (device ids + durations)."""

@@ -1,0 +1,402 @@
+"""The streaming monitor's ingest core: mutable state + the hot path.
+
+:class:`IngestCore` owns everything the monitor accumulates online —
+the :class:`~repro.core.stream.state.DeviceState` arrays, the recent-
+sample ring, the period histograms, the per-label reading moments — and
+the two slab-folding entry points (``ingest`` for arbitrary slabs,
+``ingest_grid`` for the rectangular clean-stream fast path).  It serves
+**no queries**: readers go through the immutable
+:class:`~repro.core.stream.snapshot.MonitorSnapshot` the façade
+publishes, so nothing ever reads this object's arrays concurrently with
+a scatter update.
+
+Every slab that lands bumps :attr:`epoch` — the monotonic counter the
+snapshot layer and the ``(query, epoch)`` result cache key on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.engine_backend import get_backend, resolve_backend
+from repro.core.fleet_engine import StreamingMoments
+from repro.core.stream.estimators import (OnlinePeriodEstimator,
+                                          StreamCorrections)
+from repro.core.stream.state import DeviceState, IngestBuffer
+
+_INTEGRATIONS = ("rectangle", "trapezoid")
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestReport:
+    """What one ``ingest`` call did with its slab."""
+
+    accepted: int
+    duplicates: int
+    late: int
+    invalid: int
+    n_devices: int      # distinct devices that contributed samples
+
+
+class IngestCore:
+    """Mutable online state + slab ingestion (see module doc).
+
+    Construction arguments are identical to
+    :class:`~repro.core.stream.monitor.MonitorService`, which documents
+    them — the façade forwards its ``__init__`` here verbatim.
+    """
+
+    def __init__(self, n_devices: int, *,
+                 corrections: Optional[StreamCorrections] = None,
+                 labels: Optional[np.ndarray] = None,
+                 integration: str = "rectangle",
+                 max_hold_s: Union[None, float, np.ndarray] = None,
+                 envelope_w: Optional[tuple] = None,
+                 ring_slots: int = 8,
+                 period_bins: int = 24,
+                 min_runs: int = 3,
+                 silent_after_s: Optional[float] = None,
+                 drift_tau_s: float = 30.0,
+                 drift_rel: float = 0.25,
+                 drift_abs_w: float = 5.0,
+                 backend: Optional[str] = None):
+        if n_devices < 1:
+            raise ValueError("need at least one device")
+        if integration not in _INTEGRATIONS:
+            raise ValueError(f"unknown integration '{integration}'; "
+                             f"known: {', '.join(_INTEGRATIONS)}")
+        n = int(n_devices)
+        self.n_devices = n
+        self.backend = resolve_backend(backend)
+        self._be = get_backend(self.backend)
+        self.corrections = (corrections if corrections is not None
+                            else StreamCorrections.identity(n))
+        if self.corrections.n_devices != n:
+            raise ValueError(
+                f"corrections cover {self.corrections.n_devices} devices, "
+                f"monitor has {n}")
+        if labels is None:
+            self.labels = np.full(n, "all", dtype=object)
+        else:
+            self.labels = np.asarray(labels, dtype=object)
+            if self.labels.shape != (n,):
+                raise ValueError(f"labels must be [{n}], "
+                                 f"got {self.labels.shape}")
+        # integer label codes keep object-array work off the hot path
+        names, codes = np.unique(self.labels.astype(str),
+                                 return_inverse=True)
+        self._label_names = [str(x) for x in names]
+        self._label_codes = codes.astype(np.int64)
+        self.trapezoid = (integration == "trapezoid")
+        if max_hold_s is None:
+            self._max_hold = np.full(n, np.inf)
+        else:
+            self._max_hold = np.broadcast_to(
+                np.asarray(max_hold_s, dtype=np.float64), (n,)).copy()
+            if np.any(self._max_hold <= 0.0):
+                raise ValueError("max_hold_s must be positive")
+        if envelope_w is None:
+            self._env_lo = np.full(n, -np.inf)
+            self._env_hi = np.full(n, np.inf)
+        else:
+            lo, hi = envelope_w
+            self._env_lo = np.broadcast_to(
+                np.asarray(lo, dtype=np.float64), (n,)).copy()
+            self._env_hi = np.broadcast_to(
+                np.asarray(hi, dtype=np.float64), (n,)).copy()
+
+        self.state = DeviceState.zeros(n)
+        self.ring = IngestBuffer(n, ring_slots)
+        self.periods = OnlinePeriodEstimator(n, n_bins=period_bins,
+                                             min_runs=min_runs)
+        # windows disabled until registered: [+inf, -inf] selects nothing
+        self._win_a = np.full(n, np.inf)
+        self._win_b = np.full(n, -np.inf)
+
+        self.silent_after_s = silent_after_s
+        self.drift_tau_s = float(drift_tau_s)
+        self.drift_rel = float(drift_rel)
+        self.drift_abs_w = float(drift_abs_w)
+        self._moments: Dict[str, StreamingMoments] = {}
+        self._n_invalid = 0
+        # bumped on every slab that mutates state; snapshots and the
+        # (query, epoch) result cache key on it
+        self.epoch = 0
+
+    # -- configuration ----------------------------------------------------
+    def set_windows(self, a, b) -> None:
+        """Register per-device measurement windows ``[a_i, b_i]`` (the §5
+        execution windows — e.g. each device's workload span).  Window
+        energy accumulates sample-by-sample, so windows must be set
+        before the first sample arrives."""
+        if int(np.sum(self.state.n_samples)) > 0:
+            raise RuntimeError("windows must be registered before the "
+                               "first ingest (accumulation is not "
+                               "retroactive)")
+        n = self.n_devices
+        a = np.broadcast_to(np.asarray(a, dtype=np.float64), (n,)).copy()
+        b = np.broadcast_to(np.asarray(b, dtype=np.float64), (n,)).copy()
+        self._win_a, self._win_b = a, b
+        self.epoch += 1
+
+    def nbytes(self) -> int:
+        """Approximate resident size of the monitor state (the memory
+        that scales with fleet size) — summed through the same schema
+        registries checkpointing serializes, so a field added to the
+        state without a schema update fails here first."""
+        return (self.state.nbytes() + self.ring.nbytes()
+                + self.periods.nbytes())
+
+    # -- ingestion --------------------------------------------------------
+    def ingest(self, dev, t, v) -> IngestReport:
+        """Fold one slab of raw poll samples into the online state.
+
+        ``dev`` [K] int device ids, ``t`` [K] sample times, ``v`` [K]
+        raw readings — any order, duplicates and late samples tolerated
+        (dropped and counted).  Returns an :class:`IngestReport`.
+        """
+        dev = np.asarray(dev, dtype=np.int64).ravel()
+        t = np.asarray(t, dtype=np.float64).ravel()
+        v = np.asarray(v, dtype=np.float64).ravel()
+        if not (dev.shape == t.shape == v.shape):
+            raise ValueError(f"shape mismatch: dev {dev.shape}, "
+                             f"t {t.shape}, v {v.shape}")
+        if dev.size and (dev.min() < 0 or dev.max() >= self.n_devices):
+            raise ValueError("device id out of range")
+        k_in = dev.size
+        if k_in == 0:
+            return IngestReport(0, 0, 0, 0, 0)
+        # even an all-dropped slab mutates counters: publish fresh
+        self.epoch += 1
+
+        ok = np.isfinite(t) & np.isfinite(v)
+        n_invalid = int(k_in - ok.sum())
+        if n_invalid:
+            self._n_invalid += n_invalid
+            dev, t, v = dev[ok], t[ok], v[ok]
+
+        order = np.lexsort((t, dev))
+        dev, t, v = dev[order], t[order], v[order]
+
+        # duplicates: same (device, t) — keep the first arrival
+        dup = np.zeros(len(dev), dtype=bool)
+        dup[1:] = (dev[1:] == dev[:-1]) & (t[1:] == t[:-1])
+        st = self.state
+        # vs stored state: strictly older samples arrive late, a repeat
+        # of the newest timestamp is a duplicate
+        late = ~dup & st.has[dev] & (t < st.last_t[dev])
+        dup_state = ~dup & st.has[dev] & (t == st.last_t[dev])
+        n_dup = int(np.sum(dup | dup_state))
+        n_late = int(np.sum(late))
+        if n_dup:
+            np.add.at(st.n_dup, dev[dup | dup_state], 1)
+        if n_late:
+            np.add.at(st.n_late, dev[late], 1)
+        keep = ~(dup | dup_state | late)
+        dev, t, v = dev[keep], t[keep], v[keep]
+        k = dev.size
+        if k == 0:
+            return IngestReport(0, n_dup, n_late, n_invalid, 0)
+
+        v = v - self.corrections.baseline_w[dev]
+
+        # compact to per-slab groups (devices sorted => contiguous)
+        first = np.empty(k, dtype=bool)
+        first[0] = True
+        first[1:] = dev[1:] != dev[:-1]
+        start_idx = np.flatnonzero(first)
+        end_idx = np.concatenate([start_idx[1:] - 1, [k - 1]])
+        u_dev = dev[start_idx]
+        seg = np.cumsum(first) - 1
+
+        had = st.has[u_dev]
+        c = self.corrections
+        run_t_in = np.where(had, st.run_t[u_dev], t[start_idx])
+        (new_t, new_v, new_run_t, new_nchg, counts, d_e, d_ec, d_w, d_wc,
+         sum_vc, n_out, cum_e, cum_ec, vc, run_dur, run_rec) = \
+            self._be.stream_ingest(
+                t, v, seg, first, start_idx, end_idx,
+                st.last_t[u_dev], st.last_v[u_dev], had,
+                run_t_in, st.n_changes[u_dev],
+                c.gain[u_dev], c.offset_w[u_dev], c.time_shift_s[u_dev],
+                self._win_a[u_dev], self._win_b[u_dev],
+                self._max_hold[u_dev], self._env_lo[u_dev],
+                self._env_hi[u_dev], self.trapezoid)
+
+        # ring snapshots see running totals *before* this slab is folded
+        if self.ring.slots:
+            ordinal = np.arange(k) - start_idx[seg]
+            self.ring.write(dev, ordinal, counts[seg], t, v,
+                            st.energy_j[u_dev][seg] + cum_e,
+                            st.energy_corr_j[u_dev][seg] + cum_ec,
+                            u_dev, counts)
+        else:
+            self.ring.n_written[u_dev] += counts
+
+        old_last_t = st.last_t[u_dev]
+        st.first_t[u_dev] = np.where(had, st.first_t[u_dev], t[start_idx])
+        st.last_t[u_dev] = new_t
+        st.last_v[u_dev] = new_v
+        st.has[u_dev] = True
+        st.n_samples[u_dev] += counts
+        st.energy_j[u_dev] += d_e
+        st.energy_corr_j[u_dev] += d_ec
+        st.win_j[u_dev] += d_w
+        st.win_corr_j[u_dev] += d_wc
+        st.run_t[u_dev] = new_run_t
+        st.n_changes[u_dev] = new_nchg
+        st.n_out[u_dev] += n_out
+
+        # drift EWMA over wall time, one slab-mean step per device
+        mean_vc = sum_vc / counts
+        alpha = np.exp(-np.maximum(new_t - old_last_t, 0.0)
+                       / self.drift_tau_s)
+        st.ewma_w[u_dev] = np.where(
+            had, alpha * st.ewma_w[u_dev] + (1.0 - alpha) * mean_vc,
+            mean_vc)
+
+        rec = np.asarray(run_rec, dtype=bool)
+        if np.any(rec):
+            self.periods.record(dev[rec], np.asarray(run_dur)[rec])
+
+        # per-label corrected-reading moments (Chan–Welford): one
+        # bincount pass over the slab, O(K + labels) — no per-label
+        # masks, so per-device labels stay cheap at fleet scale
+        codes = self._label_codes[dev]
+        nl = len(self._label_names)
+        cnt = np.bincount(codes, minlength=nl)
+        s1 = np.bincount(codes, weights=vc, minlength=nl)
+        s2 = np.bincount(codes, weights=vc * vc, minlength=nl)
+        av = np.abs(vc)
+        sa = np.bincount(codes, weights=av, minlength=nl)
+        mx = np.zeros(nl)
+        np.maximum.at(mx, codes, av)
+        for ci in np.flatnonzero(cnt):
+            nb = int(cnt[ci])
+            mean = s1[ci] / nb
+            m2 = max(float(s2[ci] - nb * mean * mean), 0.0)
+            self._moments.setdefault(
+                self._label_names[ci], StreamingMoments()).merge(
+                    nb, float(mean), m2, float(sa[ci] / nb),
+                    float(mx[ci]))
+
+        return IngestReport(k, n_dup, n_late, n_invalid, len(u_dev))
+
+    def ingest_grid(self, dev, ts, vals) -> IngestReport:
+        """Fold one *rectangular* slab: ``dev`` [D] distinct ascending
+        device ids, ``ts`` [M] strictly-increasing sample times shared by
+        every device, ``vals`` [D, M] raw readings.
+
+        This is the clean-stream fast path: no sorting, no per-sample
+        scatter — the backend's ``stream_ingest_grid`` kernel does
+        row-wise cumsums and reductions over the [D, M] slab directly.
+        Slabs that violate the rectangular contract (unsorted ids or
+        times, non-finite readings, samples at/behind a device's newest
+        accepted sample) fall back to the general :meth:`ingest` path
+        with identical semantics.
+        """
+        dev = np.asarray(dev, dtype=np.int64).ravel()
+        ts = np.asarray(ts, dtype=np.float64).ravel()
+        vals = np.asarray(vals, dtype=np.float64)
+        d, m = dev.size, ts.size
+        if vals.shape != (d, m):
+            raise ValueError(f"vals must be [{d}, {m}], "
+                             f"got {vals.shape}")
+        if d == 0 or m == 0:
+            return IngestReport(0, 0, 0, 0, 0)
+        if dev.min() < 0 or dev.max() >= self.n_devices:
+            raise ValueError("device id out of range")
+
+        st = self.state
+        clean = (np.all(np.diff(dev) > 0)
+                 and np.all(np.diff(ts) > 0)
+                 and bool(np.all(np.isfinite(ts)))
+                 and bool(np.all(np.isfinite(vals)))
+                 and not np.any(st.has[dev] & (ts[0] <= st.last_t[dev])))
+        if not clean:
+            return self.ingest(np.repeat(dev, m), np.tile(ts, d),
+                               vals.ravel())
+        self.epoch += 1
+
+        c = self.corrections
+        v = vals - c.baseline_w[dev][:, None]
+        had = st.has[dev]
+        run_t_in = np.where(had, st.run_t[dev], ts[0])
+        (new_v, new_run_t, new_nchg, d_e, d_ec, d_w, d_wc,
+         sum_vc, sum_vc2, sum_abs_vc, max_abs_vc, n_out,
+         cum_e, cum_ec, run_dur, run_rec) = \
+            self._be.stream_ingest_grid(
+                ts, v, st.last_t[dev], st.last_v[dev], had, run_t_in,
+                st.n_changes[dev], c.gain[dev], c.offset_w[dev],
+                c.time_shift_s[dev], self._win_a[dev], self._win_b[dev],
+                self._max_hold[dev], self._env_lo[dev],
+                self._env_hi[dev], self.trapezoid)
+
+        # ring snapshots see running totals *before* this slab is folded
+        if self.ring.slots:
+            self.ring.write_grid(dev, ts, v,
+                                 st.energy_j[dev][:, None] + cum_e,
+                                 st.energy_corr_j[dev][:, None] + cum_ec)
+        else:
+            self.ring.n_written[dev] += m
+
+        old_last_t = st.last_t[dev]
+        st.first_t[dev] = np.where(had, st.first_t[dev], ts[0])
+        st.last_t[dev] = ts[-1]
+        st.last_v[dev] = new_v
+        st.has[dev] = True
+        st.n_samples[dev] += m
+        st.energy_j[dev] += d_e
+        st.energy_corr_j[dev] += d_ec
+        st.win_j[dev] += d_w
+        st.win_corr_j[dev] += d_wc
+        st.run_t[dev] = new_run_t
+        st.n_changes[dev] = new_nchg
+        st.n_out[dev] += n_out
+
+        mean_vc = sum_vc / m
+        alpha = np.exp(-np.maximum(ts[-1] - old_last_t, 0.0)
+                       / self.drift_tau_s)
+        st.ewma_w[dev] = np.where(
+            had, alpha * st.ewma_w[dev] + (1.0 - alpha) * mean_vc,
+            mean_vc)
+
+        rec = np.asarray(run_rec, dtype=bool)
+        if np.any(rec):
+            dgrid = np.broadcast_to(dev[:, None], rec.shape)
+            self.periods.record(dgrid[rec], np.asarray(run_dur)[rec])
+
+        # per-label moments straight from the kernel's per-device
+        # reductions — O(D + labels) instead of O(D·M)
+        codes = self._label_codes[dev]
+        nl = len(self._label_names)
+        cnt = m * np.bincount(codes, minlength=nl)
+        s1 = np.bincount(codes, weights=sum_vc, minlength=nl)
+        s2 = np.bincount(codes, weights=sum_vc2, minlength=nl)
+        sa = np.bincount(codes, weights=sum_abs_vc, minlength=nl)
+        mx = np.zeros(nl)
+        np.maximum.at(mx, codes, max_abs_vc)
+        for ci in np.flatnonzero(cnt):
+            nb = int(cnt[ci])
+            mean = s1[ci] / nb
+            m2 = max(float(s2[ci] - nb * mean * mean), 0.0)
+            self._moments.setdefault(
+                self._label_names[ci], StreamingMoments()).merge(
+                    nb, float(mean), m2, float(sa[ci] / nb),
+                    float(mx[ci]))
+
+        return IngestReport(d * m, 0, 0, 0, d)
+
+    # -- accounting -------------------------------------------------------
+    @property
+    def counters(self) -> Dict[str, int]:
+        st = self.state
+        return {
+            "accepted": int(np.sum(st.n_samples)),
+            "duplicates": int(np.sum(st.n_dup)),
+            "late": int(np.sum(st.n_late)),
+            "invalid": self._n_invalid,
+            "devices_reporting": int(np.sum(st.has)),
+        }

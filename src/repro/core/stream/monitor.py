@@ -1,22 +1,25 @@
-"""The streaming fleet monitor: online ingestion, correction, queries.
+"""The streaming fleet monitor façade: ingest core + snapshot serving.
 
-:class:`MonitorService` consumes raw per-device poll samples
-incrementally — array slabs of ``(device, t, reading)`` per tick, in any
-order, with duplicates and gaps — and serves corrected energy queries
-while the fleet is still running.  Everything the offline §5 pipeline
-does *after* a capture finishes happens here *as samples arrive*:
+:class:`MonitorService` keeps the one-object API the rest of the repo
+(and the parity pins in ``tests/test_stream.py``) program against, but
+is now a thin façade over the layered stack:
 
-* rectangle (or trapezoid) integration of the polled series, through the
-  same backend kernel the offline protocol integrates with
-  (:func:`~repro.core.engine_backend.numpy_backend.step_integrate` /
-  ``stream_ingest``);
-* the calibrated gain/offset inversion and the boxcar-window
-  re-synchronisation shift (:class:`.estimators.StreamCorrections`);
-* the update-period estimate, converging online as complete runs of
-  identical readings accumulate
-  (:class:`.estimators.OnlinePeriodEstimator`);
-* per-label reading statistics via the fleet engine's Chan–Welford
-  :class:`~repro.core.fleet_engine.StreamingMoments`.
+* :class:`~repro.core.stream.ingest.IngestCore` — the mutable state and
+  the slab-folding hot path (correction kernels, ring writes, period
+  recording, per-label moments).  ``ingest``/``ingest_grid`` delegate
+  straight through; the hot path gained no indirection beyond one
+  attribute hop.
+* :class:`~repro.core.stream.snapshot.MonitorSnapshot` — immutable,
+  epoch-tagged copy-on-write views.  Every query method here resolves
+  ``self.snapshot()`` — published lazily, at most once per ingest epoch
+  — and delegates, so readers never touch mutable ingest state and a
+  query's answer is reproducible for as long as its snapshot is held.
+* :class:`~repro.serve.monitor_service.MonitorQueryService` — the
+  batched query executor for high-traffic serving (thousands of
+  concurrent queries per snapshot as one vectorized op, LRU-cached by
+  ``(query, epoch)``).
+* :mod:`~repro.core.stream.checkpoint` — save/restore of the full
+  online state (bitwise resume at any slab boundary).
 
 Parity contract (pinned by ``tests/test_stream.py``): replaying a
 fleet's poll series through ``ingest`` yields — on both execution
@@ -28,52 +31,15 @@ See ``docs/streaming.md``.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Union
 
 import numpy as np
 
-from repro.core.engine_backend import get_backend, resolve_backend
-from repro.core.engine_backend.numpy_backend import searchsorted_rows
-from repro.core.fleet_engine import StreamingMoments
-from repro.core.stream.estimators import (OnlinePeriodEstimator,
-                                          StreamCorrections)
-from repro.core.stream.state import DeviceState, IngestBuffer
+from repro.core.stream.estimators import StreamCorrections
+from repro.core.stream.ingest import IngestCore, IngestReport
+from repro.core.stream.snapshot import FleetEnergy, MonitorSnapshot
 
-_INTEGRATIONS = ("rectangle", "trapezoid")
-
-
-@dataclasses.dataclass(frozen=True)
-class IngestReport:
-    """What one ``ingest`` call did with its slab."""
-
-    accepted: int
-    duplicates: int
-    late: int
-    invalid: int
-    n_devices: int      # distinct devices that contributed samples
-
-
-@dataclasses.dataclass(frozen=True)
-class FleetEnergy:
-    """A fleet-energy query answer with uncertainty bounds.
-
-    ``per_device_j`` is nan where ``covered`` is False (the query instant
-    predates the device's ring-buffer coverage); totals and sigmas are
-    over covered devices only.  Uncertainty follows the telemetry
-    model: per-device sigma is the shunt tolerance of the energy
-    (calibrated devices use the calibrated floor), aggregated both as
-    independent (1/√N) and worst-case (correlated lot) bounds.
-    """
-
-    t: Optional[float]
-    corrected: bool
-    per_device_j: np.ndarray
-    covered: np.ndarray
-    total_j: float
-    n_reporting: int
-    sigma_independent_j: float
-    sigma_worstcase_j: float
+__all__ = ["FleetEnergy", "IngestReport", "MonitorService"]
 
 
 class MonitorService:
@@ -95,6 +61,11 @@ class MonitorService:
     are dropped and counted; devices simply absent from a slab keep
     their last reading (rectangle extrapolation, optionally capped by
     ``max_hold_s`` for gap-aware integration).
+
+    Queries are answered from the current epoch's immutable
+    :class:`~repro.core.stream.snapshot.MonitorSnapshot` (see
+    :meth:`snapshot`); hold one to pin a consistent view across several
+    queries while ingestion continues.
     """
 
     def __init__(self, n_devices: int, *,
@@ -111,526 +82,137 @@ class MonitorService:
                  drift_rel: float = 0.25,
                  drift_abs_w: float = 5.0,
                  backend: Optional[str] = None):
-        if n_devices < 1:
-            raise ValueError("need at least one device")
-        if integration not in _INTEGRATIONS:
-            raise ValueError(f"unknown integration '{integration}'; "
-                             f"known: {', '.join(_INTEGRATIONS)}")
-        n = int(n_devices)
-        self.n_devices = n
-        self.backend = resolve_backend(backend)
-        self._be = get_backend(self.backend)
-        self.corrections = (corrections if corrections is not None
-                            else StreamCorrections.identity(n))
-        if self.corrections.n_devices != n:
-            raise ValueError(
-                f"corrections cover {self.corrections.n_devices} devices, "
-                f"monitor has {n}")
-        if labels is None:
-            self.labels = np.full(n, "all", dtype=object)
-        else:
-            self.labels = np.asarray(labels, dtype=object)
-            if self.labels.shape != (n,):
-                raise ValueError(f"labels must be [{n}], "
-                                 f"got {self.labels.shape}")
-        # integer label codes keep object-array work off the hot path
-        names, codes = np.unique(self.labels.astype(str),
-                                 return_inverse=True)
-        self._label_names = [str(x) for x in names]
-        self._label_codes = codes.astype(np.int64)
-        self.trapezoid = (integration == "trapezoid")
-        if max_hold_s is None:
-            self._max_hold = np.full(n, np.inf)
-        else:
-            self._max_hold = np.broadcast_to(
-                np.asarray(max_hold_s, dtype=np.float64), (n,)).copy()
-            if np.any(self._max_hold <= 0.0):
-                raise ValueError("max_hold_s must be positive")
-        if envelope_w is None:
-            self._env_lo = np.full(n, -np.inf)
-            self._env_hi = np.full(n, np.inf)
-        else:
-            lo, hi = envelope_w
-            self._env_lo = np.broadcast_to(
-                np.asarray(lo, dtype=np.float64), (n,)).copy()
-            self._env_hi = np.broadcast_to(
-                np.asarray(hi, dtype=np.float64), (n,)).copy()
+        self._core = IngestCore(
+            n_devices, corrections=corrections, labels=labels,
+            integration=integration, max_hold_s=max_hold_s,
+            envelope_w=envelope_w, ring_slots=ring_slots,
+            period_bins=period_bins, min_runs=min_runs,
+            silent_after_s=silent_after_s, drift_tau_s=drift_tau_s,
+            drift_rel=drift_rel, drift_abs_w=drift_abs_w, backend=backend)
+        self._snap: Optional[MonitorSnapshot] = None
 
-        self.state = DeviceState.zeros(n)
-        self.ring = IngestBuffer(n, ring_slots)
-        self.periods = OnlinePeriodEstimator(n, n_bins=period_bins,
-                                             min_runs=min_runs)
-        # windows disabled until registered: [+inf, -inf] selects nothing
-        self._win_a = np.full(n, np.inf)
-        self._win_b = np.full(n, -np.inf)
+    # -- layer access ------------------------------------------------------
+    @property
+    def core(self) -> IngestCore:
+        """The mutable ingest core (write side of the split)."""
+        return self._core
 
-        self.silent_after_s = silent_after_s
-        self.drift_tau_s = float(drift_tau_s)
-        self.drift_rel = float(drift_rel)
-        self.drift_abs_w = float(drift_abs_w)
-        self._moments: Dict[str, StreamingMoments] = {}
-        self._n_invalid = 0
+    def snapshot(self) -> MonitorSnapshot:
+        """The current epoch's immutable published view, created lazily
+        and reused until the next slab lands — copy-on-write: holding an
+        old snapshot while ingestion continues is free and its answers
+        stay bitwise stable."""
+        if self._snap is None or self._snap.epoch != self._core.epoch:
+            self._snap = MonitorSnapshot.publish(self._core)
+        return self._snap
 
-    # -- configuration ----------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        """Monotonic ingest epoch (bumps on every slab that lands)."""
+        return self._core.epoch
+
+    # -- pass-through state (the pre-split attribute surface) --------------
+    @property
+    def n_devices(self) -> int:
+        return self._core.n_devices
+
+    @property
+    def backend(self):
+        return self._core.backend
+
+    @property
+    def corrections(self) -> StreamCorrections:
+        return self._core.corrections
+
+    @property
+    def labels(self) -> np.ndarray:
+        return self._core.labels
+
+    @property
+    def trapezoid(self) -> bool:
+        return self._core.trapezoid
+
+    @property
+    def silent_after_s(self):
+        return self._core.silent_after_s
+
+    @property
+    def state(self):
+        """Live (mutable) per-device accumulators — ingest-side state;
+        readers wanting a stable view should use :meth:`snapshot`."""
+        return self._core.state
+
+    @property
+    def ring(self):
+        return self._core.ring
+
+    @property
+    def periods(self):
+        return self._core.periods
+
+    # -- configuration -----------------------------------------------------
     def set_windows(self, a, b) -> None:
-        """Register per-device measurement windows ``[a_i, b_i]`` (the §5
-        execution windows — e.g. each device's workload span).  Window
-        energy accumulates sample-by-sample, so windows must be set
-        before the first sample arrives."""
-        if int(np.sum(self.state.n_samples)) > 0:
-            raise RuntimeError("windows must be registered before the "
-                               "first ingest (accumulation is not "
-                               "retroactive)")
-        n = self.n_devices
-        a = np.broadcast_to(np.asarray(a, dtype=np.float64), (n,)).copy()
-        b = np.broadcast_to(np.asarray(b, dtype=np.float64), (n,)).copy()
-        self._win_a, self._win_b = a, b
+        self._core.set_windows(a, b)
+
+    set_windows.__doc__ = IngestCore.set_windows.__doc__
 
     def nbytes(self) -> int:
-        """Approximate resident size of the monitor state (the memory
-        that scales with fleet size)."""
-        return (self.state.nbytes() + self.ring.nbytes()
-                + self.periods.nbytes())
+        return self._core.nbytes()
 
-    # -- ingestion --------------------------------------------------------
+    nbytes.__doc__ = IngestCore.nbytes.__doc__
+
+    # -- ingestion ---------------------------------------------------------
     def ingest(self, dev, t, v) -> IngestReport:
-        """Fold one slab of raw poll samples into the online state.
+        return self._core.ingest(dev, t, v)
 
-        ``dev`` [K] int device ids, ``t`` [K] sample times, ``v`` [K]
-        raw readings — any order, duplicates and late samples tolerated
-        (dropped and counted).  Returns an :class:`IngestReport`.
-        """
-        dev = np.asarray(dev, dtype=np.int64).ravel()
-        t = np.asarray(t, dtype=np.float64).ravel()
-        v = np.asarray(v, dtype=np.float64).ravel()
-        if not (dev.shape == t.shape == v.shape):
-            raise ValueError(f"shape mismatch: dev {dev.shape}, "
-                             f"t {t.shape}, v {v.shape}")
-        if dev.size and (dev.min() < 0 or dev.max() >= self.n_devices):
-            raise ValueError("device id out of range")
-        k_in = dev.size
-        if k_in == 0:
-            return IngestReport(0, 0, 0, 0, 0)
-
-        ok = np.isfinite(t) & np.isfinite(v)
-        n_invalid = int(k_in - ok.sum())
-        if n_invalid:
-            self._n_invalid += n_invalid
-            dev, t, v = dev[ok], t[ok], v[ok]
-
-        order = np.lexsort((t, dev))
-        dev, t, v = dev[order], t[order], v[order]
-
-        # duplicates: same (device, t) — keep the first arrival
-        dup = np.zeros(len(dev), dtype=bool)
-        dup[1:] = (dev[1:] == dev[:-1]) & (t[1:] == t[:-1])
-        st = self.state
-        # vs stored state: strictly older samples arrive late, a repeat
-        # of the newest timestamp is a duplicate
-        late = ~dup & st.has[dev] & (t < st.last_t[dev])
-        dup_state = ~dup & st.has[dev] & (t == st.last_t[dev])
-        n_dup = int(np.sum(dup | dup_state))
-        n_late = int(np.sum(late))
-        if n_dup:
-            np.add.at(st.n_dup, dev[dup | dup_state], 1)
-        if n_late:
-            np.add.at(st.n_late, dev[late], 1)
-        keep = ~(dup | dup_state | late)
-        dev, t, v = dev[keep], t[keep], v[keep]
-        k = dev.size
-        if k == 0:
-            return IngestReport(0, n_dup, n_late, n_invalid, 0)
-
-        v = v - self.corrections.baseline_w[dev]
-
-        # compact to per-slab groups (devices sorted => contiguous)
-        first = np.empty(k, dtype=bool)
-        first[0] = True
-        first[1:] = dev[1:] != dev[:-1]
-        start_idx = np.flatnonzero(first)
-        end_idx = np.concatenate([start_idx[1:] - 1, [k - 1]])
-        u_dev = dev[start_idx]
-        seg = np.cumsum(first) - 1
-
-        had = st.has[u_dev]
-        c = self.corrections
-        run_t_in = np.where(had, st.run_t[u_dev], t[start_idx])
-        (new_t, new_v, new_run_t, new_nchg, counts, d_e, d_ec, d_w, d_wc,
-         sum_vc, n_out, cum_e, cum_ec, vc, run_dur, run_rec) = \
-            self._be.stream_ingest(
-                t, v, seg, first, start_idx, end_idx,
-                st.last_t[u_dev], st.last_v[u_dev], had,
-                run_t_in, st.n_changes[u_dev],
-                c.gain[u_dev], c.offset_w[u_dev], c.time_shift_s[u_dev],
-                self._win_a[u_dev], self._win_b[u_dev],
-                self._max_hold[u_dev], self._env_lo[u_dev],
-                self._env_hi[u_dev], self.trapezoid)
-
-        # ring snapshots see running totals *before* this slab is folded
-        if self.ring.slots:
-            ordinal = np.arange(k) - start_idx[seg]
-            self.ring.write(dev, ordinal, counts[seg], t, v,
-                            st.energy_j[u_dev][seg] + cum_e,
-                            st.energy_corr_j[u_dev][seg] + cum_ec,
-                            u_dev, counts)
-        else:
-            self.ring.n_written[u_dev] += counts
-
-        old_last_t = st.last_t[u_dev]
-        st.first_t[u_dev] = np.where(had, st.first_t[u_dev], t[start_idx])
-        st.last_t[u_dev] = new_t
-        st.last_v[u_dev] = new_v
-        st.has[u_dev] = True
-        st.n_samples[u_dev] += counts
-        st.energy_j[u_dev] += d_e
-        st.energy_corr_j[u_dev] += d_ec
-        st.win_j[u_dev] += d_w
-        st.win_corr_j[u_dev] += d_wc
-        st.run_t[u_dev] = new_run_t
-        st.n_changes[u_dev] = new_nchg
-        st.n_out[u_dev] += n_out
-
-        # drift EWMA over wall time, one slab-mean step per device
-        mean_vc = sum_vc / counts
-        alpha = np.exp(-np.maximum(new_t - old_last_t, 0.0)
-                       / self.drift_tau_s)
-        st.ewma_w[u_dev] = np.where(
-            had, alpha * st.ewma_w[u_dev] + (1.0 - alpha) * mean_vc,
-            mean_vc)
-
-        rec = np.asarray(run_rec, dtype=bool)
-        if np.any(rec):
-            self.periods.record(dev[rec], np.asarray(run_dur)[rec])
-
-        # per-label corrected-reading moments (Chan–Welford): one
-        # bincount pass over the slab, O(K + labels) — no per-label
-        # masks, so per-device labels stay cheap at fleet scale
-        codes = self._label_codes[dev]
-        nl = len(self._label_names)
-        cnt = np.bincount(codes, minlength=nl)
-        s1 = np.bincount(codes, weights=vc, minlength=nl)
-        s2 = np.bincount(codes, weights=vc * vc, minlength=nl)
-        av = np.abs(vc)
-        sa = np.bincount(codes, weights=av, minlength=nl)
-        mx = np.zeros(nl)
-        np.maximum.at(mx, codes, av)
-        for ci in np.flatnonzero(cnt):
-            nb = int(cnt[ci])
-            mean = s1[ci] / nb
-            m2 = max(float(s2[ci] - nb * mean * mean), 0.0)
-            self._moments.setdefault(
-                self._label_names[ci], StreamingMoments()).merge(
-                    nb, float(mean), m2, float(sa[ci] / nb),
-                    float(mx[ci]))
-
-        return IngestReport(k, n_dup, n_late, n_invalid, len(u_dev))
+    ingest.__doc__ = IngestCore.ingest.__doc__
 
     def ingest_grid(self, dev, ts, vals) -> IngestReport:
-        """Fold one *rectangular* slab: ``dev`` [D] distinct ascending
-        device ids, ``ts`` [M] strictly-increasing sample times shared by
-        every device, ``vals`` [D, M] raw readings.
+        return self._core.ingest_grid(dev, ts, vals)
 
-        This is the clean-stream fast path: no sorting, no per-sample
-        scatter — the backend's ``stream_ingest_grid`` kernel does
-        row-wise cumsums and reductions over the [D, M] slab directly.
-        Slabs that violate the rectangular contract (unsorted ids or
-        times, non-finite readings, samples at/behind a device's newest
-        accepted sample) fall back to the general :meth:`ingest` path
-        with identical semantics.
-        """
-        dev = np.asarray(dev, dtype=np.int64).ravel()
-        ts = np.asarray(ts, dtype=np.float64).ravel()
-        vals = np.asarray(vals, dtype=np.float64)
-        d, m = dev.size, ts.size
-        if vals.shape != (d, m):
-            raise ValueError(f"vals must be [{d}, {m}], "
-                             f"got {vals.shape}")
-        if d == 0 or m == 0:
-            return IngestReport(0, 0, 0, 0, 0)
-        if dev.min() < 0 or dev.max() >= self.n_devices:
-            raise ValueError("device id out of range")
+    ingest_grid.__doc__ = IngestCore.ingest_grid.__doc__
 
-        st = self.state
-        clean = (np.all(np.diff(dev) > 0)
-                 and np.all(np.diff(ts) > 0)
-                 and bool(np.all(np.isfinite(ts)))
-                 and bool(np.all(np.isfinite(vals)))
-                 and not np.any(st.has[dev] & (ts[0] <= st.last_t[dev])))
-        if not clean:
-            return self.ingest(np.repeat(dev, m), np.tile(ts, d),
-                               vals.ravel())
-
-        c = self.corrections
-        v = vals - c.baseline_w[dev][:, None]
-        had = st.has[dev]
-        run_t_in = np.where(had, st.run_t[dev], ts[0])
-        (new_v, new_run_t, new_nchg, d_e, d_ec, d_w, d_wc,
-         sum_vc, sum_vc2, sum_abs_vc, max_abs_vc, n_out,
-         cum_e, cum_ec, run_dur, run_rec) = \
-            self._be.stream_ingest_grid(
-                ts, v, st.last_t[dev], st.last_v[dev], had, run_t_in,
-                st.n_changes[dev], c.gain[dev], c.offset_w[dev],
-                c.time_shift_s[dev], self._win_a[dev], self._win_b[dev],
-                self._max_hold[dev], self._env_lo[dev],
-                self._env_hi[dev], self.trapezoid)
-
-        # ring snapshots see running totals *before* this slab is folded
-        if self.ring.slots:
-            self.ring.write_grid(dev, ts, v,
-                                 st.energy_j[dev][:, None] + cum_e,
-                                 st.energy_corr_j[dev][:, None] + cum_ec)
-        else:
-            self.ring.n_written[dev] += m
-
-        old_last_t = st.last_t[dev]
-        st.first_t[dev] = np.where(had, st.first_t[dev], ts[0])
-        st.last_t[dev] = ts[-1]
-        st.last_v[dev] = new_v
-        st.has[dev] = True
-        st.n_samples[dev] += m
-        st.energy_j[dev] += d_e
-        st.energy_corr_j[dev] += d_ec
-        st.win_j[dev] += d_w
-        st.win_corr_j[dev] += d_wc
-        st.run_t[dev] = new_run_t
-        st.n_changes[dev] = new_nchg
-        st.n_out[dev] += n_out
-
-        mean_vc = sum_vc / m
-        alpha = np.exp(-np.maximum(ts[-1] - old_last_t, 0.0)
-                       / self.drift_tau_s)
-        st.ewma_w[dev] = np.where(
-            had, alpha * st.ewma_w[dev] + (1.0 - alpha) * mean_vc,
-            mean_vc)
-
-        rec = np.asarray(run_rec, dtype=bool)
-        if np.any(rec):
-            dgrid = np.broadcast_to(dev[:, None], rec.shape)
-            self.periods.record(dgrid[rec], np.asarray(run_dur)[rec])
-
-        # per-label moments straight from the kernel's per-device
-        # reductions — O(D + labels) instead of O(D·M)
-        codes = self._label_codes[dev]
-        nl = len(self._label_names)
-        cnt = m * np.bincount(codes, minlength=nl)
-        s1 = np.bincount(codes, weights=sum_vc, minlength=nl)
-        s2 = np.bincount(codes, weights=sum_vc2, minlength=nl)
-        sa = np.bincount(codes, weights=sum_abs_vc, minlength=nl)
-        mx = np.zeros(nl)
-        np.maximum.at(mx, codes, max_abs_vc)
-        for ci in np.flatnonzero(cnt):
-            nb = int(cnt[ci])
-            mean = s1[ci] / nb
-            m2 = max(float(s2[ci] - nb * mean * mean), 0.0)
-            self._moments.setdefault(
-                self._label_names[ci], StreamingMoments()).merge(
-                    nb, float(mean), m2, float(sa[ci] / nb),
-                    float(mx[ci]))
-
-        return IngestReport(d * m, 0, 0, 0, d)
-
-    # -- queries ----------------------------------------------------------
-    def _tail_energy(self, tq: np.ndarray, corrected: bool):
-        """Energy at ``tq`` ([N]) for ``tq`` at/after each device's newest
-        sample; (values, valid) — valid False where ``tq`` is in the
-        past (needs the ring) or the device never reported."""
-        st = self.state
-        c = self.corrections
-        if corrected:
-            base = st.energy_corr_j
-            dens = (st.last_v - c.offset_w) / c.gain
-        else:
-            base = st.energy_j
-            dens = st.last_v
-        dt = tq - st.last_t
-        hold = np.minimum(dt, self._max_hold)
-        valid = st.has & (dt >= 0.0)
-        return np.where(valid, base + dens * hold, 0.0), valid
-
-    def _energy_at(self, tq: np.ndarray, corrected: bool):
-        """Energy since first sample at instants ``tq`` [N]; returns
-        ``(energy, covered)`` with nan where not covered (instant
-        predates ring coverage)."""
-        st = self.state
-        e_live, live = self._tail_energy(tq, corrected)
-        covered = live | ~st.has | (tq <= st.first_t)
-        e = np.where(st.has & (tq > st.first_t), e_live, 0.0)
-        past = st.has & (tq < st.last_t) & (tq > st.first_t)
-        if np.any(past) and self.ring.slots:
-            ts, vs, er, ec = self.ring.sorted_view()
-            j = searchsorted_rows(ts, tq[:, None], "right")[:, 0] - 1
-            ok = j >= 0
-            jc = np.clip(j, 0, self.ring.slots - 1)[:, None]
-            rt = np.take_along_axis(ts, jc, axis=1)[:, 0]
-            rv = np.take_along_axis(vs, jc, axis=1)[:, 0]
-            re_ = np.take_along_axis(ec if corrected else er, jc,
-                                     axis=1)[:, 0]
-            if corrected:
-                rv = (rv - self.corrections.offset_w) / self.corrections.gain
-            hold = np.minimum(tq - rt, self._max_hold)
-            e_past = re_ + rv * hold
-            sel = past & ok
-            e = np.where(sel, e_past, e)
-            covered = covered | sel
-        return np.where(covered, e, np.nan), covered
-
+    # -- queries (delegated to the current snapshot) -----------------------
     def fleet_energy(self, t: Optional[float] = None,
                      corrected: bool = True) -> FleetEnergy:
-        """Running fleet energy at wall-clock ``t`` (default: each
-        device's newest sample — no extrapolation), with the telemetry
-        uncertainty bounds."""
-        from repro.core.telemetry import (CALIBRATED_TOLERANCE,
-                                          SHUNT_TOLERANCE)
-        st = self.state
-        if t is None:
-            e = (st.energy_corr_j if corrected else st.energy_j).copy()
-            covered = np.ones(self.n_devices, dtype=bool)
-        else:
-            tq = np.full(self.n_devices, float(t))
-            e, covered = self._energy_at(tq, corrected)
-        tol = np.where(self.corrections.calibrated,
-                       CALIBRATED_TOLERANCE, SHUNT_TOLERANCE)
-        sig = np.where(covered, tol * np.abs(np.nan_to_num(e)), 0.0)
-        total = float(np.nansum(np.where(covered, e, 0.0)))
-        return FleetEnergy(
-            t=t, corrected=corrected, per_device_j=e, covered=covered,
-            total_j=total, n_reporting=int(np.sum(st.has)),
-            sigma_independent_j=float(np.sqrt(np.sum(sig ** 2))),
-            sigma_worstcase_j=float(np.sum(sig)))
+        return self.snapshot().fleet_energy(t, corrected)
+
+    fleet_energy.__doc__ = MonitorSnapshot.fleet_energy.__doc__
 
     def window_energy(self, t: Optional[float] = None,
                       corrected: bool = True) -> np.ndarray:
-        """Per-device energy clipped to the registered §5 windows [N].
+        return self.snapshot().window_energy(t, corrected)
 
-        With ``t`` given, devices whose window is still open get the live
-        rectangle tail up to ``min(t, b)``; with ``t=None`` the
-        accumulated value is returned as-is (exact once the stream has
-        passed each window's end).  Window accumulation cannot be
-        rewound: a query instant that a device's still-open window has
-        already streamed past reports nan for that device rather than
-        silently overstating."""
-        st = self.state
-        c = self.corrections
-        e = (st.win_corr_j if corrected else st.win_j).copy()
-        if t is None:
-            return e
-        shift = c.time_shift_s if corrected else 0.0
-        t_rep = st.last_t - shift       # newest sample, reported time
-        tq = float(t) - shift           # query instant, reported time
-        dens = ((st.last_v - c.offset_w) / c.gain if corrected
-                else st.last_v)
-        lim = np.minimum(tq, np.minimum(self._win_b,
-                                        t_rep + self._max_hold))
-        tail = np.where(st.has & (t_rep >= self._win_a),
-                        dens * np.maximum(lim - t_rep, 0.0), 0.0)
-        # accumulated-through-b is exact once the window closed; an
-        # open window already streamed past tq is not reconstructible
-        stale = (st.has & (tq < t_rep) & (tq < self._win_b)
-                 & (tq > self._win_a))
-        out = np.where(stale, np.nan, e + tail)
-        # before the window opens the exact answer is 0, whatever has
-        # accumulated since
-        return np.where(st.has & (tq <= self._win_a), 0.0, out)
+    window_energy.__doc__ = MonitorSnapshot.window_energy.__doc__
 
     def energy_between(self, t0: float, t1: float,
                        corrected: bool = True):
-        """Windowed energy ``∫[t0, t1]`` per device from the ring buffer;
-        returns ``(energy, covered)``.  Held-value semantics (the value
-        at ``t0`` is the sample covering it); exact whenever both
-        endpoints lie within ring coverage, nan otherwise."""
-        if not (t1 >= t0):
-            raise ValueError(f"bad window [{t0}, {t1}]")
-        n = self.n_devices
-        e1, c1 = self._energy_at(np.full(n, float(t1)), corrected)
-        e0, c0 = self._energy_at(np.full(n, float(t0)), corrected)
-        covered = c0 & c1
-        return np.where(covered, e1 - e0, np.nan), covered
+        return self.snapshot().energy_between(t0, t1, corrected)
+
+    energy_between.__doc__ = MonitorSnapshot.energy_between.__doc__
 
     def by_label(self, t0: Optional[float] = None,
                  t1: Optional[float] = None,
                  corrected: bool = True) -> Dict[str, Dict[str, float]]:
-        """Energy breakdown by workload label — over ``[t0, t1]`` (ring
-        coverage permitting) or since stream start.  Each label reports
-        its covered-device count, total energy and the Chan–Welford
-        moments of the per-device energies."""
-        if (t0 is None) != (t1 is None):
-            raise ValueError("pass both t0 and t1, or neither")
-        if t0 is None:
-            st = self.state
-            e = (st.energy_corr_j if corrected else st.energy_j)
-            covered = st.has.copy()
-        else:
-            e, covered = self.energy_between(t0, t1, corrected)
-            covered = covered & self.state.has
-        out: Dict[str, Dict[str, float]] = {}
-        for label in np.unique(self.labels):
-            sel = (self.labels == label) & covered
-            vals = e[sel]
-            sm = StreamingMoments().update(vals, self._be)
-            stats = sm.stats()
-            out[str(label)] = {
-                "n_devices": int(np.sum(self.labels == label)),
-                "n_covered": int(np.sum(sel)),
-                "total_j": float(np.sum(vals)) if vals.size else 0.0,
-                "mean_j": stats["mean_err"],
-                "std_j": stats["std_err"],
-            }
-        return out
+        return self.snapshot().by_label(t0, t1, corrected)
+
+    by_label.__doc__ = MonitorSnapshot.by_label.__doc__
 
     def reading_stats(self) -> Dict[str, Dict[str, float]]:
-        """Per-label corrected-reading moments accumulated at ingest
-        (``StreamingMoments`` — mean/std/worst in watts)."""
-        return {label: sm.stats()
-                for label, sm in sorted(self._moments.items())}
+        return self.snapshot().reading_stats()
+
+    reading_stats.__doc__ = MonitorSnapshot.reading_stats.__doc__
 
     def update_period_s(self) -> np.ndarray:
-        """[N] online update-period estimates (nan until a device has
-        published ``min_runs`` complete runs)."""
-        return self.periods.estimates()
+        return self.snapshot().update_period_s()
+
+    update_period_s.__doc__ = MonitorSnapshot.update_period_s.__doc__
 
     def flags(self, t: Optional[float] = None) -> Dict[str, np.ndarray]:
-        """Per-device health flags at wall-clock ``t`` (default: the
-        newest sample seen fleet-wide).
+        return self.snapshot().flags(t)
 
-        * ``silent`` — no sample for longer than ``silent_after_s``
-          (default 5× the device's update period — online estimate when
-          converged, calibration reference otherwise);
-        * ``anomalous`` — published readings outside the calibrated
-          envelope;
-        * ``drifting`` — the recent EWMA of corrected readings diverges
-          from the device's lifetime mean corrected power;
-        * ``reporting`` — has ever reported.
-        """
-        st = self.state
-        if t is None:
-            t = float(np.max(st.last_t[st.has])) if np.any(st.has) else 0.0
-        that = self.periods.estimates()
-        ref = np.where(np.isfinite(that), that,
-                       self.corrections.ref_period_s)
-        after = (np.full(self.n_devices, float(self.silent_after_s))
-                 if self.silent_after_s is not None else 5.0 * ref)
-        silent = st.has & (t - st.last_t > after)
-        dur = st.last_t - st.first_t
-        with np.errstate(invalid="ignore", divide="ignore"):
-            mean_p = np.where(dur > 0.0, st.energy_corr_j / dur, np.nan)
-        dev = np.abs(st.ewma_w - mean_p)
-        drifting = (st.has & (dur > 2.0 * self.drift_tau_s)
-                    & (dev > np.maximum(self.drift_rel * np.abs(mean_p),
-                                        self.drift_abs_w)))
-        return {
-            "reporting": st.has.copy(),
-            "silent": silent,
-            "anomalous": st.n_out > 0,
-            "drifting": np.where(np.isfinite(mean_p), drifting, False),
-        }
+    flags.__doc__ = MonitorSnapshot.flags.__doc__
 
     @property
     def counters(self) -> Dict[str, int]:
-        st = self.state
-        return {
-            "accepted": int(np.sum(st.n_samples)),
-            "duplicates": int(np.sum(st.n_dup)),
-            "late": int(np.sum(st.n_late)),
-            "invalid": self._n_invalid,
-            "devices_reporting": int(np.sum(st.has)),
-        }
+        return self._core.counters

@@ -60,8 +60,9 @@ class DeviceState:
         return self.last_t.shape[0]
 
     def nbytes(self) -> int:
-        return sum(getattr(self, fld.name).nbytes
-                   for fld in dataclasses.fields(self))
+        from repro.core.stream import schema
+        return schema.registry_nbytes(self, schema.DEVICE_STATE_FIELDS,
+                                      "DeviceState")
 
 
 class IngestBuffer:
@@ -88,11 +89,10 @@ class IngestBuffer:
             self.e_corr = np.zeros((n_devices, self.slots))
 
     def nbytes(self) -> int:
-        n = self.n_written.nbytes
-        if self.slots:
-            n += self.t.nbytes + self.v.nbytes
-            n += self.e_raw.nbytes + self.e_corr.nbytes
-        return n
+        from repro.core.stream import schema
+        return schema.registry_nbytes(self, schema.RING_FIELDS,
+                                      "IngestBuffer",
+                                      optional=schema.RING_SLOT_FIELDS)
 
     def write(self, dev: np.ndarray, ordinal: np.ndarray,
               group_count: np.ndarray, t: np.ndarray, v: np.ndarray,

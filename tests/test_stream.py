@@ -282,6 +282,31 @@ def test_invalid_samples_and_bad_inputs():
         mon2.set_windows(0.0, 1.0)       # windows after first ingest
 
 
+def test_energy_between_rejects_inverted_and_nan_windows():
+    """Edge contract (docs/streaming.md): malformed windows raise at the
+    API boundary instead of returning silently-wrong zeros."""
+    mon = MonitorService(2)
+    mon.ingest([0, 1], [0.0, 0.0], [100.0, 100.0])
+    with pytest.raises(ValueError):
+        mon.energy_between(1.0, 0.5)
+    with pytest.raises(ValueError):
+        mon.energy_between(np.nan, 1.0)
+    with pytest.raises(ValueError):
+        mon.energy_between(0.0, np.nan)
+    # degenerate t0 == t1: exactly zero wherever covered
+    e, cov = mon.energy_between(0.0, 0.0)
+    assert np.all(e[cov] == 0.0)
+
+
+def test_by_label_empty_groups_report_nan_means():
+    """Groups with no covered device answer total_j = 0 but nan
+    mean/std — 'no data' must not masquerade as 'measured zero'."""
+    mon = MonitorService(2, labels=np.array(["a", "b"], dtype=object))
+    for d in mon.by_label().values():
+        assert d["n_covered"] == 0 and d["total_j"] == 0.0
+        assert np.isnan(d["mean_j"]) and np.isnan(d["std_j"])
+
+
 def test_window_energy_past_query_reports_nan_not_overstatement():
     """A still-open window that already streamed past the query instant
     cannot be rewound: the device reports nan instead of the inflated
