@@ -51,6 +51,18 @@ queries/sec while ingesting, per-flush p50/p99 latency, cache hit rate.
 ``BENCH_fleet.json``)::
 
     python benchmarks/fleet.py --serving-only --serving-devices 100000
+
+Fault-domain resilience (ISSUE 9): the ``chaos`` block streams the same
+fleet through the full transport-fault taxonomy
+(:class:`repro.core.stream.FaultSpec` — clock drift/skew, collector
+blackouts, corrupt slabs, permanent dropouts) into a hardened
+health-tracked monitor, recording degraded-mode ingest throughput
+against the clean strict path, then kills the run mid-stream and times
+the supervisor's restore-then-resume cycle (checking the recovered
+monitor is *bitwise* the uninterrupted one).  ``--chaos-only`` reruns
+just this block (merging into an existing ``BENCH_fleet.json``)::
+
+    python benchmarks/fleet.py --chaos-only --backend numpy
 """
 from __future__ import annotations
 
@@ -141,6 +153,13 @@ def _parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--serving-only", action="store_true",
                     help="run only the snapshot-serving bench and merge "
                          "its block into an existing BENCH_fleet.json")
+    ap.add_argument("--chaos-devices", type=int, default=2000,
+                    help="fleet size for the fault-injection/recovery "
+                         "bench (default 2000; 0 disables the block)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run only the chaos (fault-injection + "
+                         "kill/recover) bench and merge its block into "
+                         "an existing BENCH_fleet.json")
     return ap.parse_args(argv)
 
 
@@ -382,6 +401,128 @@ def _serving_blocks(args, backends, slabs, n):
     return block
 
 
+def _chaos_slabs(n, n_slabs=16, seed=3):
+    """Deterministic messy poll slabs (0.5 s of stream each) — the raw
+    pre-fault stream the chaos bench injects into."""
+    rng = np.random.default_rng(seed)
+    out, t0 = [], 0.0
+    for _ in range(n_slabs):
+        k = int(rng.integers(8 * n, 12 * n))
+        dev = rng.integers(0, n, k).astype(np.int64)
+        t = t0 + np.sort(rng.uniform(0.0, 0.5, k))
+        v = 80.0 + 40.0 * rng.random(k)
+        out.append((dev, t, v))
+        t0 += 0.5
+    return out
+
+
+def _chaos_block(args, backends):
+    """The ``chaos`` BENCH block: degraded-mode ingest throughput under
+    the full fault taxonomy vs the clean strict path, plus a
+    kill-mid-stream → restore → resume cycle timed end to end (and
+    checked bitwise against the uninterrupted faulty run)."""
+    import dataclasses
+    import tempfile
+
+    from repro.core.stream import (FaultInjector, FaultSpec, HealthPolicy,
+                                   MonitorService, MonitorSupervisor,
+                                   restore_monitor)
+
+    n = args.chaos_devices
+    raw = _chaos_slabs(n)
+    t1 = 0.5 * len(raw)
+    n_samples = sum(v.size for _, _, v in raw)
+    spec = FaultSpec(shuffle=True, dup_fraction=0.05, drop_fraction=0.05,
+                     delay_fraction=0.05, clock_drift=0.005,
+                     clock_skew_s=0.01, restart_every_s=2.0,
+                     corrupt_fraction=0.02, dropout_fraction=0.10,
+                     seed=11)
+
+    def faulted():
+        inj = FaultInjector(spec, n, 0.0, t1)
+        for seq, (dev, ts, vs) in enumerate(raw):
+            dev, ts, vs = inj.apply(seq, dev, ts, vs)
+            if dev.size:
+                yield seq, dev, ts, vs
+
+    def hardened(be):
+        return MonitorService(n, strict_ids=False, health=HealthPolicy(),
+                              health_every_s=0.5, silent_after_s=1.0,
+                              backend=be)
+
+    block = {"n_devices": n, "n_samples": int(n_samples),
+             "fault_spec": dataclasses.asdict(spec)}
+    for be in backends:
+        def clean_pass():
+            mon = MonitorService(n, backend=be)
+            for dev, ts, vs in raw:
+                mon.ingest(dev, ts, vs)
+            return mon
+
+        def degraded_pass():
+            mon = hardened(be)
+            for _, dev, ts, vs in faulted():
+                mon.ingest(dev, ts, vs)
+            return mon
+
+        clean_pass()                       # untimed warm-up (jit etc.)
+        t0 = time.perf_counter()
+        clean_pass()
+        wall_clean = time.perf_counter() - t0
+        degraded_pass()
+        t0 = time.perf_counter()
+        ref = degraded_pass()
+        wall_deg = time.perf_counter() - t0
+
+        crash = {"armed": True}
+
+        def crashing():
+            for i, slab in enumerate(faulted()):
+                if crash["armed"] and i == len(raw) // 2:
+                    crash["armed"] = False
+                    raise RuntimeError("chaos kill")
+                yield slab
+
+        with tempfile.TemporaryDirectory() as root:
+            sup = MonitorSupervisor(lambda: hardened(be), root,
+                                    checkpoint_every=4)
+            t0 = time.perf_counter()
+            rep = sup.run(crashing)
+            wall_rec = time.perf_counter() - t0
+            # the restore step alone (what a restarted collector pays
+            # before its first ingest)
+            t0 = time.perf_counter()
+            restore_monitor(root, fallback=True)
+            restore_s = time.perf_counter() - t0
+        bitwise = bool(
+            np.array_equal(sup.monitor.state.energy_corr_j,
+                           ref.state.energy_corr_j)
+            and np.array_equal(sup.monitor.health.code, ref.health.code))
+        entry = {
+            "ingest_samples_per_sec_clean": round(n_samples / wall_clean, 1),
+            "ingest_samples_per_sec_degraded": round(n_samples / wall_deg, 1),
+            "degraded_over_clean_wall": round(wall_deg / wall_clean, 3),
+            "n_rejected": int(ref.counters["rejected"]),
+            "n_quarantined": int(ref.counters["n_quarantined"]),
+            "recovery_run_wall_s": round(wall_rec, 4),
+            "restore_s": round(restore_s, 4),
+            "n_restores": int(rep.n_restores),
+            "n_checkpoints": int(rep.n_checkpoints),
+            "recovered_bitwise": bitwise,
+        }
+        block[be] = entry
+        emit(f"chaos/backend_{be}_{n}", 0.0,
+             f"ingest_samples_per_sec_degraded="
+             f"{entry['ingest_samples_per_sec_degraded']};"
+             f"degraded_over_clean={entry['degraded_over_clean_wall']};"
+             f"restore_s={entry['restore_s']};"
+             f"recovered_bitwise={entry['recovered_bitwise']}")
+        if not bitwise:
+            raise SystemExit("chaos bench: recovered monitor diverged "
+                             "from the uninterrupted run")
+    return block
+
+
 def _audit_stats(n, names, ws, backend):
     """One timed heterogeneous naive audit; returns (wall_s, result)."""
     t0 = time.perf_counter()
@@ -407,6 +548,19 @@ def run(argv=None) -> None:
             with open(JSON_PATH) as fh:
                 payload = json.load(fh)
         payload["serving"] = serving
+        with open(JSON_PATH, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        emit("fleet_audit/bench_json", 0.0, f"path={JSON_PATH}")
+        return
+
+    if args.chaos_only:
+        chaos = _chaos_block(args, backends)
+        payload = {}
+        if os.path.exists(JSON_PATH):
+            with open(JSON_PATH) as fh:
+                payload = json.load(fh)
+        payload["chaos"] = chaos
         with open(JSON_PATH, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
             fh.write("\n")
@@ -753,6 +907,8 @@ def run(argv=None) -> None:
         if shard_mega is not None:
             shard_block["mega"] = shard_mega
         payload["sharded"] = shard_block
+    if args.chaos_devices > 0:
+        payload["chaos"] = _chaos_block(args, backends)
     with open(JSON_PATH, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")

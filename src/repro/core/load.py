@@ -185,15 +185,97 @@ def diurnal_cycle_timeline(seed: int = 0, window_s: float = 0.300,
     return from_segments(segs, idle_w=idle_w)
 
 
+# -- adversarial fleet dynamics (ROADMAP item (b)) --------------------------
+# DVFS ramps, thermal-throttle sag, power-cap clipping and mid-window node
+# failures bend the power trace *under* the sampler: the part-time window
+# sees a level the device only held for part of the window.  Each generator
+# keeps the square-wave segment vocabulary so the whole correction pipeline
+# applies unchanged.
+
+def dvfs_ramp_timeline(seed: int = 0, window_s: float = 0.360,
+                       idle_w: float = 60.0, peak_w: float = 250.0,
+                       n_steps: int = 8) -> ActivityTimeline:
+    """A DVFS frequency ramp: the governor walks the clock through
+    ``n_steps`` p-states, so power climbs (or descends) a curved staircase
+    across the window — no plateau lasts long enough for a part-time
+    sampler to average honestly."""
+    rng = np.random.default_rng(seed)
+    lo_f = rng.uniform(0.30, 0.45)
+    hi_f = rng.uniform(0.85, 0.97)
+    gamma = rng.uniform(0.6, 1.6)              # curvature of the ramp
+    up = rng.uniform(0.0, 1.0) < 0.5
+    frac = np.linspace(0.0, 1.0, n_steps)
+    p = peak_w * (lo_f + (hi_f - lo_f) * frac ** gamma)
+    if not up:
+        p = p[::-1]
+    dwell = window_s / n_steps
+    return from_segments([(dwell, float(w)) for w in p], idle_w=idle_w)
+
+
+def thermal_throttle_timeline(seed: int = 0, window_s: float = 0.420,
+                              idle_w: float = 60.0, peak_w: float = 250.0,
+                              n_steps: int = 7) -> ActivityTimeline:
+    """Thermal-throttle sag: the device starts near peak and decays
+    exponentially toward a sustained throttled level as the hotspot
+    saturates — a slow transient the sampler's duty cycle aliases."""
+    rng = np.random.default_rng(seed)
+    p0 = rng.uniform(0.88, 0.97)
+    p_inf = rng.uniform(0.60, 0.75)
+    tau = rng.uniform(0.25, 0.60)              # decay constant, in windows
+    mid = (np.arange(n_steps) + 0.5) * (window_s / n_steps)
+    sag = np.exp(-mid / (window_s * tau))
+    p = peak_w * (p_inf + (p0 - p_inf) * sag)
+    dwell = window_s / n_steps
+    return from_segments([(dwell, float(w)) for w in p], idle_w=idle_w)
+
+
+def power_cap_timeline(seed: int = 0, window_s: float = 0.400,
+                       idle_w: float = 60.0, peak_w: float = 250.0,
+                       n_steps: int = 8) -> ActivityTimeline:
+    """Power-cap clipping: free-running demand fluctuates step to step but
+    the board limit clips every excursion above the cap, flattening the
+    peaks a naive reading would extrapolate from."""
+    rng = np.random.default_rng(seed)
+    demand_f = rng.uniform(0.55, 1.05, size=n_steps)
+    cap_f = rng.uniform(0.70, 0.85)
+    demand = idle_w + (peak_w - idle_w) * demand_f
+    p = np.minimum(demand, peak_w * cap_f)
+    dwell = window_s / n_steps
+    return from_segments([(dwell, float(w)) for w in p], idle_w=idle_w)
+
+
+def node_failure_timeline(seed: int = 0, window_s: float = 0.400,
+                          idle_w: float = 60.0,
+                          peak_w: float = 250.0) -> ActivityTimeline:
+    """Node failure mid-window: full load until a random failure instant,
+    then a PSU/fan trickle — any sample taken before the death keeps
+    billing the device at load unless coverage is reported honestly."""
+    rng = np.random.default_rng(seed)
+    p_run = peak_w * rng.uniform(0.78, 0.94)
+    at = window_s * rng.uniform(0.20, 0.85)
+    p_dead = idle_w * rng.uniform(0.02, 0.10)
+    return from_segments([(at, float(p_run)),
+                          (window_s - at, float(p_dead))], idle_w=idle_w)
+
+
 SCENARIOS = {
     "training": training_step_timeline,
     "inference": inference_serving_timeline,
     "idle": idle_maintenance_timeline,
     "diurnal": diurnal_cycle_timeline,
+    "dvfs": dvfs_ramp_timeline,
+    "throttle": thermal_throttle_timeline,
+    "powercap": power_cap_timeline,
+    "node_failure": node_failure_timeline,
 }
 
 DEFAULT_MIX = {"training": 0.40, "inference": 0.30,
                "idle": 0.15, "diurnal": 0.15}
+
+# an all-adversarial fleet for resilience drills: every device is mid-ramp,
+# throttling, capped, or dying — the stress complement of DEFAULT_MIX
+ADVERSARIAL_MIX = {"dvfs": 0.30, "throttle": 0.25,
+                   "powercap": 0.25, "node_failure": 0.20}
 
 
 def scenario_timeline(kind: str, seed: int = 0, idle_w: float = 60.0,
@@ -420,11 +502,94 @@ def diurnal_cycle_bank(seeds, window_s: float = 0.300,
                         np.full(n, n_steps, dtype=np.int64))
 
 
+def dvfs_ramp_bank(seeds, window_s: float = 0.360, idle_w: float = 60.0,
+                   peak_w: float = 250.0, n_steps: int = 8) -> TimelineBank:
+    """Vectorized :func:`dvfs_ramp_timeline`: row i is bitwise the scalar
+    generator at ``seed=seeds[i]``."""
+    from repro.core.engine_backend.vecrng import VecStreams
+
+    streams = VecStreams(np.asarray(seeds))
+    n = streams.n_lanes
+    lo_f = streams.uniform(0.30, 0.45)
+    hi_f = streams.uniform(0.85, 0.97)
+    gamma = streams.uniform(0.6, 1.6)
+    up = streams.uniform(0.0, 1.0) < 0.5
+    frac = np.linspace(0.0, 1.0, n_steps)
+    p = peak_w * (lo_f[:, None]
+                  + (hi_f - lo_f)[:, None] * frac[None, :] ** gamma[:, None])
+    p = np.where(up[:, None], p, p[:, ::-1])
+    durs = np.full((n, n_steps), window_s / n_steps)
+    return TimelineBank(_cum_edges(durs, np.full(n, n_steps)), p,
+                        np.full(n, idle_w),
+                        np.full(n, n_steps, dtype=np.int64))
+
+
+def thermal_throttle_bank(seeds, window_s: float = 0.420,
+                          idle_w: float = 60.0, peak_w: float = 250.0,
+                          n_steps: int = 7) -> TimelineBank:
+    """Vectorized :func:`thermal_throttle_timeline`: row i is bitwise the
+    scalar generator at ``seed=seeds[i]``."""
+    from repro.core.engine_backend.vecrng import VecStreams
+
+    streams = VecStreams(np.asarray(seeds))
+    n = streams.n_lanes
+    p0 = streams.uniform(0.88, 0.97)
+    p_inf = streams.uniform(0.60, 0.75)
+    tau = streams.uniform(0.25, 0.60)
+    mid = (np.arange(n_steps) + 0.5) * (window_s / n_steps)
+    sag = np.exp(-mid[None, :] / (window_s * tau)[:, None])
+    p = peak_w * (p_inf[:, None] + (p0 - p_inf)[:, None] * sag)
+    durs = np.full((n, n_steps), window_s / n_steps)
+    return TimelineBank(_cum_edges(durs, np.full(n, n_steps)), p,
+                        np.full(n, idle_w),
+                        np.full(n, n_steps, dtype=np.int64))
+
+
+def power_cap_bank(seeds, window_s: float = 0.400, idle_w: float = 60.0,
+                   peak_w: float = 250.0, n_steps: int = 8) -> TimelineBank:
+    """Vectorized :func:`power_cap_timeline`: row i is bitwise the scalar
+    generator at ``seed=seeds[i]``."""
+    from repro.core.engine_backend.vecrng import VecStreams
+
+    streams = VecStreams(np.asarray(seeds))
+    n = streams.n_lanes
+    demand_f = streams.uniform_block(
+        0.55, 1.05, np.full(n, n_steps, dtype=np.int64))
+    cap_f = streams.uniform(0.70, 0.85)
+    demand = idle_w + (peak_w - idle_w) * demand_f
+    p = np.minimum(demand, (peak_w * cap_f)[:, None])
+    durs = np.full((n, n_steps), window_s / n_steps)
+    return TimelineBank(_cum_edges(durs, np.full(n, n_steps)), p,
+                        np.full(n, idle_w),
+                        np.full(n, n_steps, dtype=np.int64))
+
+
+def node_failure_bank(seeds, window_s: float = 0.400, idle_w: float = 60.0,
+                      peak_w: float = 250.0) -> TimelineBank:
+    """Vectorized :func:`node_failure_timeline`: row i is bitwise the
+    scalar generator at ``seed=seeds[i]``."""
+    from repro.core.engine_backend.vecrng import VecStreams
+
+    streams = VecStreams(np.asarray(seeds))
+    n = streams.n_lanes
+    p_run = peak_w * streams.uniform(0.78, 0.94)
+    at = window_s * streams.uniform(0.20, 0.85)
+    p_dead = idle_w * streams.uniform(0.02, 0.10)
+    durs = np.stack([at, window_s - at], axis=1)
+    powers = np.stack([p_run, p_dead], axis=1)
+    return TimelineBank(_cum_edges(durs, np.full(n, 2)), powers,
+                        np.full(n, idle_w), np.full(n, 2, dtype=np.int64))
+
+
 SCENARIO_BANKS = {
     "training": training_step_bank,
     "inference": inference_serving_bank,
     "idle": idle_maintenance_bank,
     "diurnal": diurnal_cycle_bank,
+    "dvfs": dvfs_ramp_bank,
+    "throttle": thermal_throttle_bank,
+    "powercap": power_cap_bank,
+    "node_failure": node_failure_bank,
 }
 
 

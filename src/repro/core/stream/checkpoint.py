@@ -17,6 +17,18 @@ would break the bitwise-resume pin.  :func:`restore_monitor` reads the
 manifest + ``.npy`` files directly with numpy — byte-exact, and it works
 on jax-free hosts.
 
+Failure typing: a checkpoint that exists but cannot be read back —
+truncated/corrupt ``.npy`` payloads, a garbled or partially-written
+manifest, manifest entries whose files are missing — raises
+:class:`CheckpointError` instead of leaking raw numpy/OS/json
+exceptions.  A checkpoint that simply isn't there (no root, unknown
+step) raises :class:`MissingCheckpointError`, which subclasses both
+``CheckpointError`` and ``FileNotFoundError`` (the pre-typed contract).
+``restore_monitor(..., fallback=True)`` walks backward through the
+retained generations and restores the newest *complete* one — the
+posture a crash-recovery supervisor wants when the newest write may
+have died mid-flight.
+
 The array set and its meaning are owned by
 :mod:`repro.core.stream.schema`; a monitor restored at any slab
 boundary and fed the remaining slabs answers every query bitwise
@@ -28,7 +40,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Optional
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -40,6 +52,16 @@ _TREE = "monitor"
 # per checkpoint root: repeated save_monitor calls must serialise, or
 # overlapping writers would garbage-collect each other out of order
 _managers: dict = {}
+
+
+class CheckpointError(RuntimeError):
+    """A monitor checkpoint exists but cannot be read back (truncated
+    ``.npy``, garbled manifest, missing manifest entries, partial
+    write)."""
+
+
+class MissingCheckpointError(CheckpointError, FileNotFoundError):
+    """No checkpoint to read (missing root or unknown step)."""
 
 
 def _manager(root: str, retain: int):
@@ -55,7 +77,8 @@ def _manager(root: str, retain: int):
 
 
 def save_monitor(monitor, root: str, *, step: Optional[int] = None,
-                 retain: int = 3, asynchronous: bool = False):
+                 retain: int = 3, asynchronous: bool = False,
+                 extras: Optional[Dict[str, Any]] = None):
     """Write one monitor checkpoint under ``root`` and return the
     :class:`~repro.ckpt.checkpoint.CheckpointManager` used (call
     ``.wait()`` after an ``asynchronous`` save before relying on it).
@@ -65,8 +88,18 @@ def save_monitor(monitor, root: str, *, step: Optional[int] = None,
     a full copy, so ingestion may continue immediately even while an
     async write drains.  Saves to the same ``root`` share one manager,
     so back-to-back ``asynchronous`` saves queue up instead of racing.
+
+    ``extras`` merges additional JSON-able keys into the manifest meta
+    (e.g. a supervisor's slab cursor); keys must not collide with the
+    schema's own meta keys.
     """
     arrays, meta = pack_monitor(monitor)
+    if extras:
+        clash = sorted(set(extras) & set(meta))
+        if clash:
+            raise ValueError(f"extras keys collide with schema meta: "
+                             f"{clash}")
+        meta = {**meta, **extras}
     if step is None:
         step = int(meta["epoch"])
     mgr = _manager(root, retain)
@@ -91,27 +124,87 @@ def checkpoint_steps(root: str):
     return sorted(out)
 
 
+def _load_step(root: str, step: int
+               ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Read one checkpoint generation's arrays + meta, wrapping every
+    partial-write failure mode in :class:`CheckpointError`."""
+    d = os.path.join(root, f"step_{step}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as exc:
+        raise CheckpointError(
+            f"step_{step}: manifest.json missing (partial write?)"
+        ) from exc
+    except (OSError, json.JSONDecodeError) as exc:
+        raise CheckpointError(
+            f"step_{step}: unreadable manifest.json: {exc}") from exc
+    try:
+        entries = manifest["trees"][_TREE]
+        meta = manifest["extras"]
+    except (KeyError, TypeError) as exc:
+        raise CheckpointError(
+            f"step_{step}: manifest has no '{exc}' entry — not a "
+            f"monitor checkpoint, or a garbled manifest") from exc
+    arrays = {}
+    for path, e in entries.items():
+        try:
+            fname = e["file"]
+        except (KeyError, TypeError) as exc:
+            raise CheckpointError(
+                f"step_{step}: manifest entry for '{path}' has no "
+                f"file reference") from exc
+        try:
+            arrays[path] = np.load(os.path.join(d, fname))
+        except FileNotFoundError as exc:
+            raise CheckpointError(
+                f"step_{step}: array file '{fname}' missing "
+                f"(partial write?)") from exc
+        except (OSError, ValueError, EOFError, KeyError) as exc:
+            raise CheckpointError(
+                f"step_{step}: array file '{fname}' is truncated or "
+                f"corrupt: {exc}") from exc
+    return arrays, meta
+
+
 def restore_monitor(root: str, *, step: Optional[int] = None,
-                    backend: Optional[str] = None):
+                    backend: Optional[str] = None,
+                    fallback: bool = False,
+                    with_meta: bool = False):
     """Rebuild a :class:`~repro.core.stream.MonitorService` from the
     checkpoint at ``step`` (default: latest) — bitwise, numpy-only.
 
     ``backend`` overrides the checkpointed backend selection (the state
     arrays are backend-agnostic, so a jax-written checkpoint restores
     on a numpy-only host and vice versa).
+
+    With ``fallback=True`` (and no explicit ``step``), corrupt
+    generations are skipped newest-first and the newest *complete* one
+    restores instead; only if every retained generation is unreadable
+    does the corruption surface (as a :class:`CheckpointError` listing
+    each generation's failure).  ``with_meta=True`` returns
+    ``(monitor, meta)`` — the full manifest meta including any
+    ``extras`` recorded at save time.
     """
     steps = checkpoint_steps(root)
     if not steps:
-        raise FileNotFoundError(f"no checkpoints under {root}")
+        raise MissingCheckpointError(f"no checkpoints under {root}")
     if step is None:
-        step = steps[-1]
+        candidates = steps[::-1] if fallback else [steps[-1]]
     elif step not in steps:
-        raise FileNotFoundError(
+        raise MissingCheckpointError(
             f"no checkpoint step_{step} under {root}; have {steps}")
-    d = os.path.join(root, f"step_{step}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    entries = manifest["trees"][_TREE]
-    arrays = {path: np.load(os.path.join(d, e["file"]))
-              for path, e in entries.items()}
-    return unpack_monitor(arrays, manifest["extras"], backend=backend)
+    else:
+        candidates = [step]
+    failures = []
+    for s in candidates:
+        try:
+            arrays, meta = _load_step(root, s)
+        except CheckpointError as exc:
+            failures.append(str(exc))
+            continue
+        mon = unpack_monitor(arrays, meta, backend=backend)
+        return (mon, meta) if with_meta else mon
+    raise CheckpointError(
+        "no readable checkpoint generation under "
+        f"{root}: {'; '.join(failures)}")

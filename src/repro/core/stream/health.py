@@ -1,0 +1,169 @@
+"""Per-device health state machine: healthy → stale → quarantined.
+
+The streaming monitor's flags (:meth:`MonitorSnapshot.flags`) are
+*instantaneous* observations — silent, anomalous, drifting.  This module
+adds the *stateful* layer a degraded-mode query needs: each device walks
+a three-state machine driven by those same signals, evaluated at slab
+boundaries, and quarantined devices are excluded from fleet aggregates
+until they earn their way back with a clean streak
+(:class:`HealthPolicy.recover_after_s`).
+
+States (stored as an ``int8`` code per device, checkpointed with the
+rest of the monitor state):
+
+* ``HEALTHY`` (0) — reporting on schedule, inside the envelope, no
+  drift;
+* ``STALE`` (1) — no sample for longer than ``stale_factor ×`` the
+  silent threshold (the same per-device threshold ``flags`` uses: the
+  online update-period estimate when converged, the calibration
+  reference otherwise, or the monitor's explicit ``silent_after_s``);
+  stale devices still count toward aggregates — staleness is a warning,
+  not an exclusion;
+* ``QUARANTINED`` (2) — silent past ``quarantine_factor ×`` the
+  threshold (dead / dropped out), or fresh out-of-envelope readings
+  (``quarantine_anomalous``), or reading drift
+  (``quarantine_drifting``).  Quarantined devices are excluded from
+  coverage-aware queries; they return to ``HEALTHY`` after streaming
+  cleanly for ``recover_after_s``.
+
+Health tracking is **opt-in** (``MonitorService(health=HealthPolicy())``)
+— without a policy the monitor behaves exactly as before, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+HEALTHY = 0
+STALE = 1
+QUARANTINED = 2
+
+STATE_NAMES = {HEALTHY: "healthy", STALE: "stale",
+               QUARANTINED: "quarantined"}
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """When devices demote/promote through the health machine.
+
+    Thresholds are multiples of the monitor's per-device silent
+    threshold (see module doc), so one policy adapts to heterogeneous
+    update periods.  ``recover_after_s`` is the clean-streak dwell a
+    quarantined device must sustain before re-admission (0 readmits on
+    the first clean evaluation).
+    """
+
+    stale_factor: float = 1.0
+    quarantine_factor: float = 3.0
+    quarantine_anomalous: bool = True
+    quarantine_drifting: bool = True
+    recover_after_s: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 < self.stale_factor <= self.quarantine_factor:
+            raise ValueError(
+                f"need 0 < stale_factor <= quarantine_factor, got "
+                f"{self.stale_factor} / {self.quarantine_factor}")
+        if self.recover_after_s < 0.0:
+            raise ValueError("recover_after_s must be >= 0")
+
+    def to_meta(self) -> dict:
+        """JSON-able form for checkpoint manifests."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_meta(cls, d: dict) -> "HealthPolicy":
+        return cls(**d)
+
+
+class HealthTracker:
+    """The [N] state arrays of the health machine (see module doc).
+
+    Field set is owned by ``stream.schema.HEALTH_FIELDS`` — adding an
+    array here without a schema bump fails the registry check.
+    """
+
+    def __init__(self, code, since_t, clean_t, clean, last_n_out,
+                 n_quarantines):
+        self.code = code                    # [N] i1 state code
+        self.since_t = since_t              # [N] f8 last transition time
+        self.clean_t = clean_t              # [N] f8 clean-streak start
+        self.clean = clean                  # [N] b1 in a clean streak
+        self.last_n_out = last_n_out        # [N] i8 n_out at last eval
+        self.n_quarantines = n_quarantines  # [N] i8 lifetime quarantines
+
+    @classmethod
+    def zeros(cls, n: int) -> "HealthTracker":
+        return cls(code=np.zeros(n, dtype=np.int8),
+                   since_t=np.zeros(n), clean_t=np.zeros(n),
+                   clean=np.zeros(n, dtype=bool),
+                   last_n_out=np.zeros(n, dtype=np.int64),
+                   n_quarantines=np.zeros(n, dtype=np.int64))
+
+    def nbytes(self) -> int:
+        from repro.core.stream.schema import HEALTH_FIELDS, registry_nbytes
+        return registry_nbytes(self, HEALTH_FIELDS, "HealthTracker")
+
+    def counts(self) -> Dict[str, int]:
+        return {"n_healthy": int(np.sum(self.code == HEALTHY)),
+                "n_stale": int(np.sum(self.code == STALE)),
+                "n_quarantined": int(np.sum(self.code == QUARANTINED))}
+
+    def update(self, st, *, t_now: float, policy: HealthPolicy,
+               period_est: np.ndarray, ref_period_s: np.ndarray,
+               silent_after_s: Optional[float], drift_tau_s: float,
+               drift_rel: float, drift_abs_w: float) -> bool:
+        """Evaluate one health step at wall-clock ``t_now`` against the
+        :class:`~repro.core.stream.state.DeviceState` accumulators.
+        Returns True when any device changed state.
+
+        The silence/anomaly/drift criteria are the exact rules
+        :meth:`MonitorSnapshot.flags` reports, so the machine never
+        disagrees with the flags a reader sees — it only adds memory
+        (dwell times, clean streaks) on top.
+        """
+        n = st.last_t.shape[0]
+        ref = np.where(np.isfinite(period_est), period_est, ref_period_s)
+        after = (np.full(n, float(silent_after_s))
+                 if silent_after_s is not None else 5.0 * ref)
+        silent_for = t_now - st.last_t
+        stale_sig = st.has & (silent_for > policy.stale_factor * after)
+        dead_sig = st.has & (silent_for > policy.quarantine_factor * after)
+        fresh_anom = st.has & (st.n_out > self.last_n_out)
+        dur = st.last_t - st.first_t
+        with np.errstate(invalid="ignore", divide="ignore"):
+            mean_p = np.where(dur > 0.0, st.energy_corr_j / dur, np.nan)
+        dev_w = np.abs(st.ewma_w - mean_p)
+        drift_sig = (st.has & (dur > 2.0 * drift_tau_s)
+                     & (dev_w > np.maximum(drift_rel * np.abs(mean_p),
+                                           drift_abs_w)))
+        drift_sig = np.where(np.isfinite(mean_p), drift_sig, False)
+
+        bad = dead_sig.copy()
+        if policy.quarantine_anomalous:
+            bad |= fresh_anom
+        if policy.quarantine_drifting:
+            bad |= drift_sig
+        clean_now = st.has & ~stale_sig & ~fresh_anom & ~drift_sig
+        starting = clean_now & ~self.clean
+        self.clean_t = np.where(starting, t_now, self.clean_t)
+
+        new = self.code.copy()
+        new[(self.code == HEALTHY) & stale_sig & ~bad] = STALE
+        new[bad] = QUARANTINED
+        promote_stale = (self.code == STALE) & clean_now & ~bad
+        dwell_ok = (t_now - self.clean_t) >= policy.recover_after_s
+        promote_q = ((self.code == QUARANTINED) & clean_now & dwell_ok
+                     & ~bad)
+        new[promote_stale | promote_q] = HEALTHY
+
+        changed = new != self.code
+        self.n_quarantines += ((new == QUARANTINED)
+                               & (self.code != QUARANTINED))
+        self.since_t = np.where(changed, t_now, self.since_t)
+        self.code = new
+        self.clean = clean_now
+        self.last_n_out = st.n_out.copy()
+        return bool(np.any(changed))

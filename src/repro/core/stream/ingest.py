@@ -24,6 +24,7 @@ from repro.core.engine_backend import get_backend, resolve_backend
 from repro.core.fleet_engine import StreamingMoments
 from repro.core.stream.estimators import (OnlinePeriodEstimator,
                                           StreamCorrections)
+from repro.core.stream.health import HealthPolicy, HealthTracker
 from repro.core.stream.state import DeviceState, IngestBuffer
 
 _INTEGRATIONS = ("rectangle", "trapezoid")
@@ -38,6 +39,7 @@ class IngestReport:
     late: int
     invalid: int
     n_devices: int      # distinct devices that contributed samples
+    rejected: int = 0   # out-of-range device ids (strict_ids=False only)
 
 
 class IngestCore:
@@ -61,6 +63,9 @@ class IngestCore:
                  drift_tau_s: float = 30.0,
                  drift_rel: float = 0.25,
                  drift_abs_w: float = 5.0,
+                 strict_ids: bool = True,
+                 health: Optional[HealthPolicy] = None,
+                 health_every_s: float = 0.0,
                  backend: Optional[str] = None):
         if n_devices < 1:
             raise ValueError("need at least one device")
@@ -121,6 +126,17 @@ class IngestCore:
         self.drift_abs_w = float(drift_abs_w)
         self._moments: Dict[str, StreamingMoments] = {}
         self._n_invalid = 0
+        # defensive-mode knobs: with strict_ids=False, out-of-range ids
+        # are rejected and counted instead of raising (the posture for
+        # streams behind a corrupting collector); with a HealthPolicy,
+        # the per-device state machine runs at slab boundaries (at most
+        # every health_every_s of stream time)
+        self.strict_ids = bool(strict_ids)
+        self.health_policy = health
+        self.health = HealthTracker.zeros(n) if health is not None else None
+        self.health_every_s = float(health_every_s)
+        self._next_health_t = -np.inf
+        self._n_rejected = 0
         # bumped on every slab that mutates state; snapshots and the
         # (query, epoch) result cache key on it
         self.epoch = 0
@@ -147,7 +163,8 @@ class IngestCore:
         registries checkpointing serializes, so a field added to the
         state without a schema update fails here first."""
         return (self.state.nbytes() + self.ring.nbytes()
-                + self.periods.nbytes())
+                + self.periods.nbytes()
+                + (self.health.nbytes() if self.health is not None else 0))
 
     # -- ingestion --------------------------------------------------------
     def ingest(self, dev, t, v) -> IngestReport:
@@ -155,7 +172,11 @@ class IngestCore:
 
         ``dev`` [K] int device ids, ``t`` [K] sample times, ``v`` [K]
         raw readings — any order, duplicates and late samples tolerated
-        (dropped and counted).  Returns an :class:`IngestReport`.
+        (dropped and counted).  Out-of-range device ids raise by
+        default; with ``strict_ids=False`` they are rejected and counted
+        instead (the defensive posture for corrupting collectors) —
+        either way they never touch state.  Returns an
+        :class:`IngestReport`.
         """
         dev = np.asarray(dev, dtype=np.int64).ravel()
         t = np.asarray(t, dtype=np.float64).ravel()
@@ -163,11 +184,19 @@ class IngestCore:
         if not (dev.shape == t.shape == v.shape):
             raise ValueError(f"shape mismatch: dev {dev.shape}, "
                              f"t {t.shape}, v {v.shape}")
+        n_rej = 0
         if dev.size and (dev.min() < 0 or dev.max() >= self.n_devices):
-            raise ValueError("device id out of range")
+            if self.strict_ids:
+                raise ValueError("device id out of range")
+            ok_id = (dev >= 0) & (dev < self.n_devices)
+            n_rej = int(ok_id.size - ok_id.sum())
+            self._n_rejected += n_rej
+            dev, t, v = dev[ok_id], t[ok_id], v[ok_id]
         k_in = dev.size
         if k_in == 0:
-            return IngestReport(0, 0, 0, 0, 0)
+            if n_rej:               # counters mutated: publish fresh
+                self.epoch += 1
+            return IngestReport(0, 0, 0, 0, 0, n_rej)
         # even an all-dropped slab mutates counters: publish fresh
         self.epoch += 1
 
@@ -198,7 +227,7 @@ class IngestCore:
         dev, t, v = dev[keep], t[keep], v[keep]
         k = dev.size
         if k == 0:
-            return IngestReport(0, n_dup, n_late, n_invalid, 0)
+            return IngestReport(0, n_dup, n_late, n_invalid, 0, n_rej)
 
         v = v - self.corrections.baseline_w[dev]
 
@@ -282,7 +311,8 @@ class IngestCore:
                     nb, float(mean), m2, float(sa[ci] / nb),
                     float(mx[ci]))
 
-        return IngestReport(k, n_dup, n_late, n_invalid, len(u_dev))
+        self._maybe_update_health(float(np.max(new_t)))
+        return IngestReport(k, n_dup, n_late, n_invalid, len(u_dev), n_rej)
 
     def ingest_grid(self, dev, ts, vals) -> IngestReport:
         """Fold one *rectangular* slab: ``dev`` [D] distinct ascending
@@ -306,8 +336,18 @@ class IngestCore:
                              f"got {vals.shape}")
         if d == 0 or m == 0:
             return IngestReport(0, 0, 0, 0, 0)
+        n_rej = 0
         if dev.min() < 0 or dev.max() >= self.n_devices:
-            raise ValueError("device id out of range")
+            if self.strict_ids:
+                raise ValueError("device id out of range")
+            ok_id = (dev >= 0) & (dev < self.n_devices)
+            n_rej = int(ok_id.size - ok_id.sum()) * m
+            self._n_rejected += n_rej
+            dev, vals = dev[ok_id], vals[ok_id]
+            d = dev.size
+            if d == 0:
+                self.epoch += 1     # counters mutated: publish fresh
+                return IngestReport(0, 0, 0, 0, 0, n_rej)
 
         st = self.state
         clean = (np.all(np.diff(dev) > 0)
@@ -316,8 +356,10 @@ class IngestCore:
                  and bool(np.all(np.isfinite(vals)))
                  and not np.any(st.has[dev] & (ts[0] <= st.last_t[dev])))
         if not clean:
-            return self.ingest(np.repeat(dev, m), np.tile(ts, d),
-                               vals.ravel())
+            rep = self.ingest(np.repeat(dev, m), np.tile(ts, d),
+                              vals.ravel())
+            return (dataclasses.replace(rep, rejected=rep.rejected + n_rej)
+                    if n_rej else rep)
         self.epoch += 1
 
         c = self.corrections
@@ -387,16 +429,53 @@ class IngestCore:
                     nb, float(mean), m2, float(sa[ci] / nb),
                     float(mx[ci]))
 
-        return IngestReport(d * m, 0, 0, 0, d)
+        self._maybe_update_health(float(ts[-1]))
+        return IngestReport(d * m, 0, 0, 0, d, n_rej)
+
+    # -- health -----------------------------------------------------------
+    def _maybe_update_health(self, t_now: float) -> None:
+        """Run the health machine at a slab boundary, throttled to at
+        most once per ``health_every_s`` of stream time.  Time going
+        *backward* across slabs (chunked replays re-start the clock per
+        device slab) never triggers an evaluation, so chunk order cannot
+        quarantine devices that simply haven't been streamed yet."""
+        if self.health is None or not np.isfinite(t_now):
+            return
+        if t_now < self._next_health_t:
+            return
+        self._next_health_t = t_now + self.health_every_s
+        self.update_health(t_now, _bump_epoch=False)
+
+    def update_health(self, t_now: float, _bump_epoch: bool = True) -> bool:
+        """Evaluate one health step at wall-clock ``t_now`` (no-op
+        without a policy).  Returns True when any device changed state;
+        an explicit call that changes state bumps the epoch (ingestion's
+        own slab-boundary evaluations ride the slab's bump)."""
+        if self.health is None:
+            return False
+        changed = self.health.update(
+            self.state, t_now=float(t_now), policy=self.health_policy,
+            period_est=self.periods.estimates(),
+            ref_period_s=self.corrections.ref_period_s,
+            silent_after_s=self.silent_after_s,
+            drift_tau_s=self.drift_tau_s, drift_rel=self.drift_rel,
+            drift_abs_w=self.drift_abs_w)
+        if changed and _bump_epoch:
+            self.epoch += 1
+        return changed
 
     # -- accounting -------------------------------------------------------
     @property
     def counters(self) -> Dict[str, int]:
         st = self.state
-        return {
+        out = {
             "accepted": int(np.sum(st.n_samples)),
             "duplicates": int(np.sum(st.n_dup)),
             "late": int(np.sum(st.n_late)),
             "invalid": self._n_invalid,
+            "rejected": self._n_rejected,
             "devices_reporting": int(np.sum(st.has)),
         }
+        if self.health is not None:
+            out.update(self.health.counts())
+        return out

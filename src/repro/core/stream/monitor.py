@@ -36,10 +36,11 @@ from typing import Dict, Optional, Union
 import numpy as np
 
 from repro.core.stream.estimators import StreamCorrections
+from repro.core.stream.health import HealthPolicy
 from repro.core.stream.ingest import IngestCore, IngestReport
 from repro.core.stream.snapshot import FleetEnergy, MonitorSnapshot
 
-__all__ = ["FleetEnergy", "IngestReport", "MonitorService"]
+__all__ = ["FleetEnergy", "HealthPolicy", "IngestReport", "MonitorService"]
 
 
 class MonitorService:
@@ -81,6 +82,9 @@ class MonitorService:
                  drift_tau_s: float = 30.0,
                  drift_rel: float = 0.25,
                  drift_abs_w: float = 5.0,
+                 strict_ids: bool = True,
+                 health: Optional[HealthPolicy] = None,
+                 health_every_s: float = 0.0,
                  backend: Optional[str] = None):
         self._core = IngestCore(
             n_devices, corrections=corrections, labels=labels,
@@ -88,7 +92,9 @@ class MonitorService:
             envelope_w=envelope_w, ring_slots=ring_slots,
             period_bins=period_bins, min_runs=min_runs,
             silent_after_s=silent_after_s, drift_tau_s=drift_tau_s,
-            drift_rel=drift_rel, drift_abs_w=drift_abs_w, backend=backend)
+            drift_rel=drift_rel, drift_abs_w=drift_abs_w,
+            strict_ids=strict_ids, health=health,
+            health_every_s=health_every_s, backend=backend)
         self._snap: Optional[MonitorSnapshot] = None
 
     # -- layer access ------------------------------------------------------
@@ -212,6 +218,25 @@ class MonitorService:
         return self.snapshot().flags(t)
 
     flags.__doc__ = MonitorSnapshot.flags.__doc__
+
+    # -- health ------------------------------------------------------------
+    @property
+    def health(self):
+        """The live :class:`~repro.core.stream.health.HealthTracker`
+        (None unless constructed with a ``health=`` policy)."""
+        return self._core.health
+
+    @property
+    def health_policy(self):
+        return self._core.health_policy
+
+    def update_health(self, t_now: float) -> bool:
+        return self._core.update_health(t_now)
+
+    update_health.__doc__ = IngestCore.update_health.__doc__
+
+    def health_summary(self) -> Dict[str, float]:
+        return self.snapshot().health_summary()
 
     @property
     def counters(self) -> Dict[str, int]:

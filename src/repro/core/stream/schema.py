@@ -30,7 +30,10 @@ import numpy as np
 
 #: Bump whenever a registry below changes shape or meaning.  Restores
 #: refuse manifests written under a different version.
-SCHEMA_VERSION = 1
+#: v2: health-machine arrays (``health.*``, present only when the
+#: monitor tracks health) + ``strict_ids``/``health``/``health_every_s``
+#: /``next_health_t``/``n_rejected`` meta.
+SCHEMA_VERSION = 2
 
 # -- field registries (name -> expected dtype kind) -------------------------
 DEVICE_STATE_FIELDS = {
@@ -65,6 +68,11 @@ CONFIG_FIELDS = {
 #: label names recorded in the manifest meta.
 MOMENT_FIELDS = {"n": "i8", "mean": "f8", "m2": "f8",
                  "mean_abs": "f8", "max_abs": "f8"}
+
+#: health state machine arrays; present only when the monitor was built
+#: with a :class:`~repro.core.stream.health.HealthPolicy`.
+HEALTH_FIELDS = {"code": "i1", "since_t": "f8", "clean_t": "f8",
+                 "clean": "b1", "last_n_out": "i8", "n_quarantines": "i8"}
 
 
 class SchemaError(RuntimeError):
@@ -165,6 +173,10 @@ def pack_monitor(mon) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
         arrays[f"moments.{k}"] = np.array(
             [getattr(core._moments[lb], k) for lb in moment_labels],
             dtype=dtype).reshape(len(moment_labels))
+    if core.health is not None:
+        for k, v in check_registry(core.health, HEALTH_FIELDS,
+                                   "HealthTracker").items():
+            arrays[f"health.{k}"] = v.copy()
     meta = {
         "schema_version": SCHEMA_VERSION,
         "n_devices": int(core.n_devices),
@@ -178,6 +190,14 @@ def pack_monitor(mon) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
         "drift_rel": float(core.drift_rel),
         "drift_abs_w": float(core.drift_abs_w),
         "n_invalid": int(core._n_invalid),
+        "n_rejected": int(core._n_rejected),
+        "strict_ids": bool(core.strict_ids),
+        "health": (None if core.health_policy is None
+                   else core.health_policy.to_meta()),
+        "health_every_s": float(core.health_every_s),
+        # -inf (never evaluated) is not JSON-able; None stands in
+        "next_health_t": (None if core._next_health_t == -np.inf
+                          else float(core._next_health_t)),
         "epoch": int(core.epoch),
         "label_names": list(core._label_names),
         "moment_labels": moment_labels,
@@ -196,6 +216,8 @@ def expected_keys(meta: Dict[str, Any]) -> set:
     keys |= {f"corrections.{k}" for k in CORRECTION_FIELDS}
     keys |= {f"config.{k}" for k in CONFIG_FIELDS}
     keys |= {f"moments.{k}" for k in MOMENT_FIELDS}
+    if meta.get("health") is not None:
+        keys |= {f"health.{k}" for k in HEALTH_FIELDS}
     return keys
 
 
@@ -211,6 +233,7 @@ def unpack_monitor(arrays: Dict[str, np.ndarray], meta: Dict[str, Any],
     """
     from repro.core.fleet_engine import StreamingMoments
     from repro.core.stream.estimators import StreamCorrections
+    from repro.core.stream.health import HealthPolicy
     from repro.core.stream.monitor import MonitorService
 
     version = meta.get("schema_version")
@@ -232,6 +255,8 @@ def unpack_monitor(arrays: Dict[str, np.ndarray], meta: Dict[str, Any],
         for k in CORRECTION_FIELDS})
     names = np.asarray(meta["label_names"], dtype=object)
     labels = names[arrays["config.label_codes"]]
+    policy = (None if meta["health"] is None
+              else HealthPolicy.from_meta(meta["health"]))
     mon = MonitorService(
         n, corrections=corr, labels=labels,
         integration="trapezoid" if meta["trapezoid"] else "rectangle",
@@ -241,6 +266,9 @@ def unpack_monitor(arrays: Dict[str, np.ndarray], meta: Dict[str, Any],
         drift_tau_s=meta["drift_tau_s"],
         drift_rel=meta["drift_rel"],
         drift_abs_w=meta["drift_abs_w"],
+        strict_ids=bool(meta["strict_ids"]),
+        health=policy,
+        health_every_s=float(meta["health_every_s"]),
         backend=backend if backend is not None else meta["backend"])
     core = mon._core
     for k in DEVICE_STATE_FIELDS:
@@ -265,6 +293,12 @@ def unpack_monitor(arrays: Dict[str, np.ndarray], meta: Dict[str, Any],
         sm.mean_abs = float(arrays["moments.mean_abs"][i])
         sm.max_abs = float(arrays["moments.max_abs"][i])
         core._moments[lb] = sm
+    if core.health is not None:
+        for k in HEALTH_FIELDS:
+            setattr(core.health, k, arrays[f"health.{k}"].copy())
     core._n_invalid = int(meta["n_invalid"])
+    core._n_rejected = int(meta["n_rejected"])
+    core._next_health_t = (-np.inf if meta["next_health_t"] is None
+                           else float(meta["next_health_t"]))
     core.epoch = int(meta["epoch"])
     return mon

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.engine_backend import numpy_backend as _nb
 from repro.core.fleet_engine import StreamingMoments
+from repro.core.stream.health import QUARANTINED, STALE
 from repro.core.stream.state import DeviceState
 
 
@@ -54,6 +55,17 @@ class FleetEnergy:
     model: per-device sigma is the shunt tolerance of the energy
     (calibrated devices use the calibrated floor), aggregated both as
     independent (1/√N) and worst-case (correlated lot) bounds.
+
+    Degraded-mode accounting (monitors with health tracking): devices
+    quarantined by the health machine are excluded from ``total_j`` and
+    the sigmas (their ``per_device_j`` rows remain visible), the sigma
+    bounds are widened by the covered-but-excluded fraction
+    (``× n_covered / n_included`` — the monitor's honest admission that
+    it is extrapolating over silent/anomalous devices), and ``coverage``
+    reports the included fraction of the fleet so a reader can tell a
+    confident answer from a degraded one.  Without health tracking
+    ``coverage`` is simply the covered fraction and ``n_quarantined``
+    is 0.
     """
 
     t: Optional[float]
@@ -64,6 +76,8 @@ class FleetEnergy:
     n_reporting: int
     sigma_independent_j: float
     sigma_worstcase_j: float
+    coverage: float = 1.0
+    n_quarantined: int = 0
 
 
 def _frozen(arr: np.ndarray) -> np.ndarray:
@@ -88,7 +102,7 @@ class MonitorSnapshot:
     def __init__(self, *, epoch, n_devices, backend, be, state, ring_view,
                  ring_slots, period_est, moments, counters, corrections,
                  labels, win_a, win_b, max_hold, silent_after_s,
-                 drift_tau_s, drift_rel, drift_abs_w):
+                 drift_tau_s, drift_rel, drift_abs_w, health_code=None):
         self.epoch = epoch
         self.n_devices = n_devices
         self.backend = backend
@@ -108,6 +122,7 @@ class MonitorSnapshot:
         self.drift_tau_s = drift_tau_s
         self.drift_rel = drift_rel
         self.drift_abs_w = drift_abs_w
+        self._health_code = health_code      # [N] i1 codes or None
         self._flavor_cache: Dict[bool, tuple] = {}
 
     @classmethod
@@ -135,7 +150,9 @@ class MonitorSnapshot:
             max_hold=_frozen(core._max_hold),
             silent_after_s=core.silent_after_s,
             drift_tau_s=core.drift_tau_s, drift_rel=core.drift_rel,
-            drift_abs_w=core.drift_abs_w)
+            drift_abs_w=core.drift_abs_w,
+            health_code=(_frozen(core.health.code)
+                         if core.health is not None else None))
 
     # -- batched kernels --------------------------------------------------
     def _flavor(self, corrected: bool):
@@ -203,21 +220,47 @@ class MonitorSnapshot:
                         0.0, out)
 
     # -- result assembly (shared with the batched executor) ---------------
+    @property
+    def active_mask(self) -> Optional[np.ndarray]:
+        """[N] bool, False where the health machine quarantined the
+        device — or None when health tracking is off."""
+        if self._health_code is None:
+            return None
+        return self._health_code != QUARANTINED
+
     def fleet_from_rows(self, t: Optional[float], corrected: bool,
                         e: np.ndarray, covered: np.ndarray) -> FleetEnergy:
         """Fold one [N] energy row into a :class:`FleetEnergy` (the
-        reductions both the direct and the batched-executor paths use)."""
+        reductions both the direct and the batched-executor paths use).
+        See :class:`FleetEnergy` for the degraded-mode exclusion and
+        sigma-widening semantics on health-tracked monitors."""
         from repro.core.telemetry import (CALIBRATED_TOLERANCE,
                                           SHUNT_TOLERANCE)
         tol = np.where(self.corrections.calibrated,
                        CALIBRATED_TOLERANCE, SHUNT_TOLERANCE)
-        sig = np.where(covered, tol * np.abs(np.nan_to_num(e)), 0.0)
-        total = float(np.nansum(np.where(covered, e, 0.0)))
+        active = self.active_mask
+        if active is None:
+            include, n_q = covered, 0
+        else:
+            include = covered & active
+            n_q = int(np.sum(covered & ~active))
+        sig = np.where(include, tol * np.abs(np.nan_to_num(e)), 0.0)
+        total = float(np.nansum(np.where(include, e, 0.0)))
+        n_inc = int(np.sum(include))
+        if n_q == 0:
+            si = float(np.sqrt(np.sum(sig ** 2)))
+            sw = float(np.sum(sig))
+        elif n_inc:
+            widen = (n_inc + n_q) / n_inc
+            si = float(widen * np.sqrt(np.sum(sig ** 2)))
+            sw = float(widen * np.sum(sig))
+        else:               # every covered device quarantined: the
+            si = sw = np.inf        # answer carries no information
         return FleetEnergy(
             t=t, corrected=corrected, per_device_j=e, covered=covered,
             total_j=total, n_reporting=int(np.sum(self.state.has)),
-            sigma_independent_j=float(np.sqrt(np.sum(sig ** 2))),
-            sigma_worstcase_j=float(np.sum(sig)))
+            sigma_independent_j=si, sigma_worstcase_j=sw,
+            coverage=n_inc / self.n_devices, n_quarantined=n_q)
 
     @staticmethod
     def between_from_rows(e0, c0, e1, c1) -> Tuple[np.ndarray, np.ndarray]:
@@ -277,7 +320,10 @@ class MonitorSnapshot:
         its covered-device count, total energy and the Chan–Welford
         moments of the per-device energies; groups with no covered
         device (including every group of a never-ingested monitor)
-        report nan moments."""
+        report nan moments.  On health-tracked monitors quarantined
+        devices are excluded from every aggregate (and reported per
+        label as ``n_quarantined``, 0 otherwise) — the per-label
+        counterpart of :class:`FleetEnergy`'s degraded mode."""
         if (t0 is None) != (t1 is None):
             raise ValueError("pass both t0 and t1, or neither")
         st = self.state
@@ -287,9 +333,14 @@ class MonitorSnapshot:
         else:
             e, covered = self.energy_between(t0, t1, corrected)
             covered = covered & st.has
+        active = self.active_mask
         out: Dict[str, Dict[str, float]] = {}
         for label in np.unique(self.labels):
             sel = (self.labels == label) & covered
+            n_q = 0
+            if active is not None:
+                n_q = int(np.sum(sel & ~active))
+                sel = sel & active
             vals = e[sel]
             sm = StreamingMoments().update(vals, self._be)
             stats = sm.stats()
@@ -297,6 +348,7 @@ class MonitorSnapshot:
             out[str(label)] = {
                 "n_devices": int(np.sum(self.labels == label)),
                 "n_covered": n_cov,
+                "n_quarantined": n_q,
                 "total_j": float(np.sum(vals)) if vals.size else 0.0,
                 "mean_j": stats["mean_err"] if n_cov else float("nan"),
                 "std_j": stats["std_err"] if n_cov else float("nan"),
@@ -325,7 +377,11 @@ class MonitorSnapshot:
           envelope;
         * ``drifting`` — the recent EWMA of corrected readings diverges
           from the device's lifetime mean corrected power;
-        * ``reporting`` — has ever reported.
+        * ``reporting`` — has ever reported;
+        * ``stale`` / ``quarantined`` — the health machine's current
+          state codes (all-False on monitors without health tracking:
+          the instantaneous flags above are always available, the
+          stateful machine is opt-in).
         """
         st = self.state
         if t is None:
@@ -343,11 +399,37 @@ class MonitorSnapshot:
         drifting = (st.has & (dur > 2.0 * self.drift_tau_s)
                     & (dev > np.maximum(self.drift_rel * np.abs(mean_p),
                                         self.drift_abs_w)))
+        code = self._health_code
         return {
             "reporting": st.has.copy(),
             "silent": silent,
             "anomalous": st.n_out > 0,
             "drifting": np.where(np.isfinite(mean_p), drifting, False),
+            "stale": (code == STALE if code is not None
+                      else np.zeros(self.n_devices, dtype=bool)),
+            "quarantined": (code == QUARANTINED if code is not None
+                            else np.zeros(self.n_devices, dtype=bool)),
+        }
+
+    def health_summary(self) -> Dict[str, float]:
+        """Fleet-level health digest: state-machine population counts
+        plus the coverage fraction degraded-mode queries report.  On
+        monitors without health tracking every device counts healthy
+        and ``tracked`` is False."""
+        st = self.state
+        n = self.n_devices
+        code = self._health_code
+        n_stale = int(np.sum(code == STALE)) if code is not None else 0
+        n_quar = int(np.sum(code == QUARANTINED)) if code is not None else 0
+        return {
+            "tracked": code is not None,
+            "epoch": int(self.epoch),
+            "n_devices": n,
+            "n_reporting": int(np.sum(st.has)),
+            "n_healthy": n - n_stale - n_quar,
+            "n_stale": n_stale,
+            "n_quarantined": n_quar,
+            "coverage": (n - n_quar) / n,
         }
 
     @property

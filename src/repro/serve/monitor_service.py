@@ -250,11 +250,17 @@ class MonitorQueryService:
     def _by_label_from_rows(snap: MonitorSnapshot, e: np.ndarray,
                             covered: np.ndarray) -> Dict[str, Dict[str, float]]:
         """The by-label grouping over a precomputed energy row (same
-        reductions as ``MonitorSnapshot.by_label``)."""
+        reductions — including the degraded-mode quarantine exclusion —
+        as ``MonitorSnapshot.by_label``)."""
         from repro.core.fleet_engine import StreamingMoments
+        active = snap.active_mask
         out: Dict[str, Dict[str, float]] = {}
         for label in np.unique(snap.labels):
             sel = (snap.labels == label) & covered
+            n_q = 0
+            if active is not None:
+                n_q = int(np.sum(sel & ~active))
+                sel = sel & active
             vals = e[sel]
             sm = StreamingMoments().update(vals, snap._be)
             stats = sm.stats()
@@ -262,6 +268,7 @@ class MonitorQueryService:
             out[str(label)] = {
                 "n_devices": int(np.sum(snap.labels == label)),
                 "n_covered": n_cov,
+                "n_quarantined": n_q,
                 "total_j": float(np.sum(vals)) if vals.size else 0.0,
                 "mean_j": stats["mean_err"] if n_cov else float("nan"),
                 "std_j": stats["std_err"] if n_cov else float("nan"),

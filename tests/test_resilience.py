@@ -1,0 +1,723 @@
+"""Fault-domain resilience (ISSUE 9).
+
+Six groups:
+
+* fault injection — ``FaultSpec`` validation, per-slab determinism of
+  the injector (slab ``seq`` faults identically regardless of replay
+  history), injection counts surfaced by ``replay``, and the legacy
+  knob / spec equivalence;
+* hardened ingest — out-of-range ids (strict raise vs reject-and-count),
+  non-finite timestamps, all-rejected slabs bumping the epoch exactly
+  once, duplicates straddling a checkpoint boundary;
+* the health machine — healthy → stale → quarantined transitions on the
+  flag criteria, clean-streak recovery with dwell, and the opt-in
+  default changing nothing;
+* degraded-mode queries — quarantined devices excluded from fleet and
+  by-label aggregates, sigma widening, honest coverage, inf bounds when
+  nothing trustworthy remains;
+* checkpoint hardening — truncated ``.npy``, garbled/missing manifests
+  and partial writes raise typed ``CheckpointError``; ``fallback=True``
+  restores the newest complete generation;
+* the crash-recovery supervisor — a run killed at arbitrary slab
+  boundaries under every fault knob at once restores, resumes, and
+  answers every query *bitwise* identically to an uninterrupted run, on
+  every available backend.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import load as loads
+from repro.core.fleet_engine import SensorBank
+from repro.core.stream import (QUARANTINED, STALE, CheckpointError,
+                               FaultInjector, FaultSpec, HealthPolicy,
+                               MissingCheckpointError, MonitorService,
+                               MonitorSupervisor, StreamCorrections,
+                               replay, restore_monitor, save_monitor)
+
+
+@pytest.fixture(params=["numpy", "jax"])
+def backend(request):
+    from repro.core.engine_backend import available_backends
+    if request.param not in available_backends():
+        pytest.skip(f"backend '{request.param}' not available")
+    return request.param
+
+
+def _corr(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return StreamCorrections(
+        gain=rng.uniform(0.9, 1.1, n), offset_w=rng.uniform(-3.0, 3.0, n),
+        time_shift_s=rng.uniform(-0.05, 0.0, n),
+        baseline_w=rng.uniform(0.0, 5.0, n),
+        ref_period_s=np.full(n, 0.1),
+        calibrated=rng.random(n) < 0.5)
+
+
+def _monitor(n, backend="numpy", seed=0, **kw):
+    labels = np.array(["train", "serve", "idle"], dtype=object)[
+        np.arange(n) % 3]
+    mon = MonitorService(n, corrections=_corr(n, seed), labels=labels,
+                         max_hold_s=2.0, ring_slots=8, backend=backend,
+                         **kw)
+    mon.set_windows(0.5, 2.5)
+    return mon
+
+
+def _slabs(n, n_slabs=8, seed=0):
+    """Deterministic messy poll slabs (0.5 s of stream each)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    t0 = 0.0
+    for _ in range(n_slabs):
+        k = int(rng.integers(3 * n, 6 * n))
+        dev = rng.integers(0, n, k).astype(np.int64)
+        t = t0 + np.sort(rng.uniform(0.0, 0.5, k))
+        v = 80.0 + 40.0 * rng.random(k)
+        perm = rng.permutation(k)
+        out.append((dev[perm], t[perm], v[perm]))
+        t0 += 0.5
+    return out
+
+
+def _fingerprint(mon):
+    """Every query family + the ingest counters, for bitwise comparison."""
+    fe = mon.fleet_energy(t=1.7)
+    eb = mon.energy_between(0.9, 1.9)
+    return {
+        "fleet_per_device": fe.per_device_j,
+        "fleet_covered": fe.covered,
+        "fleet_total": np.float64(fe.total_j),
+        "fleet_coverage": np.float64(fe.coverage),
+        "fleet_n_q": np.int64(fe.n_quarantined),
+        "fleet_latest": mon.fleet_energy().per_device_j,
+        "between_e": eb[0], "between_cov": eb[1],
+        "window": mon.window_energy(t=1.8),
+        "periods": mon.update_period_s(),
+        **{f"by_label.{k}.{m}": np.float64(v)
+           for k, d in mon.by_label().items() for m, v in d.items()},
+        **{f"flags.{k}": v for k, v in mon.flags(t=2.0).items()},
+        **{f"counters.{k}": np.int64(v) for k, v in mon.counters.items()},
+        **{f"health.{k}": np.float64(v)
+           for k, v in mon.health_summary().items()},
+    }
+
+
+def _assert_fingerprints_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="dup_fraction"):
+        FaultSpec(dup_fraction=1.5)
+    with pytest.raises(ValueError, match="clock_drift"):
+        FaultSpec(clock_drift=1.0)
+    with pytest.raises(ValueError, match="clock_skew_s"):
+        FaultSpec(clock_skew_s=-0.1)
+    with pytest.raises(ValueError, match="restart"):
+        FaultSpec(restart_every_s=-1.0)
+    assert not FaultSpec().any
+    assert FaultSpec(corrupt_fraction=0.1).any
+
+
+ALL_FAULTS = FaultSpec(shuffle=True, dup_fraction=0.10, drop_fraction=0.05,
+                       delay_fraction=0.10, clock_drift=0.01,
+                       clock_skew_s=0.02, restart_every_s=0.8,
+                       restart_blackout_s=0.05, corrupt_fraction=0.05,
+                       dropout_fraction=0.25, dropout_after=0.4, seed=7)
+
+
+def test_fault_injector_slab_decisions_are_seq_keyed():
+    """Slab ``seq`` injects identical faults no matter what came before
+    — the property crash-recovery replays rely on."""
+    spec = FaultSpec(drop_fraction=0.2, corrupt_fraction=0.2,
+                     dup_fraction=0.2, shuffle=True, seed=3)
+    slabs = _slabs(6, n_slabs=6, seed=1)
+    a = FaultInjector(spec, 6, 0.0, 3.0)
+    full = [a.apply(i, *s) for i, s in enumerate(slabs)]
+    b = FaultInjector(spec, 6, 0.0, 3.0)
+    only3 = b.apply(3, *slabs[3])
+    for got, want in zip(only3, full[3]):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_fault_injector_plan_is_deterministic_and_logged():
+    a = FaultInjector(ALL_FAULTS, 8, 0.0, 4.0)
+    b = FaultInjector(ALL_FAULTS, 8, 0.0, 4.0)
+    np.testing.assert_array_equal(a.log.drift_rate, b.log.drift_rate)
+    np.testing.assert_array_equal(a.log.skew_s, b.log.skew_s)
+    np.testing.assert_array_equal(a.log.dropout_t, b.log.dropout_t)
+    np.testing.assert_array_equal(a.log.restarts, b.log.restarts)
+    assert np.isfinite(a.log.dropout_t).any()      # someone died
+    dead = a.log.dropout_t[np.isfinite(a.log.dropout_t)]
+    assert np.all(dead >= 0.0 + 0.4 * 4.0)         # after dropout_after
+    s = a.log.summary()
+    json.dumps(s)                                  # machine-readable
+    assert s["n_devices"] == 8 and s["seed"] == 7
+
+
+def test_replay_reports_injection_counts():
+    bank = _bank(6)
+    mon = MonitorService(6, strict_ids=False)
+    rep = replay(bank, mon, 0.0, 1.0, faults=ALL_FAULTS)
+    inj = rep["injected"]
+    assert inj["dropped"] > 0 and inj["duplicated"] > 0
+    assert inj["corrupt_value"] + inj["corrupt_id"] + inj["corrupt_time"] > 0
+    # corrupted ids reach the monitor and are rejected-and-counted there
+    # (duplication can re-emit a corrupted sample, hence >=)
+    assert rep["rejected"] >= inj["corrupt_id"] > 0
+    clean = MonitorService(6)
+    rep2 = replay(bank, clean, 0.0, 1.0)
+    assert all(v == 0 for v in rep2["injected"].values())
+
+
+def test_replay_faults_and_legacy_knobs_conflict():
+    bank = _bank(4)
+    with pytest.raises(ValueError, match="not both"):
+        replay(bank, MonitorService(4), 0.0, 1.0, shuffle=True,
+               faults=FaultSpec(shuffle=True))
+    with pytest.raises(ValueError, match="grid"):
+        replay(bank, MonitorService(4), 0.0, 1.0,
+               faults=FaultSpec(drop_fraction=0.1), grid=True)
+
+
+def test_legacy_knobs_equal_explicit_spec():
+    bank = _bank(5)
+    a = MonitorService(5)
+    replay(bank, a, 0.0, 1.0, shuffle=True, dup_fraction=0.2,
+           drop_fraction=0.1, seed=11)
+    b = MonitorService(5)
+    replay(bank, b, 0.0, 1.0,
+           faults=FaultSpec(shuffle=True, dup_fraction=0.2,
+                            drop_fraction=0.1, seed=11))
+    np.testing.assert_array_equal(a.state.energy_j, b.state.energy_j)
+    np.testing.assert_array_equal(a.state.win_corr_j, b.state.win_corr_j)
+
+
+def _bank(n, seed=0):
+    bank = SensorBank.from_catalog(["a100"] * n, seeds=np.arange(n) + seed)
+    tl = loads.step(0.1, 0.7, 210.0, idle_w=60.0)
+    bank.attach(tl, t_end=tl.t_end + 1.0)
+    return bank
+
+
+def test_adversarial_mix_labels_and_banks():
+    assert set(loads.ADVERSARIAL_MIX) <= set(loads.SCENARIOS)
+    assert set(loads.ADVERSARIAL_MIX) <= set(loads.SCENARIO_BANKS)
+    ws = loads.mixed_fleet_workloads(40, loads.ADVERSARIAL_MIX, seed=5,
+                                     as_bank=True)
+    assert set(ws.scenarios) <= set(loads.ADVERSARIAL_MIX)
+
+
+# ---------------------------------------------------------------------------
+# hardened ingest
+# ---------------------------------------------------------------------------
+
+def test_out_of_range_ids_strict_default_raises():
+    mon = MonitorService(3)
+    with pytest.raises(ValueError, match="out of range"):
+        mon.ingest(np.array([0, 7]), np.array([0.1, 0.2]),
+                   np.array([100.0, 100.0]))
+
+
+def test_out_of_range_ids_rejected_and_counted():
+    mon = MonitorService(3, strict_ids=False)
+    rep = mon.ingest(np.array([0, 7, 1, -1]),
+                     np.array([0.1, 0.2, 0.3, 0.4]),
+                     np.array([100.0, 100.0, 90.0, 80.0]))
+    assert rep.rejected == 2
+    assert rep.accepted == 2
+    assert mon.counters["rejected"] == 2
+    assert mon.state.has[0] and mon.state.has[1] and not mon.state.has[2]
+
+
+def test_all_rejected_slab_bumps_epoch_exactly_once():
+    mon = MonitorService(3, strict_ids=False)
+    e0 = mon.epoch
+    rep = mon.ingest(np.array([5, 9]), np.array([0.1, 0.2]),
+                     np.array([100.0, 100.0]))
+    assert rep.accepted == 0 and rep.rejected == 2
+    assert mon.epoch == e0 + 1
+    assert not mon.state.has.any()
+
+
+def test_nonfinite_timestamps_and_values_dropped():
+    mon = MonitorService(2)
+    rep = mon.ingest(np.array([0, 0, 1, 1]),
+                     np.array([0.1, np.nan, 0.1, np.inf]),
+                     np.array([100.0, 100.0, np.nan, 90.0]))
+    assert rep.accepted == 1                      # only (0, 0.1, 100)
+    assert rep.invalid == 3
+    assert np.isfinite(mon.state.energy_j).all()
+    fp = mon.fleet_energy()
+    assert np.isfinite(fp.total_j)
+
+
+def test_grid_ingest_rejects_bad_device_rows():
+    mon = MonitorService(3, strict_ids=False)
+    ts = 0.1 + 0.1 * np.arange(4)
+    vals = np.full((2, 4), 100.0)
+    rep = mon.ingest_grid(np.array([0, 9]), ts, vals)
+    assert rep.rejected == 4                      # one bad row × 4 ticks
+    assert mon.state.has[0] and not mon.state.has[1:].any()
+    mon2 = MonitorService(3)
+    with pytest.raises(ValueError, match="out of range"):
+        mon2.ingest_grid(np.array([0, 9]), ts, vals)
+
+
+def test_duplicates_straddling_checkpoint_boundary(tmp_path):
+    """Samples re-sent after a restore (the at-least-once overlap a
+    resumed collector produces) are deduplicated, not double-counted."""
+    a_dev = np.repeat(np.arange(3), 10).astype(np.int64)
+    a_ts = np.tile(0.1 * np.arange(10), 3)
+    a_vs = np.full(30, 120.0)
+    b_dev = np.repeat(np.arange(3), 10).astype(np.int64)
+    b_ts = np.tile(1.0 + 0.1 * np.arange(10), 3)
+    b_vs = np.full(30, 95.0)
+
+    ref = MonitorService(3)
+    ref.ingest(a_dev, a_ts, a_vs)
+    ref.ingest(b_dev, b_ts, b_vs)
+
+    mon = MonitorService(3)
+    mon.ingest(a_dev, a_ts, a_vs)
+    save_monitor(mon, str(tmp_path / "ck"))
+    clone = restore_monitor(str(tmp_path / "ck"))
+    # the resumed stream replays the tail of slab A before slab B
+    clone.ingest(np.concatenate([a_dev[-9:], b_dev]),
+                 np.concatenate([a_ts[-9:], b_ts]),
+                 np.concatenate([a_vs[-9:], b_vs]))
+    np.testing.assert_array_equal(clone.state.energy_j, ref.state.energy_j)
+    np.testing.assert_array_equal(clone.state.win_corr_j,
+                                  ref.state.win_corr_j)
+    # the replayed tail: 1 exact duplicate of the newest sample + 8
+    # older-than-newest stragglers, all counted instead of re-folded
+    extra = (clone.counters["duplicates"] + clone.counters["late"]
+             - ref.counters["duplicates"] - ref.counters["late"])
+    assert extra == 9
+
+
+# ---------------------------------------------------------------------------
+# the health machine
+# ---------------------------------------------------------------------------
+
+def _health_mon(n=3, **pol):
+    return MonitorService(n, silent_after_s=0.5,
+                          health=HealthPolicy(**pol))
+
+
+def _steady(mon, devs, t0, t1, p=100.0, dt=0.1):
+    ts = np.arange(t0, t1, dt)
+    devs = np.asarray(list(devs), np.int64)
+    dev = np.repeat(devs, ts.size)
+    mon.ingest(dev, np.tile(ts, devs.size), np.full(dev.size, p))
+
+
+def test_health_demotion_chain_silent_to_quarantined():
+    mon = _health_mon()
+    _steady(mon, [0, 1, 2], 0.0, 1.0)
+    assert mon.health_summary()["n_quarantined"] == 0
+    _steady(mon, [0], 1.0, 1.3)
+    # device 1, 2 silent since 0.9; thresholds: stale > 0.5, dead > 1.5
+    assert mon.update_health(1.6)
+    code = mon.health.code
+    assert code[0] == 0 and code[1] == STALE and code[2] == STALE
+    assert mon.update_health(2.6)
+    assert (mon.health.code[1:] == QUARANTINED).all()
+    assert mon.counters["n_quarantined"] == 2
+    s = mon.health_summary()
+    assert s["tracked"] and s["n_quarantined"] == 2
+    assert s["coverage"] == pytest.approx(1.0 / 3.0)
+
+
+def test_health_recovery_needs_clean_dwell():
+    mon = _health_mon(2, recover_after_s=1.0)
+    _steady(mon, [0, 1], 0.0, 1.0)
+    mon.update_health(3.0)
+    assert (mon.health.code == QUARANTINED).all()
+    _steady(mon, [0, 1], 3.0, 3.3)
+    mon.update_health(3.4)                        # clean streak starts
+    assert (mon.health.code == QUARANTINED).all()
+    _steady(mon, [0, 1], 3.3, 4.6)
+    mon.update_health(4.6)                        # dwell >= 1.0 s clean
+    assert (mon.health.code == 0).all()
+    assert mon.counters["n_quarantined"] == 0
+    assert (mon.health.n_quarantines == 1).all()  # lifetime count sticks
+
+
+def test_health_instant_recovery_without_dwell():
+    mon = _health_mon()
+    _steady(mon, [0, 1, 2], 0.0, 1.0)
+    mon.update_health(3.0)
+    _steady(mon, [0, 1, 2], 3.0, 3.5)
+    mon.update_health(3.5)
+    assert (mon.health.code == 0).all()
+
+
+def test_health_update_bumps_epoch_only_on_change():
+    mon = _health_mon()
+    _steady(mon, [0, 1, 2], 0.0, 1.0)
+    e = mon.epoch
+    assert not mon.update_health(1.05)            # nothing changed
+    assert mon.epoch == e
+    assert mon.update_health(3.0)
+    assert mon.epoch == e + 1
+
+
+def test_health_opt_in_default_changes_nothing():
+    mon = MonitorService(3)
+    _steady(mon, [0], 0.0, 1.0)
+    assert mon.health is None and mon.health_policy is None
+    assert "n_quarantined" not in mon.counters
+    s = mon.health_summary()
+    assert not s["tracked"] and s["coverage"] == 1.0
+    fl = mon.flags(t=5.0)
+    assert not fl["stale"].any() and not fl["quarantined"].any()
+    fe = mon.fleet_energy()
+    assert fe.coverage == 1.0 and fe.n_quarantined == 0
+
+
+def test_health_policy_validation_and_meta_roundtrip():
+    with pytest.raises(ValueError):
+        HealthPolicy(stale_factor=0.0)
+    with pytest.raises(ValueError):
+        HealthPolicy(stale_factor=4.0, quarantine_factor=2.0)
+    with pytest.raises(ValueError):
+        HealthPolicy(recover_after_s=-1.0)
+    pol = HealthPolicy(stale_factor=1.5, recover_after_s=2.0)
+    assert HealthPolicy.from_meta(pol.to_meta()) == pol
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode queries
+# ---------------------------------------------------------------------------
+
+def test_quarantined_devices_excluded_with_widened_bounds():
+    from repro.core.telemetry import CALIBRATED_TOLERANCE, SHUNT_TOLERANCE
+    n = 4
+    mon = MonitorService(n, silent_after_s=0.5, health=HealthPolicy())
+    _steady(mon, range(n), 0.0, 2.01, p=100.0, dt=0.1)
+    base = mon.fleet_energy()
+    assert base.coverage == 1.0 and base.n_quarantined == 0
+    _steady(mon, [0, 1, 2], 2.0, 4.0, p=100.0, dt=0.1)
+    mon.update_health(4.0)       # device 3 silent 2.0 s > 3 × 0.5 s
+    fe = mon.fleet_energy()
+    assert fe.n_quarantined == 1
+    assert fe.coverage == pytest.approx(3 / 4)
+    # the excluded device's energy is out of the total but its row stays
+    assert fe.total_j == pytest.approx(float(
+        np.sum(fe.per_device_j[:3])))
+    assert fe.per_device_j[3] > 0.0
+    # bounds widen by (n_included + n_quarantined) / n_included
+    tol = np.where(mon.corrections.calibrated,
+                   CALIBRATED_TOLERANCE, SHUNT_TOLERANCE)
+    sig = tol[:3] * np.abs(fe.per_device_j[:3])
+    widen = 4.0 / 3.0
+    assert fe.sigma_independent_j == pytest.approx(
+        widen * float(np.sqrt(np.sum(sig ** 2))))
+    assert fe.sigma_worstcase_j == pytest.approx(
+        widen * float(np.sum(sig)))
+
+
+def test_all_quarantined_reports_inf_bounds():
+    mon = MonitorService(2, silent_after_s=0.2, health=HealthPolicy())
+    _steady(mon, [0, 1], 0.0, 0.5)
+    mon.update_health(10.0)
+    fe = mon.fleet_energy()
+    assert fe.coverage == 0.0 and fe.n_quarantined == 2
+    assert fe.total_j == 0.0
+    assert np.isinf(fe.sigma_independent_j)
+    assert np.isinf(fe.sigma_worstcase_j)
+
+
+def test_by_label_reports_per_label_quarantine():
+    mon = _monitor(6, silent_after_s=0.5, health=HealthPolicy())
+    _steady(mon, range(6), 0.0, 1.01)
+    _steady(mon, [0, 1, 2], 1.0, 3.0)             # labels t/s/i stay alive
+    mon.update_health(3.0)
+    bl = mon.by_label()
+    assert sum(d["n_quarantined"] for d in bl.values()) == 3
+    for d in bl.values():
+        assert d["n_covered"] + d["n_quarantined"] <= d["n_devices"]
+    plain = _monitor(6)
+    _steady(plain, range(6), 0.0, 1.01)
+    assert all(d["n_quarantined"] == 0 for d in plain.by_label().values())
+
+
+def test_flags_surface_health_states():
+    mon = _health_mon()
+    _steady(mon, [0, 1, 2], 0.0, 1.0)
+    _steady(mon, [0], 1.0, 1.3)
+    mon.update_health(1.6)
+    fl = mon.flags(t=1.6)
+    np.testing.assert_array_equal(fl["stale"], mon.health.code == STALE)
+    np.testing.assert_array_equal(fl["quarantined"],
+                                  mon.health.code == QUARANTINED)
+
+
+def test_node_failure_fleet_bounded_error_and_honest_coverage():
+    """The acceptance scenario: half the fleet drops out permanently
+    mid-stream; quarantine keeps the fleet total an honest aggregate of
+    the surviving devices, with coverage reported."""
+    n = 8
+    spec = FaultSpec(dropout_fraction=0.5, dropout_after=0.4, seed=3)
+    # the injector plan spans [0, 3] so every death lands well before
+    # the stream ends at 4.0 — survivors are provably fresh at eval time
+    inj = FaultInjector(spec, n, 0.0, 3.0)
+    dead = np.isfinite(inj.log.dropout_t)
+    assert 0 < dead.sum() < n
+    mon = MonitorService(n, silent_after_s=0.2,
+                         health=HealthPolicy(), health_every_s=0.1)
+    powers = 100.0 + 10.0 * np.arange(n)
+    ts_all = 0.05 * np.arange(81)                 # [0, 4] at 50 ms
+    for seq in range(8):
+        sl = ts_all[(ts_all >= seq * 0.5) & (ts_all < (seq + 1) * 0.5)]
+        dev = np.repeat(np.arange(n), sl.size).astype(np.int64)
+        ts = np.tile(sl, n)
+        vs = powers[dev]
+        mon.ingest(*inj.apply(seq, dev, ts, vs))
+    mon.update_health(4.1)
+    code = mon.health.code
+    assert (code[dead] == QUARANTINED).all()
+    assert (code[~dead] == 0).all()
+    fe = mon.fleet_energy()
+    n_dead = int(dead.sum())
+    assert fe.n_quarantined == n_dead
+    assert fe.coverage == pytest.approx((n - n_dead) / n)
+    true_alive = float(np.sum(powers[~dead]) * 3.95)
+    assert fe.total_j == pytest.approx(true_alive, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening
+# ---------------------------------------------------------------------------
+
+def _saved(tmp_path, step=None, n=4):
+    mon = _monitor(n)
+    dev, ts, vs = _slabs(n, n_slabs=4, seed=2)[0]
+    mon.ingest(dev, ts, vs)
+    root = str(tmp_path / "ck")
+    save_monitor(mon, root, step=step)
+    return mon, root
+
+
+def test_missing_root_and_step_raise_missing_error(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_monitor(str(tmp_path / "nope"))
+    with pytest.raises(MissingCheckpointError):
+        restore_monitor(str(tmp_path / "nope"))
+    _, root = _saved(tmp_path, step=3)
+    with pytest.raises(MissingCheckpointError, match="step_9"):
+        restore_monitor(root, step=9)
+
+
+def test_truncated_array_raises_checkpoint_error(tmp_path):
+    _, root = _saved(tmp_path, step=1)
+    d = os.path.join(root, "step_1")
+    npys = sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+    victim = os.path.join(d, npys[0])
+    with open(victim, "rb") as f:
+        head = f.read(16)
+    with open(victim, "wb") as f:
+        f.write(head)                             # truncate mid-header
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        restore_monitor(root)
+
+
+def test_missing_array_and_manifest_raise_checkpoint_error(tmp_path):
+    _, root = _saved(tmp_path, step=1)
+    d = os.path.join(root, "step_1")
+    npys = sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+    os.remove(os.path.join(d, npys[0]))
+    with pytest.raises(CheckpointError, match="missing"):
+        restore_monitor(root)
+    os.remove(os.path.join(d, "manifest.json"))
+    with pytest.raises(CheckpointError, match="manifest.json missing"):
+        restore_monitor(root)
+
+
+def test_garbled_manifest_raises_checkpoint_error(tmp_path):
+    _, root = _saved(tmp_path, step=1)
+    with open(os.path.join(root, "step_1", "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(CheckpointError, match="unreadable manifest"):
+        restore_monitor(root)
+
+
+def test_fallback_restores_newest_complete_generation(tmp_path):
+    mon = _monitor(4)
+    slabs = _slabs(4, n_slabs=3, seed=2)
+    root = str(tmp_path / "ck")
+    mon.ingest(*slabs[0])
+    save_monitor(mon, root, step=1)
+    want = _fingerprint(mon)
+    mon.ingest(*slabs[1])
+    save_monitor(mon, root, step=2)
+    d = os.path.join(root, "step_2")
+    npys = sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+    os.remove(os.path.join(d, npys[0]))           # newest gen is broken
+    with pytest.raises(CheckpointError):
+        restore_monitor(root)                     # strict: surfaces it
+    clone = restore_monitor(root, fallback=True)  # falls back to step 1
+    _assert_fingerprints_equal(_fingerprint(clone), want)
+    os.remove(os.path.join(root, "step_1", "manifest.json"))
+    with pytest.raises(CheckpointError, match="no readable checkpoint"):
+        restore_monitor(root, fallback=True)
+
+
+def test_save_extras_roundtrip_and_collision(tmp_path):
+    mon = _monitor(3)
+    mon.ingest(*_slabs(3, n_slabs=1, seed=0)[0])
+    root = str(tmp_path / "ck")
+    save_monitor(mon, root, step=5, extras={"slab_seq": 41})
+    clone, meta = restore_monitor(root, with_meta=True)
+    assert meta["slab_seq"] == 41
+    assert clone.epoch == mon.epoch
+    with pytest.raises(ValueError, match="collide"):
+        save_monitor(mon, root, step=6, extras={"epoch": 0})
+
+
+def test_health_monitor_checkpoint_roundtrip(tmp_path):
+    mon = _health_mon()
+    _steady(mon, [0, 1, 2], 0.0, 1.0)
+    _steady(mon, [0], 1.0, 1.3)
+    mon.update_health(1.6)
+    root = str(tmp_path / "ck")
+    save_monitor(mon, root)
+    clone = restore_monitor(root)
+    assert clone.health_policy == mon.health_policy
+    np.testing.assert_array_equal(clone.health.code, mon.health.code)
+    _assert_fingerprints_equal(_fingerprint(clone), _fingerprint(mon))
+    # the restored machine keeps evolving identically
+    clone.update_health(2.6)
+    mon.update_health(2.6)
+    np.testing.assert_array_equal(clone.health.code, mon.health.code)
+
+
+# ---------------------------------------------------------------------------
+# the crash-recovery supervisor
+# ---------------------------------------------------------------------------
+
+def _faulty_source(spec, slabs, n, t0, t1):
+    """A deterministic slab source: rebuilds the injector each call, so
+    every (re)play emits the identical faulted stream."""
+    def source():
+        inj = FaultInjector(spec, n, t0, t1)
+        for seq, (dev, ts, vs) in enumerate(slabs):
+            dev, ts, vs = inj.apply(seq, dev, ts, vs)
+            if dev.size:
+                yield seq, dev, ts, vs
+    return source
+
+
+def _crashing(source, fail_at, n_fails=1):
+    state = {"left": n_fails}
+    def src():
+        for i, slab in enumerate(source()):
+            if state["left"] > 0 and i == fail_at:
+                state["left"] -= 1
+                raise RuntimeError("collector died")
+            yield slab
+    return src
+
+
+def _sup_factory(n, backend):
+    def factory():
+        return _monitor(n, backend, strict_ids=False,
+                        health=HealthPolicy(), health_every_s=0.25,
+                        silent_after_s=1.0)
+    return factory
+
+
+@pytest.mark.parametrize("fail_at", [1, 4, 9])
+def test_supervisor_recovery_is_bitwise(tmp_path, backend, fail_at):
+    """The acceptance pin: kill the run at an arbitrary slab under every
+    fault knob at once; the supervisor restores the newest complete
+    checkpoint, resumes at the slab boundary, and the final monitor
+    answers every query bitwise identically to a never-killed run."""
+    n, n_slabs = 6, 12
+    slabs = _slabs(n, n_slabs=n_slabs, seed=3)
+    source = _faulty_source(ALL_FAULTS, slabs, n, 0.0, 0.5 * n_slabs)
+    ref = _sup_factory(n, backend)()
+    for _, dev, ts, vs in source():
+        ref.ingest(dev, ts, vs)
+    want = _fingerprint(ref)
+
+    sup = MonitorSupervisor(_sup_factory(n, backend),
+                            str(tmp_path / "ck"), checkpoint_every=3)
+    report = sup.run(_crashing(source, fail_at))
+    assert report.n_crashes == 1 and report.n_restores == 1
+    assert report.n_slabs + report.n_skipped >= n_slabs
+    _assert_fingerprints_equal(_fingerprint(sup.monitor), want)
+
+
+def test_supervisor_survives_repeated_crashes(tmp_path):
+    n, n_slabs = 5, 10
+    slabs = _slabs(n, n_slabs=n_slabs, seed=6)
+    source = _faulty_source(ALL_FAULTS, slabs, n, 0.0, 5.0)
+    ref = _sup_factory(n, "numpy")()
+    for _, dev, ts, vs in source():
+        ref.ingest(dev, ts, vs)
+    sup = MonitorSupervisor(_sup_factory(n, "numpy"),
+                            str(tmp_path / "ck"), checkpoint_every=2)
+    report = sup.run(_crashing(source, 6, n_fails=3))
+    assert report.n_crashes == 3 and report.n_restores == 3
+    _assert_fingerprints_equal(_fingerprint(sup.monitor),
+                               _fingerprint(ref))
+
+
+def test_supervisor_resumes_across_instances(tmp_path):
+    """Hard-kill semantics: a brand-new supervisor (fresh process in
+    spirit) picks up the slab cursor from the checkpoint meta and skips
+    everything already folded."""
+    n, n_slabs = 5, 10
+    slabs = _slabs(n, n_slabs=n_slabs, seed=4)
+    source = _faulty_source(ALL_FAULTS, slabs, n, 0.0, 5.0)
+    ref = _sup_factory(n, "numpy")()
+    for _, dev, ts, vs in source():
+        ref.ingest(dev, ts, vs)
+
+    def truncated():
+        for i, slab in enumerate(source()):
+            if i >= 6:
+                return
+            yield slab
+
+    root = str(tmp_path / "ck")
+    first = MonitorSupervisor(_sup_factory(n, "numpy"), root,
+                              checkpoint_every=4)
+    rep1 = first.run(truncated)
+    assert rep1.n_slabs == 6 and rep1.resumed_from is None
+    second = MonitorSupervisor(_sup_factory(n, "numpy"), root,
+                               checkpoint_every=4)
+    rep2 = second.run(source)
+    assert rep2.resumed_from == rep1.last_seq
+    assert rep2.n_skipped == 6
+    _assert_fingerprints_equal(_fingerprint(second.monitor),
+                               _fingerprint(ref))
+
+
+def test_supervisor_exhausts_restores_and_reraises(tmp_path):
+    def always_crash():
+        raise RuntimeError("hopeless")
+        yield  # pragma: no cover
+
+    sup = MonitorSupervisor(lambda: MonitorService(2),
+                            str(tmp_path / "ck"), max_restores=2)
+    with pytest.raises(RuntimeError, match="hopeless"):
+        sup.run(always_crash)
+
+
+def test_supervisor_validation():
+    with pytest.raises(ValueError):
+        MonitorSupervisor(lambda: None, "x", checkpoint_every=0)
+    with pytest.raises(ValueError):
+        MonitorSupervisor(lambda: None, "x", max_restores=-1)
