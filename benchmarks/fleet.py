@@ -63,6 +63,15 @@ monitor is *bitwise* the uninterrupted one).  ``--chaos-only`` reruns
 just this block (merging into an existing ``BENCH_fleet.json``)::
 
     python benchmarks/fleet.py --chaos-only --backend numpy
+
+Live collector (ISSUE 10): the ``collect`` block times the wire-format
+parsers (nvidia-smi csv + daemon per-row csv, rows/sec) on a synthetic
+capture and the full file→monitor replay path
+(:class:`repro.collect.CollectorPipeline`), and records the committed
+fixtures' parse accounting.  ``--collect-only`` reruns just this block
+(merging into an existing ``BENCH_fleet.json``)::
+
+    python benchmarks/fleet.py --collect-only
 """
 from __future__ import annotations
 
@@ -160,6 +169,14 @@ def _parse_args(argv=None) -> argparse.Namespace:
                     help="run only the chaos (fault-injection + "
                          "kill/recover) bench and merge its block into "
                          "an existing BENCH_fleet.json")
+    ap.add_argument("--collect-rows", type=int, default=120_000,
+                    help="synthetic capture size (rows) for the "
+                         "collector parse/replay bench (default 120000; "
+                         "0 disables the block)")
+    ap.add_argument("--collect-only", action="store_true",
+                    help="run only the collector (wire parse + replay) "
+                         "bench and merge its block into an existing "
+                         "BENCH_fleet.json")
     return ap.parse_args(argv)
 
 
@@ -523,6 +540,74 @@ def _chaos_block(args, backends):
     return block
 
 
+def _collect_block(args) -> dict:
+    """The ``collect`` BENCH block: wire-parse throughput per format
+    (rows/sec) on a synthetic capture, the full file→monitor replay
+    path through :class:`repro.collect.CollectorPipeline` (numpy
+    backend — the parse side is pure python, the same on every tier),
+    and the committed fixtures' parse accounting so the bench JSON
+    records what CI smoke-replays."""
+    import tempfile
+
+    from repro.collect import CollectorPipeline
+    from repro.collect import wire as cwire
+
+    n_dev = 16
+    polls = max(args.collect_rows // n_dev, 1)
+    rng = np.random.default_rng(9)
+    uuids = np.asarray([f"GPU-bench-{i:04d}" for i in range(n_dev)],
+                       dtype=object)
+    batch = cwire.SampleBatch(
+        uuid=np.tile(uuids, polls),
+        t=1.7e9 + np.repeat(np.arange(polls) * 0.1, n_dev),
+        power_w=80.0 + 40.0 * rng.random(polls * n_dev),
+        util=rng.uniform(0.0, 100.0, polls * n_dev))
+    block = {"n_rows": len(batch), "n_devices": n_dev}
+    with tempfile.TemporaryDirectory() as d:
+        writers = (("daemon", lambda b: cwire.format_daemon(b, precision=3)),
+                   ("smi", cwire.format_query_gpu))
+        for fmt, writer in writers:
+            path = os.path.join(d, f"log_{fmt}.csv")
+            with open(path, "w") as fh:
+                fh.write(writer(batch))
+            t0 = time.perf_counter()
+            _, c = cwire.parse_log(path, fmt=fmt)
+            wall = time.perf_counter() - t0
+            assert c.samples == len(batch)
+            block[f"{fmt}_parse_rows_per_sec"] = round(c.rows / wall, 1)
+            block[f"{fmt}_wall_s"] = round(wall, 4)
+
+        path = os.path.join(d, "log_daemon.csv")
+        t0 = time.perf_counter()
+        pipe = CollectorPipeline(backend="numpy", now=0.0)
+        counters = cwire.WireCounters()
+        for b in cwire.iter_batches(path, fmt="daemon", counters=counters):
+            pipe.feed(b)
+        mon = pipe.finish()
+        wall = time.perf_counter() - t0
+        block["replay_rows_per_sec"] = round(counters.rows / wall, 1)
+        block["replay_wall_s"] = round(wall, 4)
+        block["replay_accepted"] = int(mon.counters["accepted"])
+
+    data = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "tests", "data")
+    fixtures = {}
+    for name in ("daemon_sample.csv", "smi_sample.csv"):
+        p = os.path.join(data, name)
+        if os.path.exists(p):
+            _, c = cwire.parse_log(p)
+            fixtures[name] = c.as_dict()
+    block["fixtures"] = fixtures
+
+    emit(f"collect/parse_{block['n_rows']}", 0.0,
+         f"daemon_rows_per_sec={block['daemon_parse_rows_per_sec']};"
+         f"smi_rows_per_sec={block['smi_parse_rows_per_sec']}")
+    emit(f"collect/replay_{block['n_rows']}", 0.0,
+         f"replay_rows_per_sec={block['replay_rows_per_sec']};"
+         f"accepted={block['replay_accepted']}")
+    return block
+
+
 def _audit_stats(n, names, ws, backend):
     """One timed heterogeneous naive audit; returns (wall_s, result)."""
     t0 = time.perf_counter()
@@ -548,6 +633,19 @@ def run(argv=None) -> None:
             with open(JSON_PATH) as fh:
                 payload = json.load(fh)
         payload["serving"] = serving
+        with open(JSON_PATH, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        emit("fleet_audit/bench_json", 0.0, f"path={JSON_PATH}")
+        return
+
+    if args.collect_only:
+        collect = _collect_block(args)
+        payload = {}
+        if os.path.exists(JSON_PATH):
+            with open(JSON_PATH) as fh:
+                payload = json.load(fh)
+        payload["collect"] = collect
         with open(JSON_PATH, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
             fh.write("\n")
@@ -909,6 +1007,8 @@ def run(argv=None) -> None:
         payload["sharded"] = shard_block
     if args.chaos_devices > 0:
         payload["chaos"] = _chaos_block(args, backends)
+    if args.collect_rows > 0:
+        payload["collect"] = _collect_block(args)
     with open(JSON_PATH, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
         fh.write("\n")

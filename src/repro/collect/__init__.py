@@ -1,0 +1,39 @@
+"""Live collector subsystem: real telemetry → the streaming monitor.
+
+The bridge from what fleets actually record — ``nvidia-smi --query-gpu``
+CSV captures and daemon-style per-row logs — into the repo's streaming
+monitor stack.  Layers, importable à la carte:
+
+* :mod:`repro.collect.wire` — wire-format parsers/writers with
+  drop-and-count accounting (:class:`WireCounters`) and the columnar
+  :class:`SampleBatch` interchange type.
+* :mod:`repro.collect.registry` — :class:`DeviceRegistry`, the
+  gpu_uuid → dense-device-id mapping with hot-add / frozen-fleet
+  policies.
+* :mod:`repro.collect.sampler` — the NVML-style :class:`Sampler`
+  protocol: :class:`SimulatedSampler` over a ``SensorBank`` and the
+  lazily-imported :class:`NvmlSampler` for real hosts.
+* :mod:`repro.collect.assembler` — :class:`SlabAssembler` (fixed-size
+  ingest slabs) and :class:`CollectorPipeline` (registry + calibration
+  store + lazy monitor + hot-growth, end to end).
+* :mod:`repro.collect.cli` — ``python -m repro.collect replay`` /
+  ``calibrate ...``.
+
+See ``docs/collect.md``.
+"""
+from repro.collect.assembler import CollectorPipeline, SlabAssembler
+from repro.collect.registry import DeviceRegistry, UnknownDeviceError
+from repro.collect.sampler import NvmlSampler, Sampler, SimulatedSampler
+from repro.collect.wire import (SampleBatch, WireCounters, format_daemon,
+                                format_query_gpu, iter_batches, parse_daemon,
+                                parse_log, parse_query_gpu, sniff_format)
+
+__all__ = [
+    "CollectorPipeline", "SlabAssembler",
+    "DeviceRegistry", "UnknownDeviceError",
+    "NvmlSampler", "Sampler", "SimulatedSampler",
+    "SampleBatch", "WireCounters",
+    "format_daemon", "format_query_gpu",
+    "iter_batches", "parse_daemon", "parse_log", "parse_query_gpu",
+    "sniff_format",
+]

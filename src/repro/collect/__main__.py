@@ -1,0 +1,7 @@
+"""``python -m repro.collect`` entry point (see :mod:`repro.collect.cli`)."""
+import sys
+
+from repro.collect.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

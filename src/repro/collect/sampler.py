@@ -1,0 +1,138 @@
+"""Live samplers: the NVML-style polling interface behind the collector.
+
+A :class:`Sampler` is anything that answers "one poll of every visible
+device, now" as a :class:`~repro.collect.wire.SampleBatch` — the
+protocol an on-host polling daemon implements against NVML.  Two
+implementations ship:
+
+* :class:`SimulatedSampler` — backed by a
+  :class:`~repro.core.fleet_engine.SensorBank`, so the entire collector
+  path (sampler → registry → assembler → monitor) is exercised without
+  hardware, and its output is pinned bitwise against the simulation-fed
+  :func:`repro.core.stream.replay.replay` driver in
+  ``tests/test_collect.py``.
+* :class:`NvmlSampler` — the real thing over ``pynvml``, imported
+  lazily so the module stays importable (and the simulated path fully
+  testable) on hosts without the NVIDIA stack.  CI never touches it;
+  on a GPU host it is the drop-in producer for the same pipeline.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.collect.wire import SampleBatch
+
+
+class Sampler(Protocol):
+    """One poll of every visible device (NVML-style)."""
+
+    def sample(self) -> SampleBatch:
+        """Read every device once; timestamps are the sampler's clock."""
+        ...
+
+
+class SimulatedSampler:
+    """Poll a :class:`~repro.core.fleet_engine.SensorBank` like a daemon.
+
+    Each :meth:`sample` reads all N sensors at the current clock and
+    advances it by ``period_s`` — exactly the uniform grid
+    ``SensorBank.iter_poll_slabs`` emits, so a collector built on this
+    sampler reproduces the simulation-fed replay bit for bit.  Synthetic
+    uuids are ``{prefix}{seed:08x}`` (derived from each device's rng
+    seed: stable across runs, unique within a bank).
+    """
+
+    def __init__(self, bank, t0: float = 0.0, period_s: float = 0.001,
+                 uuid_prefix: str = "GPU-SIM-",
+                 uuids: Optional[Sequence[str]] = None):
+        if period_s <= 0.0:
+            raise ValueError(f"period_s must be > 0, got {period_s}")
+        self.bank = bank
+        self.t0 = float(t0)
+        self.period_s = float(period_s)
+        n = bank.n_devices
+        if uuids is None:
+            self.uuids = np.asarray(
+                [f"{uuid_prefix}{int(s) & 0xFFFFFFFF:08x}"
+                 for s in bank.seeds], dtype=object)
+        else:
+            self.uuids = np.asarray(list(uuids), dtype=object)
+        if self.uuids.shape != (n,):
+            raise ValueError(f"need {n} uuids, got {self.uuids.shape}")
+        if len(set(self.uuids)) != n:
+            raise ValueError("sampler uuids must be unique")
+        self._k = 0          # polls taken so far
+
+    @property
+    def t_next(self) -> float:
+        """The clock instant the next :meth:`sample` will read at."""
+        return self.t0 + self.period_s * self._k
+
+    def sample(self) -> SampleBatch:
+        t = self.t_next
+        vals = np.asarray(self.bank.query(t), dtype=np.float64)
+        self._k += 1
+        n = self.bank.n_devices
+        return SampleBatch(uuid=self.uuids.copy(),
+                           t=np.full(n, t),
+                           power_w=vals,
+                           util=np.full(n, np.nan))
+
+    def run(self, n_polls: int) -> Iterator[SampleBatch]:
+        """Take ``n_polls`` consecutive samples."""
+        for _ in range(int(n_polls)):
+            yield self.sample()
+
+
+class NvmlSampler:
+    """Poll real GPUs through NVML (``pynvml``), lazily imported.
+
+    Construction raises a clear RuntimeError when the NVIDIA stack is
+    absent — no import-time dependency, so everything else in
+    :mod:`repro.collect` works on a CPU-only host.
+    """
+
+    def __init__(self):
+        try:
+            import pynvml
+        except ImportError as e:
+            raise RuntimeError(
+                "NvmlSampler needs the 'pynvml' package and an NVIDIA "
+                "driver; on hosts without them use SimulatedSampler or "
+                "replay a recorded log") from e
+        self._nvml = pynvml
+        pynvml.nvmlInit()
+        n = pynvml.nvmlDeviceGetCount()
+        self._handles = [pynvml.nvmlDeviceGetHandleByIndex(i)
+                         for i in range(n)]
+        self.uuids = np.asarray(
+            [_as_str(pynvml.nvmlDeviceGetUUID(h)) for h in self._handles],
+            dtype=object)
+
+    def sample(self) -> SampleBatch:
+        import time
+        nvml = self._nvml
+        t = time.time()
+        n = len(self._handles)
+        power = np.full(n, np.nan)
+        util = np.full(n, np.nan)
+        for i, h in enumerate(self._handles):
+            try:
+                power[i] = nvml.nvmlDeviceGetPowerUsage(h) * 1e-3  # mW → W
+            except nvml.NVMLError:
+                pass                      # [N/A] — stays NaN, counted
+            try:                          # downstream by the monitor
+                util[i] = nvml.nvmlDeviceGetUtilizationRates(h).gpu
+            except nvml.NVMLError:
+                pass
+        return SampleBatch(uuid=self.uuids.copy(), t=np.full(n, t),
+                           power_w=power, util=util)
+
+    def close(self) -> None:
+        self._nvml.nvmlShutdown()
+
+
+def _as_str(x) -> str:
+    return x.decode() if isinstance(x, bytes) else str(x)

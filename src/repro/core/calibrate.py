@@ -31,6 +31,12 @@ class CalibrationRecord:
     r2: Optional[float] = None
     sampled_fraction: float = 1.0
     created_at: float = 0.0
+    # -- provenance metadata (all optional: records persisted before
+    # these fields existed load with the defaults, via from_json's
+    # schema-drift filter) ------------------------------------------------
+    fitted_at: Optional[float] = None  # when the characterisation ran
+    source: str = ""                   # protocol/tool that fitted it
+    note: str = ""                     # free-form operator annotation
 
     @property
     def correction_gain(self) -> float:
@@ -115,6 +121,8 @@ def record_from_characterisation(device_id: str, profile_name: str,
         r2=result.r2,
         sampled_fraction=result.sampled_fraction,
         created_at=time.time(),
+        fitted_at=time.time(),
+        source="microbench.characterise",
     )
 
 

@@ -166,6 +166,95 @@ class IngestCore:
                 + self.periods.nbytes()
                 + (self.health.nbytes() if self.health is not None else 0))
 
+    def grow(self, n_new: int, *,
+             corrections: Optional[StreamCorrections] = None,
+             labels: Optional[np.ndarray] = None) -> None:
+        """Widen the monitor to ``n_new`` devices mid-stream.
+
+        The live-collector contract (:mod:`repro.collect`): a gpu_uuid
+        the registry has never seen hot-adds a device, and the monitor
+        must grow to match **without perturbing anything already
+        accumulated** — after growth, every state array equals what a
+        monitor built at the full width from the start would hold, with
+        the appended rows in their pristine zero state (pinned bitwise
+        in ``tests/test_collect.py``).  ``corrections``/``labels``
+        cover the appended tail (``n_new - n_devices`` rows; identity
+        corrections and the ``"all"`` label by default); tail windows
+        start disabled, tail ``max_hold``/envelope unlimited — exactly
+        a fresh monitor's defaults.  Bumps the epoch, so held snapshots
+        stay valid and the next query publishes at the new width.
+        """
+        from repro.core.stream import schema
+        n_old = self.n_devices
+        n_new = int(n_new)
+        if n_new < n_old:
+            raise ValueError(f"cannot shrink a monitor: {n_old} -> {n_new}")
+        if n_new == n_old:
+            return
+        n_add = n_new - n_old
+        tail_corr = (corrections if corrections is not None
+                     else StreamCorrections.identity(n_add))
+        if tail_corr.n_devices != n_add:
+            raise ValueError(f"tail corrections cover "
+                             f"{tail_corr.n_devices} devices, growing "
+                             f"by {n_add}")
+        self.corrections = StreamCorrections(**{
+            f.name: np.concatenate([getattr(self.corrections, f.name),
+                                    getattr(tail_corr, f.name)])
+            for f in dataclasses.fields(StreamCorrections)})
+        if labels is None:
+            tail_labels = np.full(n_add, "all", dtype=object)
+        else:
+            tail_labels = np.asarray(labels, dtype=object)
+            if tail_labels.shape != (n_add,):
+                raise ValueError(f"tail labels must be [{n_add}], "
+                                 f"got {tail_labels.shape}")
+        self.labels = np.concatenate([self.labels, tail_labels])
+        names, codes = np.unique(self.labels.astype(str),
+                                 return_inverse=True)
+        self._label_names = [str(x) for x in names]
+        self._label_codes = codes.astype(np.int64)
+
+        # per-device state: fieldwise concat with the pristine zero rows,
+        # walked through the schema registries so a state field added
+        # without growth support fails loudly here
+        pad = DeviceState.zeros(n_add)
+        old = schema.check_registry(self.state, schema.DEVICE_STATE_FIELDS,
+                                    "DeviceState")
+        self.state = DeviceState(**{
+            k: np.concatenate([v, getattr(pad, k)])
+            for k, v in old.items()})
+        ring_pad = IngestBuffer(n_add, self.ring.slots)
+        for k in schema.check_registry(
+                self.ring, schema.RING_FIELDS, "IngestBuffer",
+                optional=schema.RING_SLOT_FIELDS):
+            setattr(self.ring, k, np.concatenate(
+                [getattr(self.ring, k), getattr(ring_pad, k)]))
+        self.periods.counts = np.concatenate(
+            [self.periods.counts,
+             np.zeros((n_add, self.periods.n_bins), dtype=np.int64)])
+        self.periods.sums = np.concatenate(
+            [self.periods.sums, np.zeros((n_add, self.periods.n_bins))])
+        if self.health is not None:
+            hp = HealthTracker.zeros(n_add)
+            for k in schema.check_registry(self.health,
+                                           schema.HEALTH_FIELDS,
+                                           "HealthTracker"):
+                setattr(self.health, k, np.concatenate(
+                    [getattr(self.health, k), getattr(hp, k)]))
+
+        # config vectors: tail rows take a fresh monitor's defaults
+        self._max_hold = np.concatenate([self._max_hold,
+                                         np.full(n_add, np.inf)])
+        self._env_lo = np.concatenate([self._env_lo,
+                                       np.full(n_add, -np.inf)])
+        self._env_hi = np.concatenate([self._env_hi,
+                                       np.full(n_add, np.inf)])
+        self._win_a = np.concatenate([self._win_a, np.full(n_add, np.inf)])
+        self._win_b = np.concatenate([self._win_b, np.full(n_add, -np.inf)])
+        self.n_devices = n_new
+        self.epoch += 1
+
     # -- ingestion --------------------------------------------------------
     def ingest(self, dev, t, v) -> IngestReport:
         """Fold one slab of raw poll samples into the online state.

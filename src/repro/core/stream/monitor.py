@@ -167,6 +167,11 @@ class MonitorService:
 
     nbytes.__doc__ = IngestCore.nbytes.__doc__
 
+    def grow(self, n_new: int, *, corrections=None, labels=None) -> None:
+        self._core.grow(n_new, corrections=corrections, labels=labels)
+
+    grow.__doc__ = IngestCore.grow.__doc__
+
     # -- ingestion ---------------------------------------------------------
     def ingest(self, dev, t, v) -> IngestReport:
         return self._core.ingest(dev, t, v)

@@ -132,6 +132,14 @@ class MonitorQueryService:
         ticket = self.submit(query)
         return self.flush()[ticket]
 
+    def query_many(self, queries: List[MonitorQuery]) -> List[Any]:
+        """Submit a batch and flush once; results in input order.  The
+        one-call shape the collector CLI uses for its replay summary —
+        every distinct instant still collapses into one kernel call."""
+        tickets = [self.submit(q) for q in queries]
+        results = self.flush()
+        return [results[t] for t in tickets]
+
     # -- execution ---------------------------------------------------------
     def flush(self) -> Dict[int, Any]:
         """Execute every pending query against the monitor's *current*

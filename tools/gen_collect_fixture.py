@@ -1,0 +1,117 @@
+"""Regenerate the committed collector fixtures in ``tests/data/``.
+
+Two recorded sample logs, deterministic (seeded, fixed epoch base — no
+wall clock anywhere), exercising every parser path the collect tests
+pin:
+
+* ``daemon_sample.csv`` — daemon-style per-row CSV
+  (``gpu_uuid,timestamp,power.draw,utilization``): 4 devices at 100 ms
+  with a 5th joining two thirds in (the hot-add case), duplicate rows,
+  out-of-order timestamps, malformed lines, blank lines, a repeated
+  header from a "restarted" collector.
+* ``smi_sample.csv`` — ``nvidia-smi --query-gpu`` CSV: bracketed-unit
+  header, date timestamps, ``[N/A]`` / ``[Unknown Error]`` / ``ERR!``
+  cells, a mid-stream ``mW`` unit variant, a repeated ``nounits``
+  header section.
+
+The expected parse accounting for both files is pinned in
+``tests/test_collect.py`` (``FIXTURE_EXPECT``); regenerate with::
+
+    PYTHONPATH=src python tools/gen_collect_fixture.py
+
+and update those pins if you change anything here.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DATA = os.path.join(os.path.dirname(__file__), "..", "tests", "data")
+
+EPOCH0 = 1700000000.0          # fixed base instant (no wall clock)
+PERIOD = 0.1
+UUIDS = [f"GPU-f1xt-{i:04d}" for i in range(5)]   # [4] joins late
+
+
+def _power(rng: np.random.Generator, i: int, k: int) -> float:
+    # a two-level square wave + noise: busy 280 W / idle 90 W phases
+    busy = (k // 40 + i) % 2 == 0
+    base = 280.0 if busy else 90.0
+    return round(base + rng.normal(0.0, 2.0), 3)
+
+
+def gen_daemon(path: str) -> None:
+    rng = np.random.default_rng(1234)
+    lines = ["gpu_uuid,timestamp,power.draw,utilization"]
+    n_polls = 300
+    for k in range(n_polls):
+        t = EPOCH0 + PERIOD * k
+        fleet = UUIDS[:4] if k < 200 else UUIDS          # hot-add at k=200
+        for i, u in enumerate(fleet):
+            lines.append(f"{u},{t!r},{_power(rng, i, k)},"
+                         f"{int(rng.integers(0, 101))}")
+        if k == 97:              # duplicate row (exact repeat)
+            lines.append(lines[-1])
+        if k == 120:             # out-of-order: re-send an old poll
+            told = EPOCH0 + PERIOD * 60
+            lines.append(f"{UUIDS[0]},{told!r},{_power(rng, 0, 60)},50")
+        if k == 150:             # collector restart: header repeats
+            lines.append("")
+            lines.append("gpu_uuid,timestamp,power.draw,utilization")
+        if k == 180:             # malformed rows
+            lines.append(f"{UUIDS[1]},not-a-time,123.0,50")
+            lines.append(f"{UUIDS[2]},{EPOCH0 + PERIOD * k!r}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def gen_smi(path: str) -> None:
+    rng = np.random.default_rng(5678)
+    hdr = "uuid, timestamp, power.draw [W], utilization.gpu [%]"
+    lines = [hdr]
+    n_polls = 240
+    for k in range(n_polls):
+        t = EPOCH0 + PERIOD * k
+        from datetime import datetime, timezone
+        dt = datetime.fromtimestamp(t, tz=timezone.utc)
+        stamp = dt.strftime("%Y/%m/%d %H:%M:%S") + \
+            f".{dt.microsecond // 1000:03d}"
+        for i, u in enumerate(UUIDS[:4]):
+            p = _power(rng, i, k)
+            if k == 50 and i == 2:
+                cell = "[N/A]"                       # driver hiccup
+            elif k == 51 and i == 2:
+                cell = "[Unknown Error]"
+            elif k == 52 and i == 2:
+                cell = "ERR!"
+            elif k == 90 and i == 1:
+                cell = f"{p * 1000:.0f} mW"          # unit variant
+            else:
+                cell = f"{p:.2f} W"
+            u_cell = "[N/A]" if (k == 60 and i == 0) \
+                else f"{int(rng.integers(0, 101))} %"
+            lines.append(f"{u}, {stamp}, {cell}, {u_cell}")
+        if k == 160:             # restarted capture under csv,nounits
+            lines.append("uuid, timestamp, power.draw, utilization.gpu")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    os.makedirs(DATA, exist_ok=True)
+    gen_daemon(os.path.join(DATA, "daemon_sample.csv"))
+    gen_smi(os.path.join(DATA, "smi_sample.csv"))
+    from repro.collect import wire
+    for name in ("daemon_sample.csv", "smi_sample.csv"):
+        path = os.path.join(DATA, name)
+        batch, c = wire.parse_log(path)
+        print(f"{name}: {os.path.getsize(path)} bytes, "
+              f"{len(batch)} samples, {c.as_dict()}")
+
+
+if __name__ == "__main__":
+    main()
